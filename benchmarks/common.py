@@ -1,0 +1,112 @@
+"""Shared benchmark plumbing: build + run one FL experiment."""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FLConfig, FLExperiment
+from repro.core.federated import make_accuracy_eval, FLHistory
+from repro.data import (make_classification_dataset, partition_iid,
+                        partition_noniid_shards)
+from repro.models.paper_models import get_paper_model
+
+# defaults sized for the EXPERIMENTS.md evidence run (~25 min total on
+# one CPU core); override via env for quick CI passes
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "150"))
+N_TRAIN = int(os.environ.get("BENCH_NTRAIN", "3000"))
+N_TEST = int(os.environ.get("BENCH_NTEST", "600"))
+# difficulty tuned so the paper MLP plateaus below 100% and selection
+# strategies stay distinguishable over a few hundred rounds
+NOISE = float(os.environ.get("BENCH_NOISE", "0.5"))
+CLASS_SEP = float(os.environ.get("BENCH_SEP", "0.6"))
+
+
+@dataclass
+class BenchResult:
+    name: str
+    wall_s: float
+    rounds: int
+    final_acc: float
+    best_acc: float
+    auc: float       # mean accuracy over the eval trajectory =
+    #                  convergence speed (the paper's actual claim)
+    history: FLHistory
+
+
+_CACHE = {}
+
+
+def _setup(model: str, dataset: str, iid: bool, seed: int):
+    key = (model, dataset, iid, seed)
+    if key in _CACHE:
+        return _CACHE[key]
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        dataset, n_train=N_TRAIN, n_test=N_TEST, seed=seed,
+        noise=NOISE, class_sep=CLASS_SEP)
+    init_fn, apply_fn = get_paper_model(model, dataset)
+    if model == "mlp":
+        xtr = xtr.reshape(len(xtr), -1)
+        xte = xte.reshape(len(xte), -1)
+    part = partition_iid if iid else partition_noniid_shards
+    users = part(xtr, ytr, 10, seed=seed)
+    user_data = [{"x": x, "y": y} for x, y in users]
+
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        oh = jax.nn.one_hot(batch["y"], 10)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    eval_fn = make_accuracy_eval(apply_fn, xte, yte)
+    params = init_fn(jax.random.PRNGKey(seed))
+    out = (params, loss_fn, user_data, eval_fn)
+    _CACHE[key] = out
+    return out
+
+
+def run_strategy(name: str, *, model="mlp", dataset="fashion", iid=False,
+                 strategy="priority-distributed", use_counter=True,
+                 threshold=0.16, cw_base=2048.0, rounds: Optional[int] = None,
+                 seed=0, eval_every=2) -> BenchResult:
+    rounds = rounds or ROUNDS
+    params, loss_fn, user_data, eval_fn = _setup(model, dataset, iid, seed)
+    cfg = FLConfig(rounds=rounds, strategy=strategy, use_counter=use_counter,
+                   counter_threshold=threshold, cw_base=cw_base, seed=seed,
+                   eval_every=eval_every)
+    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+    t0 = time.time()
+    hist = exp.run()
+    wall = time.time() - t0
+    import numpy as np
+    return BenchResult(name=name, wall_s=wall, rounds=rounds,
+                       final_acc=hist.accuracy[-1],
+                       best_acc=max(hist.accuracy),
+                       auc=float(np.mean(hist.accuracy)), history=hist)
+
+
+def csv_line(name: str, wall_s: float, rounds: int, derived: str) -> str:
+    us_per_round = wall_s / max(rounds, 1) * 1e6
+    return f"{name},{us_per_round:.0f},{derived}"
+
+
+SEEDS = int(os.environ.get("BENCH_SEEDS", "2"))
+
+
+def run_seeds(name, **kw):
+    """Run one configuration over BENCH_SEEDS seeds; returns list."""
+    return [run_strategy(f"{name}/s{s}", seed=s, **kw)
+            for s in range(SEEDS)]
+
+
+def mean_auc(results):
+    import numpy as np
+    return float(np.mean([r.auc for r in results]))
+
+
+def mean_best(results):
+    import numpy as np
+    return float(np.mean([r.best_acc for r in results]))

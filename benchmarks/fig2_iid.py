@@ -1,0 +1,28 @@
+"""Paper Fig. 2: four selection strategies on the IID split — all should
+be comparable (claim C1). Averaged over BENCH_SEEDS seeds."""
+from __future__ import annotations
+
+from repro.core.selection import STRATEGIES
+from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
+
+
+def run(model="mlp", dataset="fashion"):
+    lines, auc = [], {}
+    for strat in STRATEGIES:
+        rs = run_seeds(f"fig2/iid/{dataset}/{model}/{strat}",
+                       model=model, dataset=dataset, iid=True,
+                       strategy=strat)
+        auc[strat] = mean_auc(rs)
+        lines.append(csv_line(
+            rs[0].name.rsplit("/s", 1)[0],
+            sum(r.wall_s for r in rs), rs[0].rounds * len(rs),
+            f"best_acc={mean_best(rs):.4f};auc={auc[strat]:.4f};"
+            f"seeds={len(rs)}"))
+    spread = max(auc.values()) - min(auc.values())
+    lines.append(f"fig2/iid/{dataset}/{model}/spread,0,"
+                 f"claimC1_auc_spread={spread:.4f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,34 @@
+"""Paper Fig. 5: accuracy with vs without the counter (and vs random) in
+the centralized scenario — counter should win (claim C3b). Averaged over
+BENCH_SEEDS seeds."""
+from __future__ import annotations
+
+from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
+
+
+def run(model="mlp", dataset="fashion"):
+    lines, auc = [], {}
+    cases = [
+        ("priority+counter", "priority-centralized", True),
+        ("priority-no-counter", "priority-centralized", False),
+        ("random", "random-centralized", True),
+    ]
+    for tag, strat, use_counter in cases:
+        rs = run_seeds(f"fig5/counter_acc/{tag}",
+                       model=model, dataset=dataset, iid=False,
+                       strategy=strat, use_counter=use_counter)
+        auc[tag] = mean_auc(rs)
+        lines.append(csv_line(
+            rs[0].name.rsplit("/s", 1)[0],
+            sum(r.wall_s for r in rs), rs[0].rounds * len(rs),
+            f"best_acc={mean_best(rs):.4f};auc={auc[tag]:.4f};"
+            f"seeds={len(rs)}"))
+    lines.append(
+        "fig5/counter_acc/derived,0,"
+        f"claimC3b_counter_gain={auc['priority+counter'] - auc['priority-no-counter']:.4f};"
+        f"vs_random={auc['priority+counter'] - auc['random']:.4f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,27 @@
+"""Paper Fig. 6: effect of the CW base N (512..2048) on the paper\'s
+method — larger N separates backoff times better (claim C4). Averaged
+over BENCH_SEEDS seeds."""
+from __future__ import annotations
+
+from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
+
+
+def run(model="mlp", dataset="fashion"):
+    lines, auc = [], {}
+    for n in (512, 1024, 2048):
+        rs = run_seeds(f"fig6/cw/{n}",
+                       model=model, dataset=dataset, iid=False,
+                       strategy="priority-distributed", cw_base=float(n))
+        auc[n] = mean_auc(rs)
+        lines.append(csv_line(
+            rs[0].name.rsplit("/s", 1)[0],
+            sum(r.wall_s for r in rs), rs[0].rounds * len(rs),
+            f"best_acc={mean_best(rs):.4f};auc={auc[n]:.4f};"
+            f"seeds={len(rs)}"))
+    lines.append(f"fig6/cw/derived,0,"
+                 f"claimC4_n2048_minus_n512={auc[2048] - auc[512]:.4f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,43 @@
+"""Kernel micro-bench: jnp-oracle wall time per call for the technique's
+hot-path ops at paper-model scale (CPU; the Pallas kernels target TPU and
+are validated in interpret mode by tests/test_kernels.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(f, *args, iters=20):
+    f(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run():
+    lines = []
+    key = jax.random.PRNGKey(0)
+    for n, tag in [(784 * 200, "mlp-fc1"), (5 * 5 * 128 * 256, "cnn-conv2"),
+                   (8 * 1024 * 1024, "8M")]:
+        wl = jax.random.normal(key, (n,))
+        wg = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        us = _time(jax.jit(ref.delta_norm_ref), wl, wg)
+        lines.append(f"kernel/delta_norm/{tag},{us:.0f},n={n}")
+        st = jnp.stack([wl, wg])
+        al = jnp.array([0.5, 0.5])
+        us = _time(jax.jit(ref.fedavg_combine_ref), st, al)
+        lines.append(f"kernel/fedavg_k2/{tag},{us:.0f},n={n}")
+        us = _time(jax.jit(lambda p, g: ref.fused_sgd_ref(p, g, 1e-2)),
+                   wl, wg)
+        lines.append(f"kernel/fused_sgd/{tag},{us:.0f},n={n}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

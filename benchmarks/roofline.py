@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifact (benchmarks/results/dryrun.json).
+
+Prints per (arch, shape, mesh): the three roofline terms, dominant
+bottleneck, and MODEL_FLOPS / HLO_FLOPs (useful-compute ratio).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def load(path=RESULTS):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results=None, mesh="single"):
+    results = results if results is not None else load()
+    rows = []
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"{r['arch']},{r['shape']},{mesh},skipped,,,,,")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"{r['arch']},{r['shape']},{mesh},"
+                        f"{r.get('status')},,,,,")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"{r['arch']},{r['shape']},{mesh},ok,"
+            f"{t['compute_s']:.4f},{t['memory_s']:.4f},"
+            f"{t['collective_s']:.4f},{t['dominant'].replace('_s','')},"
+            f"{r['useful_flops_ratio']:.3f}")
+    return rows
+
+
+def run():
+    header = ("arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+              "dominant,useful_flops_ratio")
+    return [header] + table()
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,49 @@
+"""Benchmark harness entry: one module per paper figure + roofline +
+kernel micro-bench. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig3 fig4  # subset
+  BENCH_ROUNDS=100 ... python -m benchmarks.run      # longer runs
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig2_iid, fig3_noniid, fig4_fairness,
+                        fig5_counter_acc, fig6_cw_size, roofline,
+                        kernel_bench)
+
+SUITES = {
+    "fig2": fig2_iid.run,
+    "fig3": fig3_noniid.run,
+    "fig4": fig4_fairness.run,
+    "fig5": fig5_counter_acc.run,
+    "fig6": fig6_cw_size.run,
+    "kernels": kernel_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    picks = [a for a in sys.argv[1:] if not a.startswith("-")] or list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in picks:
+        t0 = time.time()
+        try:
+            for line in SUITES[name]():
+                print(line, flush=True)
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name}/ERROR,0,{type(e).__name__}", flush=True)
+        print(f"{name}/suite_wall,{(time.time() - t0) * 1e6:.0f},done",
+              flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver (deliverable b): the paper's full non-IID comparison
+— all four selection strategies, counter ablation, a few hundred rounds —
+writing per-round curves to examples/out/.
+
+  PYTHONPATH=src python examples/fl_noniid_fashion.py --rounds 200
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FLConfig, FLExperiment
+from repro.core.federated import make_accuracy_eval
+from repro.core.selection import STRATEGIES
+from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.models.paper_models import get_paper_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
+    ap.add_argument("--dataset", default="fashion",
+                    choices=["fashion", "cifar"])
+    ap.add_argument("--n-train", type=int, default=6000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        args.dataset, n_train=args.n_train, n_test=1000, seed=args.seed)
+    init_fn, apply_fn = get_paper_model(args.model, args.dataset)
+    if args.model == "mlp":
+        xtr, xte = xtr.reshape(len(xtr), -1), xte.reshape(len(xte), -1)
+    users = partition_noniid_shards(xtr, ytr, 10, seed=args.seed)
+    user_data = [{"x": x, "y": y} for x, y in users]
+
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        onehot = jax.nn.one_hot(batch["y"], 10)
+        return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
+
+    eval_fn = make_accuracy_eval(apply_fn, xte, yte)
+    params = init_fn(jax.random.PRNGKey(args.seed))
+
+    outdir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(outdir, exist_ok=True)
+    results = {}
+    runs = [(s, True) for s in STRATEGIES]
+    runs.append(("priority-centralized", False))  # counter ablation
+    for strategy, use_counter in runs:
+        tag = strategy + ("" if use_counter else "/no-counter")
+        cfg = FLConfig(rounds=args.rounds, strategy=strategy,
+                       use_counter=use_counter, eval_every=2,
+                       seed=args.seed)
+        hist = FLExperiment(params, loss_fn, user_data, eval_fn, cfg).run()
+        results[tag] = {
+            "round": hist.eval_round, "acc": hist.accuracy,
+            "selections": hist.selections.tolist(),
+            "best": max(hist.accuracy),
+        }
+        print(f"{tag:45s} best_acc={max(hist.accuracy):.4f} "
+              f"selections={hist.selections.tolist()}")
+
+    path = os.path.join(
+        outdir, f"noniid_{args.dataset}_{args.model}.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Federated finetuning of an assigned LLM architecture (reduced config)
+with the paper's distributed user selection.
+
+8 users hold topic-skewed token streams (the LLM analogue of the paper's
+label-skew); each round they finetune locally, compute Eq. 2 priority
+over the transformer's parameters, and contend for the uplink via CSMA.
+
+  PYTHONPATH=src python examples/llm_federated_finetune.py \
+      --arch hymba-1.5b --rounds 12
+"""
+import argparse
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import FLConfig, FLExperiment
+from repro.data import make_token_stream
+from repro.models.model import init_params, compute_loss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b", choices=ARCH_IDS)
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--users", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--seqs-per-user", type=int, default=24)
+    ap.add_argument("--strategy", default="priority-distributed")
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"arch={args.arch} (reduced: {cfg.num_layers}L "
+          f"d={cfg.d_model} V={cfg.vocab_size})")
+
+    user_seqs = make_token_stream(
+        args.users, args.seq, args.seqs_per_user, cfg.vocab_size,
+        noniid=True, seed=args.seed)
+    user_data = [{"tokens": s} for s in user_seqs]
+    test_tokens = jnp.asarray(np.concatenate(make_token_stream(
+        2, args.seq, 6, cfg.vocab_size, noniid=False, seed=args.seed + 9)))
+
+    loss_fn = functools.partial(compute_loss, cfg=cfg)
+    eval_jit = jax.jit(lambda p: compute_loss(p, {"tokens": test_tokens},
+                                              cfg))
+
+    def eval_fn(params):
+        return -float(eval_jit(params))   # negated loss: higher = better
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    flcfg = FLConfig(num_users=args.users, k_per_round=2,
+                     rounds=args.rounds, lr=args.lr, batch_size=8,
+                     strategy=args.strategy, seed=args.seed, eval_every=2)
+    exp = FLExperiment(params, loss_fn, user_data, eval_fn, flcfg)
+    hist = exp.run()
+    for r, m in zip(hist.eval_round, hist.accuracy):
+        print(f"  round {r:3d}  eval_loss {-m:.4f}")
+    print("selections:", hist.selections.tolist())
+    if hist.priorities:
+        print("round-0 priorities:",
+              [round(p, 3) for p in hist.priorities[0]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's experiment in ~40 lines.
+
+10 users with non-IID (2-classes-each) Fashion-MNIST-like data train an
+MLP federated; the users compete for the uplink with CSMA, their
+contention windows scaled by Eq. 2 model-distance priority (Eq. 3), with
+the fairness counter active. Compare against plain random selection.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FLConfig, FLExperiment
+from repro.core.federated import make_accuracy_eval
+from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.models.paper_models import get_paper_model
+
+
+def main():
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        "fashion", n_train=3000, n_test=600)
+    xtr, xte = xtr.reshape(len(xtr), -1), xte.reshape(len(xte), -1)
+    init_fn, apply_fn = get_paper_model("mlp", "fashion")
+    users = partition_noniid_shards(xtr, ytr, num_users=10)
+    user_data = [{"x": x, "y": y} for x, y in users]
+
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        onehot = jax.nn.one_hot(batch["y"], 10)
+        return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
+
+    eval_fn = make_accuracy_eval(apply_fn, xte, yte)
+    params = init_fn(jax.random.PRNGKey(0))
+
+    for strategy in ("random-distributed", "priority-distributed"):
+        cfg = FLConfig(rounds=40, strategy=strategy, eval_every=4)
+        hist = FLExperiment(params, loss_fn, user_data, eval_fn, cfg).run()
+        print(f"\n== {strategy} ==")
+        for r, a in zip(hist.eval_round, hist.accuracy):
+            print(f"  round {r:3d}  acc {a:.3f}")
+        print(f"  selections per user: {hist.selections.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + greedy decode with ring-buffer KV
+caches on a reduced assigned arch (the CPU twin of decode_32k).
+
+  PYTHONPATH=src python examples/serve_decode.py --arch gemma2-27b
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

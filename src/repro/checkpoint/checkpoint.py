@@ -1,0 +1,54 @@
+"""Pytree checkpointing to .npz (host-gather aware).
+
+Leaves are flattened with '/'-joined key paths; sharded arrays are
+device-gathered before save (fine for the CPU-scale FL sims; a real
+multi-host deployment would write per-shard files — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(path: str, params, extra: Dict[str, Any] | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    if extra:
+        for k, v in extra.items():
+            flat[f"__extra__/{k}"] = np.asarray(v)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, params_template):
+    """Restores into the template's tree structure (and dtypes)."""
+    z = np.load(path)
+    flat = _flatten(params_template)
+    restored = {}
+    for k in flat:
+        if k not in z:
+            raise KeyError(f"checkpoint missing key {k!r}")
+        restored[k] = z[k].astype(flat[k].dtype)
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(
+        params_template)
+    keys = ["/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+            for path, _ in leaves_paths]
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [restored[k] for k in keys])
+
+
+def load_extra(path: str) -> Dict[str, Any]:
+    z = np.load(path)
+    return {k.split("/", 1)[1]: z[k] for k in z.files
+            if k.startswith("__extra__/")}

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: network-intrinsic distributed user
+selection for federated learning via random-access (CSMA) contention.
+
+Public API:
+    priority.model_priority       Eq. 2 layer-wise distance -> priority
+    csma.CSMASimulator            slotted CSMA/CA contention
+    counter.FairnessCounter       Step 4/5 refrain rule
+    selection.make_strategy       4 strategies (paper baselines + method)
+    federated.FLExperiment        end-to-end round orchestration (Fig. 1)
+"""
+from repro.core.priority import model_priority, layer_distance_ratios
+from repro.core.csma import CSMASimulator, CSMAConfig
+from repro.core.counter import FairnessCounter
+from repro.core.selection import make_strategy, STRATEGIES
+from repro.core.federated import FLExperiment, FLConfig

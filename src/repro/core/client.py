@@ -1,0 +1,68 @@
+"""FL client: local SGD training + priority computation (Steps 2-3)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.priority import model_priority
+from repro.optim.sgd import sgd_update
+
+
+def make_local_trainer(loss_fn: Callable, lr: float) -> Callable:
+    """Returns jit'd ``train(params, batched_data) -> (params, mean_loss)``.
+
+    ``batched_data``: pytree whose leaves have shape (num_batches, batch,
+    ...); one SGD step per batch, scanned.
+    """
+
+    @jax.jit
+    def train(params, batched_data):
+        def step(p, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+            return sgd_update(p, grads, lr), loss
+
+        params, losses = jax.lax.scan(step, params, batched_data)
+        return params, losses.mean()
+
+    return train
+
+
+def batch_epoch(rng: np.random.Generator, data, batch_size: int):
+    """Shuffle + reshape host data into (nb, bs, ...); drops remainder."""
+    n = len(jax.tree.leaves(data)[0])
+    nb = max(1, n // batch_size)
+    perm = rng.permutation(n)[: nb * batch_size]
+    return jax.tree.map(
+        lambda a: np.asarray(a)[perm].reshape((nb, batch_size) + a.shape[1:]),
+        data)
+
+
+class Client:
+    """One FL user: local dataset + 1-epoch SGD + Eq. 2 priority."""
+
+    def __init__(self, uid: int, data, loss_fn, *, lr=1e-2, batch_size=32,
+                 local_epochs=1, seed=0):
+        self.uid = uid
+        self.data = data
+        self.num_examples = len(jax.tree.leaves(data)[0])
+        self.batch_size = batch_size
+        self.local_epochs = local_epochs
+        self._trainer = make_local_trainer(loss_fn, lr)
+        self._rng = np.random.default_rng(seed + 1000 * uid)
+
+    def train(self, global_params) -> Tuple:
+        """Step 2: returns (local_params, mean_loss)."""
+        params = global_params
+        loss = jnp.zeros(())
+        for _ in range(self.local_epochs):
+            batched = batch_epoch(self._rng, self.data, self.batch_size)
+            params, loss = self._trainer(params, batched)
+        return params, loss
+
+    def priority(self, local_params, global_params) -> float:
+        """Step 3: Eq. 2."""
+        return float(model_priority(local_params, global_params))

@@ -1,0 +1,42 @@
+"""Fairness counter (paper Sec. III, Steps 4-5).
+
+Each user maintains ``counter_k = uploads_k / total_merged`` where
+``total_merged = sum_t |K^t|``. Before uploading, a user whose counter
+exceeds the threshold refrains (Step 4). After the round's broadcast
+(Step 5) every user updates: winners increment the numerator by one;
+everyone increments the denominator by |K^t|.
+
+The state is intentionally per-user-maintainable (a user only needs its
+own upload count and the running total announced implicitly by the
+broadcasts) — that is what keeps the scheme distributed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class FairnessCounter:
+    def __init__(self, num_users: int, threshold: float = 0.16):
+        self.num_users = num_users
+        self.threshold = threshold
+        self.uploads = np.zeros(num_users, np.int64)
+        self.total_merged = 0
+
+    def values(self) -> np.ndarray:
+        if self.total_merged == 0:
+            return np.zeros(self.num_users)
+        return self.uploads / self.total_merged
+
+    def participating(self) -> np.ndarray:
+        """Step 4 mask: True = may upload this round."""
+        return self.values() < self.threshold
+
+    def update(self, winners, k_t: int) -> None:
+        """Step 5: winners bump numerator; everyone bumps denominator."""
+        for u in winners:
+            self.uploads[u] += 1
+        self.total_merged += int(k_t)
+
+    def state_dict(self):
+        return {"uploads": self.uploads.copy(),
+                "total_merged": self.total_merged}

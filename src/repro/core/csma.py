@@ -1,0 +1,105 @@
+"""Slotted CSMA/CA contention simulator (paper Sec. II-B / III).
+
+Models the 802.11-style medium the paper rides on:
+
+  * each contender draws a backoff of ``T_backoff = R * W`` seconds
+    (Eq. 3), quantized to 20 us slots;
+  * contenders count down while the medium is idle (countdown freezes
+    during a transmission — standard CSMA/CA);
+  * if two or more counters expire in the same slot the transmissions
+    collide; colliders redraw from a doubled window (binary exponential
+    backoff, capped), everyone else resumes;
+  * a successful transmission occupies the channel for ``tx_slots`` and
+    delivers one local model to the server;
+  * the server closes the round after ``k_target`` deliveries (Step 5:
+    the global-model broadcast doubles as the stop signal).
+
+This is physical-medium simulation, so it runs on host (numpy, seeded,
+deterministic) — see DESIGN.md §3. The learning-side math stays in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+SLOT_US = 20.0  # 802.11 slot time
+
+
+@dataclass
+class CSMAConfig:
+    slot_us: float = SLOT_US
+    tx_slots: int = 50          # airtime of one model upload, in slots
+    max_backoff_doublings: int = 5
+    max_sim_slots: int = 2_000_000
+
+
+@dataclass
+class CSMAResult:
+    winners: List[int]          # user ids in delivery order
+    finish_slots: List[int]     # slot at which each delivery completed
+    collisions: int
+    elapsed_slots: int
+
+
+class CSMASimulator:
+    """Deterministic slotted CSMA/CA over one contention round."""
+
+    def __init__(self, config: Optional[CSMAConfig] = None,
+                 seed: int = 0):
+        self.config = config or CSMAConfig()
+        self._rng = np.random.default_rng(seed)
+
+    def contend(self, backoff_seconds: Sequence[float],
+                windows_seconds: Sequence[float],
+                k_target: int,
+                participating: Optional[Sequence[bool]] = None) -> CSMAResult:
+        """Run one round of contention.
+
+        backoff_seconds: initial T_backoff per user (Eq. 3 draws).
+        windows_seconds: each user's CW size W (for collision redraws).
+        k_target: server closes the round after this many deliveries.
+        participating: counter-refrain mask (Step 4); False = silent.
+        """
+        cfg = self.config
+        n = len(backoff_seconds)
+        slot_s = cfg.slot_us * 1e-6
+        counters = np.array(
+            [max(0, int(round(b / slot_s))) for b in backoff_seconds],
+            dtype=np.int64)
+        windows = np.asarray(windows_seconds, dtype=np.float64)
+        active = (np.ones(n, bool) if participating is None
+                  else np.asarray(participating, bool).copy())
+        doublings = np.zeros(n, np.int64)
+
+        winners: List[int] = []
+        finish_slots: List[int] = []
+        collisions = 0
+        t = 0
+        while (len(winners) < k_target and active.any()
+               and t < cfg.max_sim_slots):
+            live = np.where(active)[0]
+            step = int(counters[live].min())
+            t += step
+            counters[live] -= step
+            expiring = live[counters[live] == 0]
+            if len(expiring) == 1:
+                u = int(expiring[0])
+                t += cfg.tx_slots
+                winners.append(u)
+                finish_slots.append(t)
+                active[u] = False
+            else:
+                # collision: all colliders redraw from doubled windows
+                collisions += 1
+                t += cfg.tx_slots  # collided airtime is still burned
+                for u in expiring:
+                    doublings[u] = min(doublings[u] + 1,
+                                       cfg.max_backoff_doublings)
+                    w = windows[u] * (2.0 ** doublings[u])
+                    counters[u] = max(
+                        1, int(round(self._rng.uniform(0.0, w) / slot_s)))
+        return CSMAResult(winners=winners, finish_slots=finish_slots,
+                          collisions=collisions, elapsed_slots=t)

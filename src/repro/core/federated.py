@@ -1,0 +1,166 @@
+"""End-to-end FL round orchestration — paper Fig. 1, Steps 1-5.
+
+Model-agnostic: works over any (params pytree, loss_fn) pair, so the
+same driver runs the paper's MLP/CNN simulation on CPU and the
+federated-LLM examples on reduced transformer configs.
+
+Round flow (Fig. 1):
+  1. server broadcasts w^t (here: clients read the global pytree);
+  2. every client runs 1 local epoch of SGD;
+  3. clients compute Eq. 2 priority and Eq. 3 backoff;
+  4. counter refrain (Step 4) + contention / selection;
+  5. server FedAvg's the first K_t arrivals, broadcasts, counters update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.client import Client
+from repro.core.counter import FairnessCounter
+from repro.core.csma import CSMAConfig
+from repro.core.priority import model_priority
+from repro.core.selection import SelectionContext, make_strategy
+from repro.core.server import fedavg
+
+
+@dataclass
+class FLConfig:
+    num_users: int = 10
+    k_per_round: int = 2          # |K^t|
+    rounds: int = 100
+    lr: float = 1e-2              # paper Sec. IV-A2
+    batch_size: int = 32
+    local_epochs: int = 1
+    strategy: str = "priority-distributed"
+    cw_base: float = 2048.0       # N in Eq. 3
+    use_counter: bool = True
+    counter_threshold: float = 0.16
+    csma: CSMAConfig = field(default_factory=CSMAConfig)
+    seed: int = 0
+    eval_every: int = 1
+
+
+@dataclass
+class FLHistory:
+    accuracy: List[float] = field(default_factory=list)
+    eval_round: List[int] = field(default_factory=list)
+    train_loss: List[float] = field(default_factory=list)
+    selections: Optional[np.ndarray] = None    # (num_users,) counts
+    priorities: List[List[float]] = field(default_factory=list)
+    collisions: int = 0
+    uploads_total: int = 0
+
+
+class FLExperiment:
+    """One FL run under one selection strategy."""
+
+    def __init__(self, init_params, loss_fn, user_data: Sequence,
+                 eval_fn: Callable, cfg: FLConfig):
+        """
+        init_params: params pytree (the round-0 global model).
+        loss_fn(params, batch) -> scalar; batch leaves (bs, ...).
+        user_data: per-user pytree of host arrays (leading dim = examples).
+        eval_fn(params) -> float metric (accuracy for the paper models).
+        """
+        self.cfg = cfg
+        self.global_params = init_params
+        self.eval_fn = eval_fn
+        self.clients = [
+            Client(u, user_data[u], loss_fn, lr=cfg.lr,
+                   batch_size=cfg.batch_size, local_epochs=cfg.local_epochs,
+                   seed=cfg.seed)
+            for u in range(cfg.num_users)
+        ]
+        self.counter = FairnessCounter(cfg.num_users, cfg.counter_threshold)
+        self.strategy = make_strategy(cfg.strategy, cfg.csma, seed=cfg.seed)
+        self._rng = np.random.default_rng(cfg.seed)
+        self._prio_jit = jax.jit(model_priority)
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int, history: FLHistory) -> None:
+        cfg = self.cfg
+        need_priority = self.strategy.uses_priority
+        # centralized-random selects BEFORE local training (true FedAvg);
+        # every other strategy requires all users to train (Step 2).
+        participating = (self.counter.participating() if cfg.use_counter
+                         else np.ones(cfg.num_users, bool))
+        if not participating.any():       # degenerate threshold: reset mask
+            participating = np.ones(cfg.num_users, bool)
+
+        if cfg.strategy == "random-centralized":
+            cand = np.where(participating)[0]
+            k = min(cfg.k_per_round, len(cand))
+            pre_selected = list(self._rng.choice(cand, size=k, replace=False))
+            train_set = pre_selected
+        else:
+            pre_selected = None
+            train_set = list(range(cfg.num_users))
+
+        locals_, losses, prios = {}, {}, np.ones(cfg.num_users)
+        for u in train_set:
+            locals_[u], losses[u] = self.clients[u].train(self.global_params)
+            if need_priority:
+                prios[u] = float(
+                    self._prio_jit(locals_[u], self.global_params))
+
+        if pre_selected is not None:
+            winners = pre_selected
+        else:
+            ctx = SelectionContext(
+                priorities=prios, participating=participating,
+                k_target=cfg.k_per_round, rng=self._rng,
+                cw_base=cfg.cw_base)
+            winners = self.strategy.select(ctx)
+
+        if winners:
+            models = [locals_[u] for u in winners]
+            sizes = [self.clients[u].num_examples for u in winners]
+            self.global_params = fedavg(models, sizes)
+            self.counter.update(winners, len(winners))
+            history.uploads_total += len(winners)
+            for u in winners:
+                history.selections[u] += 1
+        if need_priority:
+            history.priorities.append([float(prios[u]) for u in train_set])
+        if losses:
+            history.train_loss.append(float(np.mean(list(losses.values()))))
+
+    # ------------------------------------------------------------------
+    def run(self, verbose: bool = False) -> FLHistory:
+        cfg = self.cfg
+        history = FLHistory(selections=np.zeros(cfg.num_users, np.int64))
+        for t in range(cfg.rounds):
+            self.run_round(t, history)
+            if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
+                acc = float(self.eval_fn(self.global_params))
+                history.accuracy.append(acc)
+                history.eval_round.append(t)
+                if verbose:
+                    print(f"[{cfg.strategy}] round {t:4d} "
+                          f"acc {acc:.4f} "
+                          f"loss {history.train_loss[-1]:.4f}"
+                          if history.train_loss else "")
+        return history
+
+
+def make_accuracy_eval(apply_fn, x_test, y_test, batch: int = 256):
+    """Batched classifier accuracy eval_fn."""
+    x_test = np.asarray(x_test)
+    y_test = np.asarray(y_test)
+    apply_jit = jax.jit(apply_fn)
+
+    def eval_fn(params) -> float:
+        correct = 0
+        for i in range(0, len(y_test), batch):
+            logits = apply_jit(params, x_test[i:i + batch])
+            correct += int((np.argmax(np.asarray(logits), -1)
+                            == y_test[i:i + batch]).sum())
+        return correct / len(y_test)
+
+    return eval_fn

@@ -1,0 +1,65 @@
+"""Priority metric — paper Eq. (2).
+
+    priority_k = prod_{l=1}^{L} (1 + ||w_{k,l} - w_l||_2 / ||w_l||_2)
+
+"Layer" here is one weight tensor (pytree leaf), matching the paper's
+per-layer treatment and the distance metric of Bernstein et al. [13].
+The paper observes priority values land in [1, 1.2] in practice; a unit
+test asserts that range for freshly-SGD-trained local models.
+
+The reduction itself streams every parameter once per model pair — for
+the assigned 671B/1T-param architectures this is the technique's main
+compute, so the inner ``||w_k - w||^2, ||w||^2`` pass is a Pallas kernel
+(`repro.kernels.delta_norm`) with a jnp fallback used off-TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def layer_distance_ratios(local_params, global_params, use_kernel=True):
+    """Per-leaf relative distances ||w_k,l - w_l|| / ||w_l||.
+
+    Returns a list of scalar f32 arrays, one per leaf (layer); leaves are
+    paired by tree structure.
+    """
+    local_leaves = jax.tree.leaves(local_params)
+    global_leaves = jax.tree.leaves(global_params)
+    assert len(local_leaves) == len(global_leaves)
+    ratios = []
+    for wl, wg in zip(local_leaves, global_leaves):
+        d2, g2 = kops.delta_norm(wl, wg, use_kernel=use_kernel)
+        # Stability clamp: layers with (near-)zero reference norm — e.g.
+        # zero-initialized biases in round 0 — would otherwise produce
+        # unbounded ratios and blow the Eq. 2 product far outside the
+        # paper's observed [1, 1.2] range, which in turn collapses every
+        # CW to zero slots and livelocks the CSMA contention. A relative
+        # distance > 1 ("moved further than the reference is long")
+        # carries no extra ordering information, so we cap each layer's
+        # ratio at 1.
+        ratio = jnp.sqrt(d2) / jnp.maximum(jnp.sqrt(g2), 1e-12)
+        ratios.append(jnp.minimum(ratio, 1.0))
+    return ratios
+
+
+def model_priority(local_params, global_params, use_kernel=True):
+    """Eq. (2): product over layers of (1 + relative distance). Scalar f32."""
+    ratios = layer_distance_ratios(local_params, global_params, use_kernel)
+    prio = jnp.ones((), jnp.float32)
+    for r in ratios:
+        prio = prio * (1.0 + r)
+    return prio
+
+
+def contention_window(priority, N: float):
+    """Eq. (3): W = N / priority."""
+    return N / priority
+
+
+def backoff_time(priority, N: float, key):
+    """Eq. (3): T_backoff = R * W, R ~ U(0,1)."""
+    R = jax.random.uniform(key, (), jnp.float32)
+    return R * contention_window(priority, N)

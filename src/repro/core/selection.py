@@ -1,0 +1,115 @@
+"""User-selection strategies (paper Sec. IV-A3 baselines + the method).
+
+  random-centralized    server picks K_t users uniformly (classic FedAvg)
+  random-distributed    equal CW for everyone; CSMA decides (FL-over-WiFi
+                        status quo, e.g. FedFly [11])
+  priority-centralized  server picks top-K_t by Eq. 2 priority (counter-
+                        filtered) — the upper-bound the paper compares to
+  priority-distributed  THE PAPER'S METHOD: W = N / priority, counter
+                        refrain, CSMA contention; server merges the first
+                        K_t arrivals.
+
+Each strategy consumes per-user priorities (where relevant) and returns
+the selected user ids for the round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.csma import CSMASimulator, CSMAConfig
+from repro.core.counter import FairnessCounter
+
+STRATEGIES = ("random-centralized", "random-distributed",
+              "priority-centralized", "priority-distributed")
+
+
+@dataclass
+class SelectionContext:
+    priorities: np.ndarray           # (K,) Eq. 2 values (1.0 if unused)
+    participating: np.ndarray        # (K,) counter mask (Step 4)
+    k_target: int
+    rng: np.random.Generator
+    cw_base: float = 2048.0          # N in Eq. 3 (slots-equivalent seconds unit)
+
+
+class _Base:
+    name: str = "base"
+    uses_priority = False
+    distributed = False
+
+    def select(self, ctx: SelectionContext) -> List[int]:
+        raise NotImplementedError
+
+
+class RandomCentralized(_Base):
+    name = "random-centralized"
+
+    def select(self, ctx):
+        cand = np.where(ctx.participating)[0]
+        k = min(ctx.k_target, len(cand))
+        return list(ctx.rng.choice(cand, size=k, replace=False))
+
+
+class PriorityCentralized(_Base):
+    name = "priority-centralized"
+    uses_priority = True
+
+    def select(self, ctx):
+        cand = np.where(ctx.participating)[0]
+        k = min(ctx.k_target, len(cand))
+        order = cand[np.argsort(-ctx.priorities[cand], kind="stable")]
+        return list(order[:k])
+
+
+class _DistributedCSMA(_Base):
+    distributed = True
+
+    def __init__(self, csma_config: Optional[CSMAConfig] = None, seed: int = 0):
+        self._sim = CSMASimulator(csma_config, seed=seed)
+
+    def _windows(self, ctx) -> np.ndarray:
+        raise NotImplementedError
+
+    def select(self, ctx):
+        windows = self._windows(ctx)
+        # Eq. 3: T_backoff = R * W with R ~ U(0,1), drawn by each user
+        backoffs = ctx.rng.uniform(0.0, 1.0, size=len(windows)) * windows
+        slot_s = self._sim.config.slot_us * 1e-6
+        res = self._sim.contend(
+            backoff_seconds=backoffs * slot_s,   # windows are in slot units
+            windows_seconds=windows * slot_s,
+            k_target=ctx.k_target,
+            participating=ctx.participating)
+        return res.winners
+
+
+class RandomDistributed(_DistributedCSMA):
+    name = "random-distributed"
+
+    def _windows(self, ctx):
+        return np.full(len(ctx.priorities), ctx.cw_base)
+
+
+class PriorityDistributed(_DistributedCSMA):
+    """The paper's method: W_k = N / priority_k (Eq. 3)."""
+    name = "priority-distributed"
+    uses_priority = True
+
+    def _windows(self, ctx):
+        return ctx.cw_base / np.maximum(ctx.priorities, 1e-9)
+
+
+def make_strategy(name: str, csma_config: Optional[CSMAConfig] = None,
+                  seed: int = 0) -> _Base:
+    if name == "random-centralized":
+        return RandomCentralized()
+    if name == "priority-centralized":
+        return PriorityCentralized()
+    if name == "random-distributed":
+        return RandomDistributed(csma_config, seed)
+    if name == "priority-distributed":
+        return PriorityDistributed(csma_config, seed)
+    raise ValueError(f"unknown strategy {name!r}; known: {STRATEGIES}")

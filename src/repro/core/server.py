@@ -1,0 +1,48 @@
+"""FL server: FedAvg aggregation (paper Eq. 1) + round bookkeeping.
+
+Aggregates the first-K_t arrivals' local models weighted by local
+dataset size:
+
+    w^{t+1} = sum_k |D_k| w_k^t / sum_k |D_k|
+
+The per-leaf weighted sum is the `repro.kernels.fedavg` Pallas kernel's
+job on TPU (one fused pass over K stacked models); the jnp path is the
+oracle and the CPU fallback.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+def fedavg(models: Sequence, data_sizes: Sequence[float], use_kernel=True):
+    """Weighted average of K param pytrees. Eq. (1)."""
+    assert len(models) == len(data_sizes) and models
+    w = np.asarray(data_sizes, np.float64)
+    alphas = jnp.asarray(w / w.sum(), jnp.float32)
+
+    def combine(*leaves):
+        stacked = jnp.stack(leaves)                   # (K, ...)
+        return kops.fedavg_combine(stacked, alphas, use_kernel=use_kernel)
+
+    return jax.tree.map(combine, *models)
+
+
+def fedavg_delta(global_params, deltas: Sequence, data_sizes, use_kernel=True):
+    """Delta form: w + sum_k alpha_k (w_k - w). Equivalent to Eq. (1) when
+    every delta is (w_k - w); this is the form used at LLM scale so
+    non-selected silos contribute zero traffic (DESIGN.md §3)."""
+    w = np.asarray(data_sizes, np.float64)
+    alphas = jnp.asarray(w / w.sum(), jnp.float32)
+
+    def combine(g, *ds):
+        stacked = jnp.stack(ds)
+        upd = kops.fedavg_combine(stacked, alphas, use_kernel=use_kernel)
+        return (g.astype(jnp.float32) + upd.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree.map(combine, global_params, *deltas)

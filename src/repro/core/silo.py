@@ -1,0 +1,121 @@
+"""Cross-silo FL on the multi-pod mesh — the paper's protocol mapped to
+TPU pods (DESIGN.md §3).
+
+Each pod is one FL silo ("user"): it holds a full replica of the model
+(sharded FSDP x tensor *within* the pod) and its own non-IID data shard.
+One FL round on-device is:
+
+  1. every silo runs a local SGD step on its own batch (vmap over the
+     silo axis; zero cross-pod collectives in this phase);
+  2. every silo computes its Eq. 2 priority vs. the incoming global
+     model (per-silo delta-norm reduction);
+  3. the HOST runs the CSMA contention with those priorities (Eq. 3 +
+     counter) and feeds back per-silo merge weights alpha_k (zero for
+     non-selected silos);
+  4. the merge  w <- w + sum_k alpha_k (w_k - w)  is the ONLY cross-pod
+     collective — its traffic is gated by the selection exactly like the
+     paper gates wireless airtime.
+
+The stacked-parameter layout (leading silo dim sharded over 'pod') makes
+steps 1-2 embarrassingly parallel under GSPMD and keeps step 4 a single
+masked psum over 'pod'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import compute_loss
+
+
+def stack_for_silos(params, n_silos: int):
+    """Replicate a param pytree into (n_silos, ...) stacked form."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_silos,) + p.shape), params)
+
+
+def _tree_delta_norms(local_stacked, global_params):
+    """Per-silo Eq. 2 priority from stacked local models. (n_silos,)"""
+    def leaf_ratio(wl, wg):
+        # wl: (P, ...), wg: (...)
+        axes = tuple(range(1, wl.ndim))
+        d2 = jnp.sum(jnp.square(wl.astype(jnp.float32)
+                                - wg.astype(jnp.float32)[None]), axis=axes)
+        g2 = jnp.sum(jnp.square(wg.astype(jnp.float32)))
+        ratio = jnp.sqrt(d2) / jnp.maximum(jnp.sqrt(g2), 1e-12)
+        return jnp.minimum(ratio, 1.0)
+
+    prios = None
+    for wl, wg in zip(jax.tree.leaves(local_stacked),
+                      jax.tree.leaves(global_params)):
+        r = leaf_ratio(wl, wg)
+        prios = (1.0 + r) if prios is None else prios * (1.0 + r)
+    return prios
+
+
+def make_fl_round_step(cfg, lr: float = 1e-2, long_context: bool = False,
+                       do_merge: bool = True,
+                       merge_dtype: str = "float32"):
+    """Returns fl_round(stacked_params, batch, alphas) ->
+    (mean_loss, new_stacked_params, priorities).
+
+    stacked_params: (S, ...) pytree, silo-stacked (shard dim 0 over 'pod').
+    batch: {"tokens": (S, B, L+1), ...} silo-major.
+    alphas: (S,) f32 merge weights from the host-side CSMA contention —
+    sum to 1 over selected silos, 0 elsewhere.
+
+    do_merge=False: a local-only round (the paper's non-selected rounds:
+    zero cross-silo traffic). merge_dtype="bfloat16": beyond-paper lever —
+    ship deltas across pods in bf16 (half the ICI bytes; the f32 math
+    happens after the transfer).
+    """
+    loss_fn = functools.partial(compute_loss, cfg=cfg,
+                                long_context=long_context)
+    mdt = jnp.dtype(merge_dtype)
+
+    def local_step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return loss, new
+
+    def fl_round(stacked_params, batch, alphas):
+        # (1) per-silo local training — no cross-silo collectives
+        losses, local = jax.vmap(local_step)(stacked_params, batch)
+        # (2) Eq. 2 priority per silo (global model = silo-0 replica
+        #     entering the round; all replicas are identical here)
+        global_params = jax.tree.map(lambda p: p[0], stacked_params)
+        priorities = _tree_delta_norms(local, global_params)
+        if not do_merge:
+            return losses.mean(), local, priorities
+        # (4) selection-gated merge: the only cross-'pod' traffic
+        a = alphas.astype(jnp.float32)
+
+        def merge(wl, wg):
+            delta = (wl.astype(jnp.float32)
+                     - wg.astype(jnp.float32)[None]).astype(mdt)
+            # contraction over the pod-sharded silo axis = the cross-pod
+            # all-reduce; the barrier stops XLA from hoisting the f32
+            # convert above the reduce (which would put f32 on the wire)
+            upd = jnp.einsum("s,s...->...", a.astype(mdt), delta,
+                             preferred_element_type=mdt)
+            upd = jax.lax.optimization_barrier(upd)
+            merged = wg.astype(jnp.float32) + upd.astype(jnp.float32)
+            return jnp.broadcast_to(merged[None],
+                                    wl.shape).astype(wl.dtype)
+
+        new_stacked = jax.tree.map(merge, local, global_params)
+        return losses.mean(), new_stacked, priorities
+
+    return fl_round
+
+
+def silo_batch_struct(cfg, n_silos: int, batch: int, seq: int):
+    import jax
+    return {"tokens": jax.ShapeDtypeStruct((n_silos, batch, seq + 1),
+                                           jnp.int32)}

@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic datasets + FL partitioning."""
+from repro.data.synthetic import (make_classification_dataset,
+                                  make_token_stream)
+from repro.data.partition import partition_iid, partition_noniid_shards

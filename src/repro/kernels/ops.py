@@ -1,0 +1,53 @@
+"""jit-friendly wrappers choosing Pallas kernel vs jnp oracle.
+
+Dispatch policy:
+  * on TPU: compiled Pallas kernels (the target);
+  * on CPU: the jnp oracle, UNLESS interpret-mode is forced (tests force
+    it to validate the kernel bodies; interpret mode executes the kernel
+    in Python and is far too slow for the FL simulation loops).
+
+Force interpret globally with REPRO_PALLAS_INTERPRET=1 or per-call with
+``interpret=True``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.delta_norm import delta_norm_pallas
+from repro.kernels.fedavg import fedavg_pallas
+from repro.kernels.fused_sgd import fused_sgd_pallas
+
+
+def _mode(use_kernel: bool, interpret):
+    """Returns (run_pallas, interpret_flag)."""
+    if not use_kernel:
+        return False, False
+    if interpret is True or os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return True, True
+    if jax.default_backend() == "tpu":
+        return True, False
+    return False, False
+
+
+def delta_norm(w_local, w_global, use_kernel=True, interpret=None):
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        return delta_norm_pallas(w_local, w_global, interpret=interp)
+    return ref.delta_norm_ref(w_local, w_global)
+
+
+def fedavg_combine(stacked, alphas, use_kernel=True, interpret=None):
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        return fedavg_pallas(stacked, alphas, interpret=interp)
+    return ref.fedavg_combine_ref(stacked, alphas)
+
+
+def fused_sgd(param, grad, lr, use_kernel=True, interpret=None):
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        return fused_sgd_pallas(param, grad, lr, interpret=interp)
+    return ref.fused_sgd_ref(param, grad, lr)

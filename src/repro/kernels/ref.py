@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def delta_norm_ref(w_local, w_global):
+    """(||w_local - w_global||^2, ||w_global||^2), both f32 scalars."""
+    wl = w_local.astype(jnp.float32)
+    wg = w_global.astype(jnp.float32)
+    d = wl - wg
+    return jnp.sum(d * d), jnp.sum(wg * wg)
+
+
+def fedavg_combine_ref(stacked, alphas):
+    """stacked: (K, ...), alphas: (K,) f32 -> weighted sum, stacked.dtype."""
+    a = alphas.astype(jnp.float32).reshape(
+        (-1,) + (1,) * (stacked.ndim - 1))
+    return jnp.sum(stacked.astype(jnp.float32) * a, axis=0).astype(
+        stacked.dtype)
+
+
+def fused_sgd_ref(param, grad, lr):
+    """param - lr * grad, computed in f32, cast back."""
+    return (param.astype(jnp.float32)
+            - jnp.asarray(lr, jnp.float32) * grad.astype(jnp.float32)
+            ).astype(param.dtype)

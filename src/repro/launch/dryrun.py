@@ -1,0 +1,329 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh), report
+memory/cost/collective analysis for the roofline.
+
+MUST be the first import side-effect: 512 placeholder host devices for
+the production meshes (jax locks device count on first init).
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (ARCH_IDS, SKIPS, LONG_CONTEXT_VARIANT,
+                                    get_config, get_shape)
+from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16, HBM_BW,
+                               ICI_BW_PER_LINK)
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch import steps as S
+from repro.sharding.rules import (param_specs, batch_specs, cache_specs,
+                                  to_shardings, batch_axes)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+def count_params(struct_tree):
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(struct_tree)))
+
+
+def active_params(cfg, struct_tree):
+    """MoE: total minus the inactive routed-expert fraction."""
+    if not cfg.num_experts:
+        return count_params(struct_tree)
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(struct_tree)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        names = [str(getattr(p, "key", "")) for p in path]
+        if "moe" in names and any(
+                nm in ("w_gate", "w_up", "w_down") for nm in names):
+            expert += n
+    inactive_frac = 1.0 - cfg.experts_per_token / cfg.num_experts
+    return int(total - expert * inactive_frac)
+
+
+def model_flops(cfg, shape, n_active):
+    """6*N*D (train) / 2*N*D (prefill/decode) useful-FLOPs yardstick."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token
+
+
+def build_lowered(cfg, shape, mesh, cache_shard_head_dim=False,
+                  bounded_cache=False, moe_ff_shard="d"):
+    """Lower one (config, shape) on a mesh. Returns the jax Lowered."""
+    long_context = shape.long_context
+    pstruct = S.params_struct(cfg, long_context)
+    pspecs = param_specs(pstruct, mesh, moe_ff_shard=moe_ff_shard)
+    pshard = to_shardings(pspecs, mesh)
+    bspecs = batch_specs(cfg, shape, mesh, cfg.family)
+
+    with mesh:
+        if shape.kind == "train":
+            step = S.make_train_step(cfg, long_context=long_context)
+            batch = S.input_specs(cfg, shape)
+            in_sh = (pshard, to_shardings(
+                {k: bspecs.get(k, P()) for k in batch}, mesh))
+            out_sh = (NamedSharding(mesh, P()), pshard)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(pstruct, batch)
+        elif shape.kind == "prefill":
+            step = S.make_prefill_step(cfg, long_context=long_context)
+            batch = S.input_specs(cfg, shape)
+            cstruct = S.caches_struct(cfg, shape, long_context)
+            cspecs = cache_specs(cstruct, cfg, mesh, seq_sharded=False,
+                                 shard_head_dim=cache_shard_head_dim)
+            cshard = to_shardings(cspecs, mesh)
+            ba = batch_axes(mesh)
+            logits_sh = NamedSharding(
+                mesh, P(ba if shape.global_batch %
+                        int(np.prod([mesh.shape[a] for a in ba])) == 0
+                        else None, "model"))
+            in_sh = (pshard, cshard, to_shardings(
+                {k: bspecs.get(k, P()) for k in batch}, mesh))
+            lowered = jax.jit(
+                step, in_shardings=in_sh, out_shardings=(logits_sh, cshard),
+                donate_argnums=(1,)).lower(pstruct, cstruct, batch)
+        else:  # decode
+            step = S.make_serve_step(cfg, long_context=long_context)
+            cstruct = S.caches_struct(cfg, shape, long_context,
+                                      bounded=bounded_cache)
+            seq_sharded = shape.global_batch < mesh.shape["data"]
+            cspecs = cache_specs(cstruct, cfg, mesh, seq_sharded=seq_sharded,
+                                 shard_head_dim=cache_shard_head_dim)
+            cshard = to_shardings(cspecs, mesh)
+            dec = S.input_specs(cfg, shape)
+            tok_sh = NamedSharding(
+                mesh, P("data" if shape.global_batch % mesh.shape["data"] == 0
+                        else None))
+            idx_sh = NamedSharding(mesh, P())
+            logits_sh = NamedSharding(
+                mesh, P("data" if shape.global_batch % mesh.shape["data"] == 0
+                        else None, "model"))
+            in_sh = (pshard, cshard, tok_sh, idx_sh)
+            lowered = jax.jit(
+                step, in_shardings=in_sh, out_shardings=(logits_sh, cshard),
+                donate_argnums=(1,)).lower(
+                    pstruct, cstruct, dec["token"], dec["index"])
+    return lowered, pstruct
+
+
+# --------------------------------------------------------------- correction
+# XLA's cost_analysis counts a lax.scan body ONCE, not x trip-count, so a
+# scanned 61-layer model under-reports flops/bytes/collectives by ~61x.
+# Correction: compile small *unrolled* depth variants (all layer groups at
+# depth 1, then each group bumped to 2) and extrapolate linearly:
+#     cost(full) = intercept + sum_g n_g * slope_g
+# Exact for this codebase because per-layer cost is depth- and
+# window-independent (windows only change mask values, not shapes).
+
+def depth_variants(cfg):
+    """(full_counts, build_fn) for the arch's layer groups."""
+    if cfg.is_encdec:
+        full = {"dec": cfg.num_layers, "enc": cfg.encoder_layers}
+
+        def build(d):
+            return dataclasses.replace(
+                cfg, num_layers=d["dec"], encoder_layers=d["enc"],
+                scan_unroll=4)
+    elif cfg.num_experts and cfg.first_dense_layers:
+        full = {"dense": cfg.first_dense_layers,
+                "moe": cfg.num_layers - cfg.first_dense_layers}
+
+        def build(d):
+            return dataclasses.replace(
+                cfg, first_dense_layers=d["dense"],
+                num_layers=d["dense"] + d["moe"], scan_unroll=4)
+    else:
+        full = {"layers": cfg.num_layers}
+
+        def build(d):
+            return dataclasses.replace(cfg, num_layers=d["layers"],
+                                       scan_unroll=4)
+    return full, build
+
+
+def _measure(cfg_v, shape, mesh, cache_shard_head_dim=False,
+             bounded_cache=False, moe_ff_shard="d"):
+    lowered, _ = build_lowered(cfg_v, shape, mesh,
+                               cache_shard_head_dim=cache_shard_head_dim,
+                               bounded_cache=bounded_cache,
+                               moe_ff_shard=moe_ff_shard)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return np.array([float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)),
+                     float(sum(coll.values()))])
+
+
+def corrected_costs(cfg, shape, mesh, cache_shard_head_dim=False,
+                    bounded_cache=False, moe_ff_shard="d"):
+    # base depth 2 per group, bumping one group to 4 at a time: depth-1
+    # compiles trigger different XLA partitioning choices (measured),
+    # while costs are exactly linear over depths >= 2.
+    full, build = depth_variants(cfg)
+    base_depths = {g: 2 for g in full}
+    c0 = _measure(build(base_depths), shape, mesh, cache_shard_head_dim,
+                  bounded_cache, moe_ff_shard)
+    slopes = {}
+    for g in full:
+        d = dict(base_depths)
+        d[g] = 4
+        slopes[g] = (_measure(build(d), shape, mesh, cache_shard_head_dim,
+                              bounded_cache, moe_ff_shard) - c0) / 2.0
+    intercept = c0 - 2.0 * sum(slopes.values())
+    corrected = intercept + sum(full[g] * slopes[g] for g in full)
+    corrected = np.maximum(corrected, 0.0)
+    return {
+        "flops": float(corrected[0]),
+        "bytes": float(corrected[1]),
+        "coll_bytes": float(corrected[2]),
+        "per_layer_slopes": {g: s.tolist() for g, s in slopes.items()},
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            lower_only: bool = False, correct: bool = True):
+    """Lower+compile one (arch, shape, mesh). Returns a result dict."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+    variant = (shape.long_context and arch in LONG_CONTEXT_VARIANT)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    lowered, pstruct = build_lowered(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    if lower_only:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "lowered", "lower_s": round(t_lower, 1)}
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    n_total = count_params(pstruct)
+    n_active = active_params(cfg, pstruct)
+    hlo_flops_dev = float(cost.get("flops", 0.0))
+    hlo_bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_bytes_dev = float(sum(coll.values()))
+    mf = model_flops(cfg, shape, n_active)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "variant_window": bool(variant),
+        "chips": chips,
+        "params_total": n_total, "params_active": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "per_device_args_bytes": mem.argument_size_in_bytes,
+            "per_device_output_bytes": mem.output_size_in_bytes,
+            "per_device_temp_bytes": mem.temp_size_in_bytes,
+            "per_device_alias_bytes": mem.alias_size_in_bytes,
+        },
+        "hlo_flops_per_device": hlo_flops_dev,
+        "hlo_bytes_per_device": hlo_bytes_dev,
+        "collective_bytes_per_device": coll_bytes_dev,
+        "collectives": coll,
+        "model_flops_global": mf,
+        "roofline_scanbody_once": roofline_terms(
+            hlo_flops_dev, hlo_bytes_dev, coll_bytes_dev),
+    }
+    if correct:
+        corr = corrected_costs(cfg, shape, mesh)
+        result["corrected"] = corr
+        result["useful_flops_ratio"] = mf / max(corr["flops"] * chips, 1.0)
+        result["roofline"] = roofline_terms(
+            corr["flops"], corr["bytes"], corr["coll_bytes"])
+    else:
+        result["useful_flops_ratio"] = mf / max(hlo_flops_dev * chips, 1.0)
+        result["roofline"] = result["roofline_scanbody_once"]
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {tuple(INPUT_SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--no-correct", action="store_true",
+                    help="skip the scan-cost correction compiles (multi-"
+                         "pod pass: compile success + memory only)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = (list(INPUT_SHAPES) if args.shape == "all" else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "multi" if mp else "single")
+                if key in done:
+                    print(f"[skip-done] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    r = run_one(arch, shape, mp, args.lower_only,
+                                correct=not args.no_correct)
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "multi" if mp else "single",
+                         "status": "error",
+                         "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                print(json.dumps({k: v for k, v in r.items()
+                                  if k not in ("trace", "collectives",
+                                               "memory")}),
+                      flush=True)
+                results = [x for x in results
+                           if (x["arch"], x["shape"], x["mesh"]) != key]
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    bad = [r for r in results if r.get("status") == "error"]
+    print(f"\n{len(results)} results, {len(bad)} errors")
+    for r in bad:
+        print("ERROR:", r["arch"], r["shape"], r["mesh"], r["error"])
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

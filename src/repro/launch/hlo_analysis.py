@@ -1,0 +1,52 @@
+"""Side-effect-free HLO/roofline analysis helpers (no jax device init —
+importable from tests; dryrun.py re-exports these)."""
+from __future__ import annotations
+
+import re
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result bytes of every collective op in (post-SPMD) HLO.
+
+    Result size is the per-device data produced by the collective — a
+    conservative proxy for link traffic (all-gather receives ~result,
+    all-reduce moves ~2x input in a ring; EXPERIMENTS.md documents the
+    approximation).
+    """
+    per_op = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for c in _COLLECTIVES:
+            if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                lhs = stripped.split(f" {c}", 1)[0]
+                for dt, dims in _SHAPE_RE.findall(lhs):
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    per_op[c] += n * _DTYPE_BYTES[dt]
+                break
+    return per_op
+
+
+def roofline_terms(flops_dev, bytes_dev, coll_dev):
+    terms = {"compute_s": flops_dev / PEAK_FLOPS_BF16,
+             "memory_s": bytes_dev / HBM_BW,
+             "collective_s": coll_dev / ICI_BW_PER_LINK}
+    return {**{k: round(v, 6) for k, v in terms.items()},
+            "dominant": max(terms, key=terms.get)}

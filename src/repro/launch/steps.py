@@ -1,0 +1,106 @@
+"""Step builders + input specs shared by dryrun/train/serve.
+
+One function per shape *kind*:
+  train   -> train_step(params, batch)            = SGD on CE loss
+  prefill -> prefill_step(params, caches, batch)  = logits + filled caches
+  decode  -> serve_step(params, caches, token, index)
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable,
+zero allocation) for every model input of the given (arch x shape).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import (compute_loss, forward, decode_step,
+                                make_caches, init_params)
+from repro.models import frontends
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Text tokens for this shape (vlm: prefix patches use up sequence)."""
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        return shape.seq_len - cfg.num_prefix_tokens
+    return shape.seq_len
+
+
+def params_struct(cfg: ModelConfig, long_context=False):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg,
+                            long_context=long_context))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Batch ShapeDtypeStructs for train/prefill; see caches/token for decode."""
+    B = shape.global_batch
+    S = text_len(cfg, shape)
+    tok = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S + 1), tok)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+    else:  # decode: one new token
+        return {"token": jax.ShapeDtypeStruct((B,), tok),
+                "index": jax.ShapeDtypeStruct((), tok)}
+    if cfg.family == "vlm":
+        specs["patches"] = frontends.vision_patch_spec(B, cfg, act)
+    if cfg.family == "audio":
+        specs["frames"] = frontends.audio_frame_spec(B, cfg, act)
+    return specs
+
+
+def caches_struct(cfg: ModelConfig, shape: ShapeConfig, long_context=False,
+                  bounded: bool = False):
+    """bounded=True (beyond-paper lever): when every layer is windowed
+    (long-context variants), allocate ring caches of window size instead
+    of the full sequence — decode then touches O(window) KV per step."""
+    cache_len = shape.seq_len
+    if bounded:
+        windows = cfg.layer_windows(shape.seq_len, long_context=long_context)
+        if windows and all(w > 0 for w in windows):
+            cache_len = min(cache_len, max(windows))
+    return jax.eval_shape(
+        lambda: make_caches(cfg, shape.global_batch, cache_len,
+                            long_context=long_context))
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(cfg: ModelConfig, lr: float = 1e-2, long_context=False):
+    loss_fn = functools.partial(compute_loss, cfg=cfg,
+                                long_context=long_context)
+
+    def train_step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return loss, new_params
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, long_context=False):
+    def prefill_step(params, caches, batch):
+        logits, new_caches, _ = forward(
+            params, batch["tokens"], cfg,
+            prefix_embeds=batch.get("patches"),
+            enc_frames=batch.get("frames"),
+            long_context=long_context, caches=caches)
+        return logits[:, -1], new_caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, long_context=False):
+    def serve_step(params, caches, token, index):
+        return decode_step(params, caches, token, index, cfg,
+                           long_context=long_context)
+
+    return serve_step

@@ -1,0 +1,1 @@
+"""Model substrate: pure-JAX transformer/SSM stack, scan-over-layers."""

@@ -1,0 +1,280 @@
+"""Attention: GQA / MLA with flash-style (chunked, online-softmax) scan.
+
+Design notes (TPU adaptation):
+  * Pure-jnp flash: the kv sequence is scanned in ``chunk``-sized blocks
+    with a running (max, sumexp, acc) carry, so peak activation memory is
+    O(S * chunk) instead of O(S^2). On a real TPU this is where a Pallas
+    fused kernel slots in; the jnp form is the oracle and produces the
+    same HLO-level memory profile for the dry-run.
+  * MLA (DeepSeek) uses the *absorbed* formulation: W_UK is folded into
+    the query and W_UV applied after the attention-weighted sum of the
+    latent, so the KV cache holds only (kv_lora_rank + rope_dim) per
+    token and no per-head K/V is ever materialized.
+  * KV caches are ring buffers: write slot = position % cache_len, and a
+    stored-position array drives the causal/window mask, so bounded-window
+    layers can keep a cache of exactly ``window`` entries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import truncated_normal_init, apply_norm
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def _pad_to_multiple(x, multiple, axis, value=0):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def flash_attention(q, k, v, *, q_positions, k_positions, causal=True,
+                    window=None, softcap=0.0, chunk=1024, scale=None,
+                    chunk_remat=False):
+    """Online-softmax attention over kv chunks.
+
+    q: (B, S, Kv, G, Dh)   grouped queries
+    k: (B, T, Kv, Dh)      v: (B, T, Kv, Dv)
+    q_positions: (S,) int32; k_positions: (T,) int32, negative = invalid.
+    window: None or 0 for full attention, or a (possibly traced) scalar w
+      masking keys with q_pos - k_pos >= w. A traced 0 also means full
+      attention (per-layer window arrays scanned over layers use 0 for
+      the global layers).
+    """
+    B, S, Kv, G, Dh = q.shape
+    Dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / np.sqrt(Dh)
+    chunk = int(min(chunk, k.shape[1]))
+
+    k = _pad_to_multiple(k, chunk, axis=1)
+    v = _pad_to_multiple(v, chunk, axis=1)
+    k_positions = _pad_to_multiple(k_positions, chunk, axis=0, value=-1)
+    T = k.shape[1]
+    n_chunks = T // chunk
+
+    kc = k.reshape(B, n_chunks, chunk, Kv, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Kv, Dv).transpose(1, 0, 2, 3, 4)
+    pc = k_positions.reshape(n_chunks, chunk)
+
+    qf = q.astype(jnp.float32) * scale
+    m0 = jnp.full((B, S, Kv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, Kv, G), jnp.float32)
+    a0 = jnp.zeros((B, S, Kv, G, Dv), jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i = xs
+        s = jnp.einsum("bskgd,btkd->bskgt", qf, k_i.astype(jnp.float32))
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        valid = (p_i >= 0)[None, None, :]                      # (1,1,t)
+        if causal:
+            valid = valid & (p_i[None, None, :] <= q_positions[None, :, None])
+        if window is not None:
+            w_eff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
+                              jnp.int32(2**30))
+            valid = valid & (q_positions[None, :, None] - p_i[None, None, :]
+                             < w_eff)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    if chunk_remat:
+        # beyond-paper lever: recompute the per-chunk softmax in the
+        # backward pass instead of storing (B,S,Kv,G,chunk) residuals
+        # per chunk — flash-attention's defining memory trade.
+        step = jax.checkpoint(step)
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ===================================================================== GQA
+def init_gqa(key, cfg, dtype):
+    H, Kv, Dh, D = (cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim, cfg.d_model)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": truncated_normal_init(k1, (D, H, Dh), 1.0, dtype),
+        "wk": truncated_normal_init(k2, (D, Kv, Dh), 1.0, dtype),
+        "wv": truncated_normal_init(k3, (D, Kv, Dh), 1.0, dtype),
+        "wo": truncated_normal_init(k4, (H, Dh, D), 1.0, dtype),
+    }
+
+
+def make_kv_cache(cfg, batch, cache_len, dtype):
+    Kv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.attention_type == "mla":
+        d = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        return {
+            "k": jnp.zeros((batch, cache_len, 1, d), dtype),
+            "pos": jnp.full((cache_len,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, cache_len, Kv, Dh), dtype),
+        "v": jnp.zeros((batch, cache_len, Kv, Dh), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def _cache_write(cache, k_new, v_new, positions):
+    """Cache write: ring-buffer for single-step decode (S==1), contiguous
+    slab write for prefill (S>1, requires cache_len >= positions[-1]+1)."""
+    C = cache["k"].shape[1]
+    S = k_new.shape[1]
+    slot = jnp.mod(positions[0], C) if S == 1 else positions[0]
+    out = dict(cache)
+    out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
+    if v_new is not None:
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions.astype(jnp.int32), slot, 0)
+    return out
+
+
+def apply_gqa(params, x, *, cfg, positions, window=None, cache=None,
+              kv_override=None, causal=True, softcap=None, chunk=1024):
+    """x: (B, S, D). Returns (y, new_cache).
+
+    Modes: train/prefill (cache None), decode (cache dict, S==1),
+    cross-attention (kv_override=(k, v, k_positions), causal=False).
+    """
+    B, S, D = x.shape
+    H, Kv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // Kv
+    softcap = cfg.attn_logit_softcap if softcap is None else softcap
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.use_rope and kv_override is None:
+        q = apply_rope(q, positions[None, :], cfg.rope_theta)
+
+    new_cache = cache
+    if kv_override is not None:
+        k, v, k_positions = kv_override
+    elif cache is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if cfg.use_rope:
+            k = apply_rope(k, positions[None, :], cfg.rope_theta)
+        k_positions = positions
+    else:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if cfg.use_rope:
+            k_new = apply_rope(k_new, positions[None, :], cfg.rope_theta)
+        new_cache = _cache_write(cache, k_new, v_new, positions)
+        k, v, k_positions = new_cache["k"], new_cache["v"], new_cache["pos"]
+
+    qg = q.reshape(B, S, Kv, G, Dh)
+    out = flash_attention(
+        qg, k, v, q_positions=positions, k_positions=k_positions,
+        causal=causal, window=window, softcap=softcap, chunk=chunk,
+        chunk_remat=cfg.flash_chunk_remat and cache is None)
+    out = out.reshape(B, S, H, Dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+# ===================================================================== MLA
+def init_mla(key, cfg, dtype):
+    D, H = cfg.d_model, cfg.num_heads
+    R, Rq = cfg.kv_lora_rank, cfg.q_lora_rank
+    Dn, Dr, Dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": truncated_normal_init(ks[0], (D, R), 1.0, dtype),
+        "w_krope": truncated_normal_init(ks[1], (D, Dr), 1.0, dtype),
+        "w_uk": truncated_normal_init(ks[2], (R, H, Dn), 1.0, dtype),
+        "w_uv": truncated_normal_init(ks[3], (R, H, Dv), 1.0, dtype),
+        "wo": truncated_normal_init(ks[4], (H, Dv, D), 1.0, dtype),
+        "kv_norm_scale": jnp.zeros((R,), dtype),
+    }
+    if Rq:
+        p["w_dq"] = truncated_normal_init(ks[5], (D, Rq), 1.0, dtype)
+        p["w_uq"] = truncated_normal_init(ks[6], (Rq, H, Dn + Dr), 1.0, dtype)
+        p["q_norm_scale"] = jnp.zeros((Rq,), dtype)
+    else:
+        p["wq"] = truncated_normal_init(ks[5], (D, H, Dn + Dr), 1.0, dtype)
+    return p
+
+
+def _mla_latent(params, x, cfg, positions):
+    """Compressed latent + rope key for new tokens: (B,S,1,R+Dr)."""
+    R = cfg.kv_lora_rank
+    ckv = x @ params["w_dkv"]
+    ckv = apply_norm({"scale": params["kv_norm_scale"]}, ckv)
+    krope = (x @ params["w_krope"])[:, :, None, :]           # (B,S,1,Dr)
+    krope = apply_rope(krope, positions[None, :], cfg.rope_theta)
+    return jnp.concatenate([ckv[:, :, None, :], krope], axis=-1)
+
+
+def apply_mla(params, x, *, cfg, positions, window=None, cache=None,
+              chunk=1024):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    R, Dn, Dr, Dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+
+    if cfg.q_lora_rank:
+        cq = x @ params["w_dq"]
+        cq = apply_norm({"scale": params["q_norm_scale"]}, cq)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., :Dn], q[..., Dn:]
+    q_rope = apply_rope(q_rope, positions[None, :], cfg.rope_theta)
+    # absorb W_UK into the query -> queries live in latent space
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, params["w_uk"])
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)        # (B,S,H,R+Dr)
+
+    k_new = _mla_latent(params, x, cfg, positions)           # (B,S,1,R+Dr)
+    new_cache = cache
+    if cache is None:
+        k_eff, k_positions = k_new, positions
+    else:
+        new_cache = _cache_write(cache, k_new, None, positions)
+        k_eff, k_positions = new_cache["k"], new_cache["pos"]
+    v_eff = k_eff[..., :R]                                    # latent is V
+
+    qg = q_eff.reshape(B, S, 1, H, R + Dr)
+    scale = 1.0 / np.sqrt(Dn + Dr)
+    o = flash_attention(
+        qg, k_eff, v_eff, q_positions=positions, k_positions=k_positions,
+        causal=True, window=window, softcap=cfg.attn_logit_softcap,
+        chunk=chunk, scale=scale,
+        chunk_remat=cfg.flash_chunk_remat and cache is None)  # (B,S,1,H,R)
+    o = o.reshape(B, S, H, R)
+    o = jnp.einsum("bshr,rhv->bshv", o, params["w_uv"])
+    y = jnp.einsum("bshv,hvd->bsd", o, params["wo"])
+    return y, new_cache
+
+
+def init_attention(key, cfg, dtype):
+    if cfg.attention_type == "mla":
+        return init_mla(key, cfg, dtype)
+    return init_gqa(key, cfg, dtype)
+
+
+def apply_attention(params, x, *, cfg, positions, window=None, cache=None,
+                    kv_override=None, causal=True, chunk=1024):
+    if cfg.attention_type == "mla":
+        return apply_mla(params, x, cfg=cfg, positions=positions,
+                         window=window, cache=cache, chunk=chunk)
+    return apply_gqa(params, x, cfg=cfg, positions=positions, window=window,
+                     cache=cache, kv_override=kv_override, causal=causal,
+                     chunk=chunk)

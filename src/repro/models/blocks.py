@@ -1,0 +1,149 @@
+"""Decoder/encoder block variants assembled from attention/MoE/SSM parts.
+
+All block types share one apply signature so the model can ``lax.scan``
+over a layer-stacked param pytree:
+
+    apply_block(params, x, cfg=..., block_type=..., positions=...,
+                window=..., cache=..., enc_out=...)
+      -> (x_out, new_cache, aux_loss)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (init_attention, apply_attention,
+                                    init_gqa, apply_gqa, make_kv_cache)
+from repro.models.layers import (init_norm, apply_norm, init_mlp, apply_mlp)
+from repro.models.moe import init_moe, apply_moe
+from repro.models.ssm import init_mamba2, apply_mamba2, make_ssm_cache
+
+BLOCK_TYPES = ("dense", "moe", "mamba", "hybrid", "encoder", "cross")
+
+
+def init_block(key, cfg, block_type, dtype):
+    ks = iter(jax.random.split(key, 12))
+    p = {}
+    if block_type != "mamba":
+        p["ln1"] = init_norm(cfg, dtype)
+        p["attn"] = init_attention(next(ks), cfg, dtype)
+        if cfg.use_post_norm:
+            p["ln1_post"] = init_norm(cfg, dtype)
+    if block_type == "mamba":
+        p["ln1"] = init_norm(cfg, dtype)
+        p["mamba"] = init_mamba2(next(ks), cfg, dtype)
+    if block_type == "hybrid":
+        p["mamba"] = init_mamba2(next(ks), cfg, dtype)
+        p["attn_out_scale"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ssm_out_scale"] = jnp.zeros((cfg.d_model,), dtype)
+    if block_type == "cross":
+        p["ln_x"] = init_norm(cfg, dtype)
+        p["xattn"] = init_gqa(next(ks), cfg, dtype)
+    if block_type in ("dense", "hybrid", "encoder", "cross"):
+        p["ln2"] = init_norm(cfg, dtype)
+        p["mlp"] = init_mlp(next(ks), cfg, dtype)
+        if cfg.use_post_norm:
+            p["ln2_post"] = init_norm(cfg, dtype)
+    if block_type == "moe":
+        p["ln2"] = init_norm(cfg, dtype)
+        p["moe"] = init_moe(next(ks), cfg, dtype)
+    return p
+
+
+def make_block_cache(cfg, block_type, batch, cache_len, dtype,
+                     enc_len: int = 0):
+    """Decode-time cache skeleton for one layer."""
+    c = {}
+    if block_type in ("dense", "moe", "cross"):
+        c["attn"] = make_kv_cache(cfg, batch, cache_len, dtype)
+    if block_type == "hybrid":
+        c["attn"] = make_kv_cache(cfg, batch, cache_len, dtype)
+        c["ssm"] = make_ssm_cache(cfg, batch, dtype)
+    if block_type == "mamba":
+        c["ssm"] = make_ssm_cache(cfg, batch, dtype)
+    if block_type == "cross":
+        Kv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        c["cross_k"] = jnp.zeros((batch, enc_len, Kv, Dh), dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, Kv, Dh), dtype)
+    return c
+
+
+def _norm(p, x, cfg):
+    return apply_norm(p, x, cfg.norm)
+
+
+def apply_block(params, x, *, cfg, block_type, positions, window=None,
+                cache=None, enc_out=None, chunk=1024):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+
+    # ---------------- attention / mamba / hybrid sublayer -----------------
+    if block_type == "mamba":
+        h = _norm(params["ln1"], x, cfg)
+        y, ssm_cache = apply_mamba2(
+            params["mamba"], h, cfg,
+            cache=None if cache is None else cache["ssm"])
+        if new_cache is not None:
+            new_cache["ssm"] = ssm_cache
+        x = x + y
+    elif block_type == "hybrid":
+        h = _norm(params["ln1"], x, cfg)
+        y_attn, attn_cache = apply_attention(
+            params["attn"], h, cfg=cfg, positions=positions, window=window,
+            cache=None if cache is None else cache["attn"], chunk=chunk)
+        y_ssm, ssm_cache = apply_mamba2(
+            params["mamba"], h, cfg,
+            cache=None if cache is None else cache["ssm"])
+        # Hymba: per-channel normalized mean of the two heads' outputs
+        y = 0.5 * (apply_norm({"scale": params["attn_out_scale"]}, y_attn)
+                   + apply_norm({"scale": params["ssm_out_scale"]}, y_ssm))
+        if new_cache is not None:
+            new_cache["attn"] = attn_cache
+            new_cache["ssm"] = ssm_cache
+        x = x + y
+    else:
+        h = _norm(params["ln1"], x, cfg)
+        causal = block_type != "encoder"
+        y, attn_cache = apply_attention(
+            params["attn"], h, cfg=cfg, positions=positions, window=window,
+            cache=None if cache is None else cache.get("attn"),
+            causal=causal, chunk=chunk)
+        if cfg.use_post_norm:
+            y = _norm(params["ln1_post"], y, cfg)
+        if new_cache is not None and "attn" in new_cache:
+            new_cache["attn"] = attn_cache
+        x = x + y
+
+    # ---------------- cross attention (whisper decoder) --------------------
+    if block_type == "cross":
+        h = _norm(params["ln_x"], x, cfg)
+        if enc_out is not None:  # train / prefill: (re)compute cross kv
+            ck = jnp.einsum("btd,dhk->bthk", enc_out, params["xattn"]["wk"])
+            cv = jnp.einsum("btd,dhk->bthk", enc_out, params["xattn"]["wv"])
+            if new_cache is not None:
+                new_cache["cross_k"], new_cache["cross_v"] = ck, cv
+        else:
+            ck, cv = cache["cross_k"], cache["cross_v"]
+        kpos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        y, _ = apply_gqa(params["xattn"], h, cfg=cfg, positions=positions,
+                         kv_override=(ck, cv, kpos), causal=False,
+                         chunk=chunk)
+        x = x + y
+
+    # ---------------- FFN sublayer -----------------------------------------
+    if block_type == "moe":
+        h = _norm(params["ln2"], x, cfg)
+        # decode batches are tiny and sparse over experts: widen capacity
+        # so serving never drops tokens (train keeps the config factor)
+        cf = (max(cfg.moe_capacity_factor, 4.0) if cache is not None
+              else cfg.moe_capacity_factor)
+        y, aux = apply_moe(params["moe"], h, cfg, capacity_factor=cf)
+        x = x + y
+    elif block_type in ("dense", "hybrid", "encoder", "cross"):
+        h = _norm(params["ln2"], x, cfg)
+        y = apply_mlp(params["mlp"], h, cfg.activation)
+        if cfg.use_post_norm:
+            y = _norm(params["ln2_post"], y, cfg)
+        x = x + y
+
+    return x, new_cache, aux

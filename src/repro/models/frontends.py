@@ -1,0 +1,37 @@
+"""STUB modality frontends (assignment carve-out).
+
+[audio]/[vlm] architectures get the transformer backbone only; the
+modality encoder (mel-spectrogram + conv codec, ViT/CLIP) is replaced by
+precomputed embeddings of the correct shape. These helpers produce those
+embeddings (for smoke tests) and their ShapeDtypeStructs (for the
+dry-run's ``input_specs``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frame_embeddings(key, batch, cfg, dtype=None):
+    """Stand-in for mel + conv1d x2 + GELU: (B, encoder_seq, d_model)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.encoder_seq, cfg.d_model)).astype(dtype)
+
+
+def vision_patch_embeddings(key, batch, cfg, dtype=None):
+    """Stand-in for CLIP-ViT patches + projector: (B, P, d_model)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.num_prefix_tokens, cfg.d_model)).astype(dtype)
+
+
+def audio_frame_spec(batch, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), dtype)
+
+
+def vision_patch_spec(batch, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.num_prefix_tokens, cfg.d_model), dtype)

@@ -1,0 +1,191 @@
+"""Basic neural-net layers as pure functions over param pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(cfg, dtype):
+    p = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(params, x, kind="rmsnorm", eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "layernorm":
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # zero-centered scale (gemma convention: stored scale is (gamma - 1))
+    x = x * (1.0 + params["scale"].astype(jnp.float32))
+    if "bias" in params:
+        x = x + params["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+def rmsnorm_gated(scale, x, z, eps=1e-6):
+    """Mamba-2 gated RMSNorm: rmsnorm(x * silu(z)) * (1 + scale)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return x.astype(dt)
+
+
+# ---------------------------------------------------------------- MLP
+def init_mlp(key, cfg, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": truncated_normal_init(k1, (cfg.d_model, d_ff), 1.0, dtype),
+            "w_up": truncated_normal_init(k2, (cfg.d_model, d_ff), 1.0, dtype),
+            "w_down": truncated_normal_init(k3, (d_ff, cfg.d_model), 1.0, dtype),
+        }
+    return {
+        "w_up": truncated_normal_init(k1, (cfg.d_model, d_ff), 1.0, dtype),
+        "w_down": truncated_normal_init(k2, (d_ff, cfg.d_model), 1.0, dtype),
+    }
+
+
+def apply_mlp(params, x, activation="swiglu"):
+    up = x @ params["w_up"]
+    if activation in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"]
+        act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+        h = act(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------- embed
+def init_embedding(key, cfg, dtype):
+    # std 1/sqrt(d_model): embed_tokens' sqrt(d) scaling then gives unit-rms
+    # activations, and tied-unembed logits stay O(1) at init.
+    std = 1.0 / np.sqrt(cfg.d_model)
+    emb = (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (cfg.padded_vocab, cfg.d_model))).astype(dtype)
+    return {"embedding": emb}
+
+
+def embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    # gemma-style sqrt(d) scaling keeps tied embeddings well-conditioned
+    return x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+
+
+def unembed(params_embed, params_head, x, cfg):
+    if cfg.tie_embeddings:
+        logits = x @ params_embed["embedding"].T
+    else:
+        logits = x @ params_head["w_out"]
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def init_unembed(key, cfg, dtype):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w_out": truncated_normal_init(
+        key, (cfg.d_model, cfg.padded_vocab), 1.0, dtype)}
+
+
+# ---------------------------------------------------------------- positions
+def sinusoidal_positions(seq_len, d_model, offset=0):
+    """Classic transformer sin/cos absolute positions (whisper backbone)."""
+    pos = np.arange(offset, offset + seq_len)[:, None].astype(np.float32)
+    dim = np.arange(0, d_model, 2)[None, :].astype(np.float32)
+    angle = pos / np.power(10000.0, dim / d_model)
+    out = np.zeros((seq_len, d_model), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)
+
+
+def sinusoidal_positions_dynamic(positions, d_model):
+    """Same, but for traced integer positions (decode step)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    return jnp.concatenate(
+        [jnp.sin(angle), jnp.cos(angle)], axis=-1
+    ).reshape(*positions.shape, d_model)
+
+
+def chunked_cross_entropy(x, table, labels, cfg):
+    """CE over vocab chunks without materializing (tokens, vocab) logits.
+
+    x: (B, S, D) final-normed hidden; table: (padded_vocab, D) unembed
+    rows (embedding for tied models, w_out.T otherwise); labels: (B, S).
+    Each chunk's logits are recomputed in the backward pass
+    (jax.checkpoint), so peak memory is O(tokens * vocab/chunks).
+    """
+    B, S, D = x.shape
+    T = B * S
+    nc = cfg.loss_vocab_chunks
+    Vp = cfg.padded_vocab
+    assert Vp % nc == 0, (Vp, nc)
+    C = Vp // nc
+    xt = x.reshape(T, D)
+    lab = labels.reshape(T)
+    chunks = table.reshape(nc, C, D)
+
+    def step(carry, xs):
+        m, s, gold = carry
+        idx, chunk = xs                                   # (), (C, D)
+        logits = jnp.einsum("td,cd->tc", xt, chunk,
+                            preferred_element_type=jnp.float32)  # (T, C)
+        if cfg.final_logit_softcap:
+            c = cfg.final_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        gidx = idx * C + jnp.arange(C)                    # global vocab ids
+        logits = jnp.where(gidx[None, :] < cfg.vocab_size, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[:, None]).sum(-1)
+        local = lab - idx * C
+        in_chunk = (local >= 0) & (local < C)
+        g = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, C - 1)[:, None], axis=1)[:, 0]
+        gold = jnp.where(in_chunk, g, gold)
+        return (m_new, s, gold), None
+
+    init = (jnp.full((T,), -1e30, jnp.float32),
+            jnp.zeros((T,), jnp.float32),
+            jnp.full((T,), -1e30, jnp.float32))
+    (m, s, gold), _ = jax.lax.scan(
+        jax.checkpoint(step), init,
+        (jnp.arange(nc), chunks))
+    logz = m + jnp.log(jnp.maximum(s, 1e-30))
+    mask = (lab >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def cross_entropy_loss(logits, labels, vocab_size):
+    """Next-token CE in fp32; ignores label==-1 and padded vocab tail."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.clip(labels, 0, vocab_size - 1)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

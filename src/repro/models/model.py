@@ -1,0 +1,289 @@
+"""Model assembly: layer groups + lax.scan over stacked layer params.
+
+A model is a sequence of *layer groups*; each group is a homogeneous
+stack of blocks scanned with ``lax.scan`` (keeps HLO size O(1) in depth —
+required to compile 61-layer / 1T-param configs quickly). Per-layer
+heterogeneity (gemma2 local/global windows, hymba global layers) is
+carried as a scanned int32 window array instead of branching in Python.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.blocks import init_block, apply_block, make_block_cache
+
+
+# ----------------------------------------------------------- group layout
+def layer_groups(cfg: ModelConfig, long_context: bool = False):
+    """Static group descriptors: (name, block_type, n_layers, windows)."""
+    win = cfg.layer_windows(0, long_context=long_context)
+    if cfg.family in ("dense", "vlm"):
+        return [("blocks0", "dense", cfg.num_layers, win)]
+    if cfg.family == "moe":
+        fd = cfg.first_dense_layers
+        groups = []
+        if fd:
+            groups.append(("blocks0", "dense", fd, win[:fd]))
+        groups.append(("blocks1", "moe", cfg.num_layers - fd, win[fd:]))
+        return groups
+    if cfg.family == "ssm":
+        return [("blocks0", "mamba", cfg.num_layers,
+                 [0] * cfg.num_layers)]
+    if cfg.family == "hybrid":
+        return [("blocks0", "hybrid", cfg.num_layers, win)]
+    if cfg.family == "audio":
+        return [("blocks0", "cross", cfg.num_layers,
+                 [0] * cfg.num_layers)]
+    raise ValueError(cfg.family)
+
+
+def _moe_dense_cfg(cfg):
+    """Dense-FFN stand-in config for a MoE model's leading dense layers."""
+    import dataclasses
+    return dataclasses.replace(cfg, num_experts=0)
+
+
+def _group_cfg(cfg, block_type):
+    return _moe_dense_cfg(cfg) if (cfg.family == "moe"
+                                   and block_type == "dense") else cfg
+
+
+# ----------------------------------------------------------- init
+def init_params(key, cfg: ModelConfig, long_context: bool = False):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8 + len(layer_groups(cfg)))
+    ki = iter(keys)
+    params = {"embed": L.init_embedding(next(ki), cfg, dtype)}
+    params["final_norm"] = L.init_norm(cfg, dtype)
+    params["head"] = L.init_unembed(next(ki), cfg, dtype)
+
+    for name, btype, n, _ in layer_groups(cfg, long_context):
+        gcfg = _group_cfg(cfg, btype)
+        sub = jax.random.split(next(ki), n)
+        params[name] = jax.vmap(
+            lambda k: init_block(k, gcfg, btype, dtype))(sub)
+
+    if cfg.is_encdec:
+        sub = jax.random.split(next(ki), cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: init_block(k, cfg, "encoder", dtype))(sub)
+        params["enc_norm"] = L.init_norm(cfg, dtype)
+
+    if cfg.use_mtp:
+        gcfg = cfg
+        params["mtp"] = {
+            "proj": L.truncated_normal_init(
+                next(ki), (2 * cfg.d_model, cfg.d_model), 1.0, dtype),
+            "norm_h": L.init_norm(cfg, dtype),
+            "norm_e": L.init_norm(cfg, dtype),
+            "block": init_block(next(ki), gcfg, "moe", dtype),
+        }
+    return params
+
+
+# ----------------------------------------------------------- scan driver
+def _scan_group(params_stack, x, *, cfg, block_type, windows, positions,
+                caches=None, enc_out=None, chunk=1024, remat=False):
+    """Scan a homogeneous block stack. Returns (x, new_caches, aux_sum)."""
+    gcfg = _group_cfg(cfg, block_type)
+    win_arr = jnp.asarray(windows, jnp.int32)
+
+    def body(x, per_layer):
+        p_l, w_l, cache_l = per_layer
+        x, new_cache, aux = apply_block(
+            p_l, x, cfg=gcfg, block_type=block_type, positions=positions,
+            window=w_l, cache=cache_l, enc_out=enc_out, chunk=chunk)
+        return x, (new_cache, aux)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    xs = (params_stack, win_arr, caches)
+    n_layers = win_arr.shape[0]
+    x, (new_caches, auxes) = jax.lax.scan(
+        body, x, xs, unroll=min(cfg.scan_unroll, n_layers))
+    return x, new_caches, auxes.sum()
+
+
+def _positions(offset, length):
+    return offset + jnp.arange(length, dtype=jnp.int32)
+
+
+# ----------------------------------------------------------- forward
+def encode_audio(params, frames, cfg, chunk=1024):
+    """Whisper encoder over stub frame embeddings (B, T_enc, D)."""
+    T = frames.shape[1]
+    x = frames + L.sinusoidal_positions(T, cfg.d_model)[None].astype(
+        frames.dtype)
+    pos = _positions(0, T)
+    x, _, _ = _scan_group(
+        params["encoder"], x, cfg=cfg, block_type="encoder",
+        windows=[0] * cfg.encoder_layers, positions=pos, chunk=chunk,
+        remat=cfg.remat)
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def embed_inputs(params, tokens, cfg, *, prefix_embeds=None, offset=0):
+    """Token embedding (+ optional vision prefix, + abs positions)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if not cfg.use_rope:  # whisper-style absolute sinusoidal positions
+        x = x + L.sinusoidal_positions(
+            x.shape[1], cfg.d_model, offset)[None].astype(x.dtype)
+    return x
+
+
+def _constrain(x, cfg):
+    """Beyond-paper lever: pin block activations to the batch axes."""
+    if cfg.shard_activations:
+        from jax.sharding import PartitionSpec as P
+        spec = P(tuple(cfg.shard_activations), *((None,) * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, *, prefix_embeds=None,
+            enc_frames=None, long_context=False, chunk=1024,
+            caches=None, offset=0, return_hidden=False):
+    """Full-sequence forward. Returns (logits, new_caches, aux_loss).
+
+    ``caches`` non-None => prefill (cache written for later decode).
+    ``return_hidden`` => first element is the final-normed hidden state
+    instead of logits (chunked-loss path).
+    """
+    x = embed_inputs(params, tokens, cfg, prefix_embeds=prefix_embeds,
+                     offset=offset)
+    x = _constrain(x.astype(jnp.dtype(cfg.dtype)), cfg)
+    S = x.shape[1]
+    pos = _positions(offset, S)
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode_audio(params, enc_frames, cfg, chunk)
+
+    new_caches = {} if caches is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+    for name, btype, n, windows in layer_groups(cfg, long_context):
+        g_caches = caches.get(name) if caches is not None else None
+        x, g_new, aux = _scan_group(
+            params[name], x, cfg=cfg, block_type=btype, windows=windows,
+            positions=pos, caches=g_caches, enc_out=enc_out, chunk=chunk,
+            remat=cfg.remat and caches is None)
+        x = _constrain(x, cfg)
+        if new_caches is not None:
+            new_caches[name] = g_new
+        aux_total = aux_total + aux
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, new_caches, aux_total
+    logits = L.unembed(params["embed"], params.get("head"), x, cfg)
+    return logits, new_caches, aux_total
+
+
+# ----------------------------------------------------------- loss / train
+def compute_loss(params, batch, cfg: ModelConfig, long_context=False,
+                 chunk=1024):
+    """Next-token CE (+ router aux, + MTP) for one local training batch."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    prefix = batch.get("patches")
+    frames = batch.get("frames")
+
+    if cfg.loss_vocab_chunks > 1:
+        hidden, _, aux = forward(
+            params, inputs, cfg, prefix_embeds=prefix, enc_frames=frames,
+            long_context=long_context, chunk=chunk, return_hidden=True)
+        if prefix is not None:
+            hidden = hidden[:, prefix.shape[1]:]
+        table = (params["embed"]["embedding"] if cfg.tie_embeddings
+                 else params["head"]["w_out"].T)
+        loss = L.chunked_cross_entropy(hidden, table, labels, cfg)
+    else:
+        logits, _, aux = forward(
+            params, inputs, cfg, prefix_embeds=prefix, enc_frames=frames,
+            long_context=long_context, chunk=chunk)
+        if prefix is not None:
+            # vision prefix positions produce logits too; only text scored
+            logits = logits[:, prefix.shape[1]:]
+        loss = L.cross_entropy_loss(logits, labels, cfg.vocab_size)
+
+    if cfg.use_mtp and prefix is None and frames is None:
+        # DeepSeek-V3 multi-token prediction: one extra block predicting
+        # token t+2 from (h_t, emb_{t+1}).
+        lam = 0.3
+        loss = loss + lam * _mtp_loss(params, inputs, labels, cfg, chunk)
+    return loss + aux
+
+
+def _mtp_loss(params, inputs, labels, cfg, chunk):
+    # re-embed; cheap relative to the main forward at dry-run scale
+    x = L.embed_tokens(params["embed"], inputs, cfg).astype(
+        jnp.dtype(cfg.dtype))
+    emb_next = jnp.concatenate(
+        [x[:, 1:], jnp.zeros_like(x[:, :1])], axis=1)
+    h = L.apply_norm(params["mtp"]["norm_h"], x, cfg.norm)
+    e = L.apply_norm(params["mtp"]["norm_e"], emb_next, cfg.norm)
+    z = jnp.concatenate([h, e], axis=-1) @ params["mtp"]["proj"]
+    pos = _positions(0, z.shape[1])
+    z, _, aux = apply_block(
+        params["mtp"]["block"], z, cfg=cfg, block_type="moe",
+        positions=pos, window=jnp.int32(0), chunk=chunk)
+    logits2 = L.unembed(params["embed"], params.get("head"),
+                        L.apply_norm(params["final_norm"], z, cfg.norm), cfg)
+    labels2 = jnp.concatenate(
+        [labels[:, 1:], -jnp.ones_like(labels[:, :1])], axis=1)
+    return L.cross_entropy_loss(logits2, labels2, cfg.vocab_size) + aux
+
+
+# ----------------------------------------------------------- decode
+def make_caches(cfg: ModelConfig, batch, cache_len, *, long_context=False,
+                dtype=None, enc_len=None):
+    """Layer-stacked decode caches for every group (+ cross kv)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    enc_len = enc_len if enc_len is not None else (
+        cfg.encoder_seq if cfg.is_encdec else 0)
+    caches = {}
+    for name, btype, n, windows in layer_groups(cfg, long_context):
+        skel = make_block_cache(cfg, btype, batch, cache_len, dtype,
+                                enc_len=enc_len)
+        caches[name] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), skel)
+    return caches
+
+
+def decode_step(params, caches, token, index, cfg: ModelConfig, *,
+                long_context=False, chunk=1024):
+    """One-token decode. token: (B,) int32; index: () int32 absolute pos.
+
+    Returns (logits (B, V), new_caches).
+    """
+    x = L.embed_tokens(params["embed"], token[:, None], cfg)
+    if not cfg.use_rope:
+        x = x + L.sinusoidal_positions_dynamic(
+            index[None].astype(jnp.int32), cfg.d_model)[None].astype(x.dtype)
+    x = x.astype(jnp.dtype(cfg.dtype))
+    pos = index[None].astype(jnp.int32)
+
+    new_caches = {}
+    for name, btype, n, windows in layer_groups(cfg, long_context):
+        x, g_new, _ = _scan_group(
+            params[name], x, cfg=cfg, block_type=btype, windows=windows,
+            positions=pos, caches=caches[name], chunk=chunk, remat=False)
+        new_caches[name] = g_new
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed(params["embed"], params.get("head"), x, cfg)
+    return logits[:, 0], new_caches
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

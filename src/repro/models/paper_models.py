@@ -1,0 +1,95 @@
+"""The paper's own evaluation models (Sec. IV-A2).
+
+MLP: d_input x 200 x 10 (one 200-node hidden layer).
+CNN: conv 5x5x128 -> pool -> conv 5x5x256 -> pool -> fc -> 10, with the
+paper's channel counts (128, 256) and a 10-way classifier head.
+
+Both are pure-JAX (init, apply) pairs over param dicts; the FL core is
+model-agnostic and treats each weight tensor as one "layer" for the
+Eq. 2 priority product.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, shape, dtype=jnp.float32):
+    std = 1.0 / np.sqrt(shape[0])
+    return jax.random.uniform(key, shape, dtype, -std, std)
+
+
+# ------------------------------------------------------------------ MLP
+def init_mlp(key, d_input=784, d_hidden=200, n_classes=10):
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": {"w": _dense_init(k1, (d_input, d_hidden)),
+                "b": jnp.zeros((d_hidden,))},
+        "fc2": {"w": _dense_init(k2, (d_hidden, n_classes)),
+                "b": jnp.zeros((n_classes,))},
+    }
+
+
+def apply_mlp(params, x):
+    """x: (B, ...) flattened internally -> logits (B, 10)."""
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# ------------------------------------------------------------------ CNN
+def init_cnn(key, in_channels=1, image_size=28, n_classes=10):
+    k1, k2, k3 = jax.random.split(key, 3)
+    # paper: 5x5 kernels, 128 then 256 channels, fc head
+    s = image_size // 4  # two 2x2 max-pools
+    d_flat = 256 * s * s
+    return {
+        "conv1": {"w": 0.05 * jax.random.normal(k1, (5, 5, in_channels, 128)),
+                  "b": jnp.zeros((128,))},
+        "conv2": {"w": 0.05 * jax.random.normal(k2, (5, 5, 128, 256)),
+                  "b": jnp.zeros((256,))},
+        "fc": {"w": _dense_init(k3, (d_flat, n_classes)),
+               "b": jnp.zeros((n_classes,))},
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply_cnn(params, x):
+    """x: (B, H, W, C) -> logits (B, 10)."""
+    if x.ndim == 2:  # flattened input
+        side = int(np.sqrt(x.shape[-1]))
+        x = x.reshape(x.shape[0], side, side, 1)
+    x = _maxpool2(_conv(x, params["conv1"]["w"], params["conv1"]["b"]))
+    x = _maxpool2(_conv(x, params["conv2"]["w"], params["conv2"]["b"]))
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def get_paper_model(name: str, dataset: str = "fashion"):
+    """Returns (init_fn(key), apply_fn(params, x)) for 'mlp' | 'cnn'."""
+    if dataset == "fashion":
+        d_input, channels, size = 784, 1, 28
+    elif dataset == "cifar":
+        d_input, channels, size = 3072, 3, 32
+    else:
+        raise ValueError(dataset)
+    if name == "mlp":
+        return functools.partial(init_mlp, d_input=d_input), apply_mlp
+    if name == "cnn":
+        return (functools.partial(init_cnn, in_channels=channels,
+                                  image_size=size), apply_cnn)
+    raise ValueError(name)

@@ -1,0 +1,189 @@
+"""Mamba-2 block via SSD (state-space duality), chunked form.
+[arXiv:2405.21060]
+
+The SSD algorithm splits the sequence into chunks: within a chunk the
+recurrence is computed in its dual quadratic-attention form (MXU
+friendly); across chunks a linear recurrence over per-chunk states is
+scanned. Single-token decode keeps (conv_state, ssm_state) and costs
+O(heads * head_dim * state) per step — this is what makes long_500k
+native for the SSM family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import truncated_normal_init, rmsnorm_gated
+
+NEG_INF = -1e30
+
+
+def init_mamba2(key, cfg, dtype):
+    D = cfg.d_model
+    Din = cfg.ssm_d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    conv_ch = Din + 2 * N
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (Din), x (Din), B (N), C (N), dt (H)]
+    return {
+        "in_proj": truncated_normal_init(
+            ks[0], (D, 2 * Din + 2 * N + H), 1.0, dtype),
+        "conv_w": truncated_normal_init(ks[1], (W, conv_ch), 1.0, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.zeros((Din,), dtype),
+        "out_proj": truncated_normal_init(ks[2], (Din, D), 1.0, dtype),
+    }
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) lower-triangular segment sums."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(X, dtA, Bm, Cm, chunk, initial_state=None):
+    """Chunked SSD scan.
+
+    X: (b, s, h, p)  values            dtA: (b, s, h)  log-decay (<=0)
+    Bm/Cm: (b, s, n) input/output maps (ngroups=1, shared across heads)
+    Returns y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = X.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+
+    Xc = X.reshape(b, c, chunk, h, p)
+    Ac = dtA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)    # (b,h,c,l)
+    Bc = Bm.reshape(b, c, chunk, n)
+    Cc = Cm.reshape(b, c, chunk, n)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)                           # (b,h,c,l)
+    L = jnp.exp(_segsum(Ac))                                  # (b,h,c,l,l)
+
+    # intra-chunk (dual quadratic form)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, Xc)
+
+    # per-chunk input states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)           # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, Xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1])                     # (b,h,c)
+    init = (jnp.zeros((b, h, p, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+
+    def scan_fn(prev, xs):
+        st, dec = xs                                          # (b,h,p,n),(b,h)
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,c,h,p,n)
+
+    # chunk-start state contribution
+    state_decay = jnp.exp(A_cum)                              # (b,h,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc,
+                       prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def make_ssm_cache(cfg, batch, dtype):
+    Din, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                    cfg.ssm_head_dim)
+    W = cfg.ssm_conv_width
+    return {
+        "conv": jnp.zeros((batch, W - 1, Din + 2 * N), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W. xbc: (B,S,C)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                  # (B,S+W-1,C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(W))
+    new_state = xp[:, -(W - 1):, :]
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def apply_mamba2(params, x, cfg, cache=None):
+    """x: (B, S, D). cache: {'conv','state'} for S==1 decode."""
+    B, S, D = x.shape
+    Din, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                    cfg.ssm_head_dim)
+
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :Din]
+    xbc = zxbcdt[..., Din:2 * Din + 2 * N]
+    dt_raw = zxbcdt[..., -H:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])          # (B,S,H)
+    A = -jnp.exp(params["A_log"])                             # (H,) < 0
+
+    new_cache = cache
+    if cache is None:
+        xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    else:
+        xbc, conv_state = _causal_conv(
+            xbc, params["conv_w"], params["conv_b"], cache["conv"])
+
+    xin = xbc[..., :Din].reshape(B, S, H, P)
+    Bm = xbc[..., Din:Din + N]
+    Cm = xbc[..., Din + N:]
+
+    if cache is None or S > 1:
+        # pad sequence to a chunk multiple for the SSD scan
+        chunk = min(cfg.ssm_chunk, max(1, S))
+        pad = (-S) % chunk
+        if pad:
+            xin_p = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xin_p, dt_p, Bm_p, Cm_p = xin, dt, Bm, Cm
+        dtA = dt_p * A[None, None, :]                         # (B,S',H)
+        init_state = None if cache is None else cache["state"]
+        y, final_state = ssd_chunked(
+            xin_p * dt_p[..., None], dtA, Bm_p, Cm_p, chunk,
+            initial_state=init_state)
+        y = y[:, :S]
+        if cache is not None:  # prefill continuing into decode
+            new_cache = {"conv": conv_state, "state": final_state}
+    else:
+        # single-step recurrence
+        st = cache["state"]                                   # (B,H,P,N)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                   # (B,H)
+        dBx = jnp.einsum("bhp,bn,bh->bhpn", xin[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32), dt[:, 0])
+        st_new = st * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", st_new,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"conv": conv_state, "state": st_new}
+        final_state = st_new
+
+    y = y + xin.astype(jnp.float32) * params["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, Din).astype(x.dtype)
+    y = rmsnorm_gated(params["norm_scale"], y, z)
+    return y @ params["out_proj"], new_cache

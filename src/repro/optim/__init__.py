@@ -1,0 +1,4 @@
+"""Pure-JAX pytree optimizers (no optax dependency)."""
+from repro.optim.sgd import sgd_update, sgd_momentum_init, sgd_momentum_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedules import constant_lr, cosine_lr, warmup_cosine_lr

@@ -1,0 +1,24 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(lr, total_steps, final_frac=0.1):
+    def sched(step):
+        frac = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return sched
+
+
+def warmup_cosine_lr(lr, warmup_steps, total_steps, final_frac=0.1):
+    cos = cosine_lr(lr, max(1, total_steps - warmup_steps), final_frac)
+    def sched(step):
+        warm = lr * step / max(1, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return sched

@@ -1,0 +1,28 @@
+"""SGD — the paper's local optimizer (lr 1e-2, Sec. IV-A2).
+
+``sgd_update`` is the jnp oracle; on TPU the per-leaf update is the
+`repro.kernels.fused_sgd` Pallas kernel (one fused read-modify-write
+pass instead of separate mul + sub HLOs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def sgd_update(params, grads, lr, use_kernel: bool = True):
+    return jax.tree.map(
+        lambda p, g: kops.fused_sgd(p, g, lr, use_kernel=use_kernel),
+        params, grads)
+
+
+def sgd_momentum_init(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd_momentum_update(params, grads, state, lr, momentum=0.9):
+    new_state = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_state)
+    return new_params, new_state

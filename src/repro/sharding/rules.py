@@ -1,0 +1,216 @@
+"""Logical-axis -> PartitionSpec rules (megatron-style FSDP x tensor).
+
+Mesh axes:
+  data  — FSDP/batch axis: parameters are *sharded* over it (fully
+          sharded data parallel) and all-gathered per layer by GSPMD.
+  model — tensor-parallel axis: attention heads / FFN hidden / experts /
+          vocab.
+  pod   — (multi-pod mesh only) the federation axis: one FL silo per
+          pod. Parameters are conceptually per-silo, hence REPLICATED
+          over 'pod' in the SPMD program; batch shards over it.
+
+Every rule is divisibility-guarded: if a dim doesn't divide by the mesh
+axis size the axis is dropped for that dim (e.g. hymba's 25 heads or
+whisper's 12 heads stay unsharded on a 16-way tensor axis while their
+FFNs still shard).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name -> spec template for the *trailing* dims of the leaf
+_RULES = {
+    # embeddings / unembeddings
+    "embedding": ("model", "data"),
+    "w_out": ("data", "model"),
+    # GQA attention
+    "wq": ("data", "model", None),
+    "wk": ("data", "model", None),
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),
+    # MLA
+    "w_dkv": ("data", None),
+    "w_krope": ("data", None),
+    "w_uk": (None, "model", None),
+    "w_uv": (None, "model", None),
+    "w_dq": ("data", None),
+    "w_uq": (None, "model", None),
+    # dense MLP; the MoE-expert variants (leading E dim) are special-cased
+    # by path in _leaf_spec
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    "router": (None, "model"),
+    # mamba2
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "A_log": ("model",),
+    "dt_bias": ("model",),
+    "D_skip": ("model",),
+    # MTP projector
+    "proj": ("data", None),
+}
+
+
+def _guard(spec_dims, shape, mesh: Mesh):
+    """Drop axes whose size doesn't divide the dim."""
+    out = []
+    for dim, ax in zip(shape, spec_dims):
+        if ax is None:
+            out.append(None)
+        else:
+            size = mesh.shape[ax]
+            out.append(ax if dim % size == 0 else None)
+    return tuple(out)
+
+
+_MOE_EXPERT_RULES = {
+    # (E, D, F): experts over model (expert parallelism), D over data.
+    # BASELINE choice: FSDP on the d_model dim. Contracting a sharded D
+    # produces an (E, cap, F) partial-sum all-reduce per matmul — the
+    # dominant collective for MoE prefill (EXPERIMENTS.md §Perf Pair B).
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+_MOE_EXPERT_RULES_F = {
+    # megatron-style: shard the ffn hidden dim F over 'data' instead —
+    # w_gate/w_up contract an unsharded D (no comm), w_down contracts
+    # the sharded F giving ONE (E, cap, D) all-reduce per layer.
+    "w_gate": ("model", None, "data"),
+    "w_up": ("model", None, "data"),
+    "w_down": ("model", "data", None),
+}
+
+
+def _leaf_spec(path, leaf, mesh: Mesh, moe_ff_shard: str = "d") -> P:
+    name = None
+    names = []
+    for p in path:
+        s = getattr(p, "key", None) or getattr(p, "name", None)
+        if s is not None:
+            names.append(str(s))
+    if names:
+        name = names[-1]
+    if "moe" in names and name in _MOE_EXPERT_RULES and "shared" not in names:
+        rules = (_MOE_EXPERT_RULES_F if moe_ff_shard == "f"
+                 else _MOE_EXPERT_RULES)
+        rule = rules[name]
+    else:
+        rule = _RULES.get(name)
+    if rule is None:
+        return P()  # replicate (norm scales, biases, small scalars)
+    nd = len(rule)
+    lead = leaf.ndim - nd
+    if lead < 0:  # smaller than the rule (shouldn't happen) -> replicate
+        return P()
+    dims = _guard(rule, leaf.shape[lead:], mesh)
+    return P(*((None,) * lead + dims))
+
+
+def param_specs(params, mesh: Mesh, moe_ff_shard: str = "d"):
+    """PartitionSpec pytree for a param pytree (leading layer-stack dims
+    map to None automatically)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_leaf_spec(path, leaf, mesh, moe_ff_shard)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --------------------------------------------------------------- batches
+def batch_axes(mesh: Mesh):
+    """The (composite) batch axis: ('pod','data') on the multi-pod mesh."""
+    return (("pod", "data") if "pod" in mesh.shape else ("data",))
+
+
+def _dim_ok(dim, axes, mesh):
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % total == 0
+
+
+def batch_specs(cfg, shape_cfg, mesh: Mesh, family: str):
+    """PartitionSpecs for the input batch pytree of each step kind."""
+    ba = batch_axes(mesh)
+    B = shape_cfg.global_batch
+
+    def bdim(dim):
+        return ba if _dim_ok(dim, ba, mesh) else (
+            ("data",) if dim % mesh.shape["data"] == 0 else None)
+
+    b = bdim(B)
+    bspec = b if b is None else (b if isinstance(b, tuple) else (b,))
+    tok_spec = P(bspec, None) if bspec else P(None, None)
+
+    specs = {"tokens": tok_spec}
+    if family == "vlm":
+        specs["patches"] = P(bspec, None, None) if bspec else P()
+    if family == "audio":
+        specs["frames"] = P(bspec, None, None) if bspec else P()
+    return specs
+
+
+def cache_specs(caches, cfg, mesh: Mesh, seq_sharded: bool,
+                shard_head_dim: bool = False):
+    """Specs for layer-stacked decode caches.
+
+    seq_sharded=True (long_500k, batch=1): the cache *sequence* dim
+    shards over 'data' (flash-decode style — partial softmax combines
+    become cross-'data' collectives). Otherwise batch shards over 'data'
+    and kv-heads over 'model' when divisible.
+
+    shard_head_dim=True (beyond-paper lever): when kv-heads don't divide
+    the tensor axis (GQA with few kv heads), shard the *head_dim* over
+    'model' instead of replicating the whole cache per device.
+    """
+    data = mesh.shape["data"]
+    model = mesh.shape["model"]
+
+    def spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            s = getattr(p, "key", None)
+            if s is not None:
+                name = str(s)
+                break
+        # leaves: k/v (L,B,C,Kv,Dh) | pos (L,C) | cross_k/v (L,B,T,Kv,Dh)
+        # conv (L,B,W-1,C) | state (L,B,H,P,N)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            L, B, C, Kv, Dh = leaf.shape
+            bax = "data" if (B % data == 0 and not seq_sharded) else None
+            sax = "data" if (seq_sharded and C % data == 0) else None
+            hax = "model" if Kv % model == 0 else None
+            dax = None
+            if shard_head_dim and hax is None and Dh % model == 0:
+                dax = "model"
+            return P(None, bax, sax, hax, dax)
+        if name == "pos":
+            return P()
+        if name == "conv":
+            L, B, W, Cc = leaf.shape
+            bax = "data" if B % data == 0 else None
+            cax = "model" if Cc % model == 0 else None
+            return P(None, bax, None, cax)
+        if name == "state":
+            L, B, H, Pd, N = leaf.shape
+            bax = "data" if B % data == 0 else None
+            hax = "model" if H % model == 0 else None
+            return P(None, bax, hax, None, None)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(path, leaf) for path, leaf in flat])
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,87 @@
+"""Flash attention oracle checks: vs naive softmax, window masks, caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import flash_attention
+
+
+def _naive(q, k, v, q_pos, k_pos, causal=True, window=0, softcap=0.0,
+           scale=None):
+    B, S, Kv, G, Dh = q.shape
+    if scale is None:
+        scale = 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bskgd,btkd->bskgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (k_pos >= 0)[None, None, :]
+    if causal:
+        valid = valid & (k_pos[None, None, :] <= q_pos[None, :, None])
+    if window:
+        valid = valid & (q_pos[None, :, None] - k_pos[None, None, :] < window)
+    s = jnp.where(valid[:, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("S,T,chunk", [(8, 8, 4), (16, 16, 16), (1, 37, 8),
+                                       (5, 64, 16)])
+@pytest.mark.parametrize("window", [None, 0, 4])
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+def test_flash_matches_naive(S, T, chunk, window, softcap):
+    key = jax.random.PRNGKey(0)
+    B, Kv, G, Dh = 2, 2, 3, 16
+    q = jax.random.normal(key, (B, S, Kv, G, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, Kv, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, Kv, Dh))
+    q_pos = jnp.arange(T - S, T)     # suffix queries (decode-like)
+    k_pos = jnp.arange(T)
+    out = flash_attention(q, k, v, q_positions=q_pos, k_positions=k_pos,
+                          causal=True, window=window, softcap=softcap,
+                          chunk=chunk)
+    ref = _naive(q, k, v, q_pos, k_pos, causal=True,
+                 window=window or 0, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_invalid_kpos_excluded():
+    """Entries with k_pos < 0 (ring-cache empty slots) contribute nothing."""
+    key = jax.random.PRNGKey(3)
+    B, S, Kv, G, Dh, T = 1, 2, 1, 1, 8, 6
+    q = jax.random.normal(key, (B, S, Kv, G, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, T, Kv, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, T, Kv, Dh))
+    k_pos = jnp.array([0, 1, -1, -1, -1, -1])
+    q_pos = jnp.array([0, 1])
+    out = flash_attention(q, k, v, q_positions=q_pos, k_positions=k_pos,
+                          chunk=3)
+    out2 = flash_attention(q, k[:, :2], v[:, :2], q_positions=q_pos,
+                           k_positions=k_pos[:2], chunk=3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flash_traced_window_zero_means_full():
+    """A traced window of 0 (scanned global layer) == full attention."""
+    key = jax.random.PRNGKey(6)
+    B, S, Kv, G, Dh = 1, 8, 1, 2, 8
+    q = jax.random.normal(key, (B, S, Kv, G, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(7), (B, S, Kv, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(8), (B, S, Kv, Dh))
+    pos = jnp.arange(S)
+
+    @jax.jit
+    def with_window(w):
+        return flash_attention(q, k, v, q_positions=pos, k_positions=pos,
+                               window=w, chunk=4)
+
+    full = flash_attention(q, k, v, q_positions=pos, k_positions=pos,
+                           window=None, chunk=4)
+    np.testing.assert_allclose(np.asarray(with_window(jnp.int32(0))),
+                               np.asarray(full), rtol=1e-5, atol=1e-6)
+    # and a tiny window differs
+    assert not np.allclose(np.asarray(with_window(jnp.int32(2))),
+                           np.asarray(full))

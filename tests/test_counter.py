@@ -1,0 +1,49 @@
+"""Fairness counter (Step 4/5) invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.counter import FairnessCounter
+
+
+def test_counter_update_math():
+    c = FairnessCounter(4, threshold=0.5)
+    c.update([0, 1], 2)
+    np.testing.assert_allclose(c.values(), [0.5, 0.5, 0.0, 0.0])
+    c.update([0], 2)
+    np.testing.assert_allclose(c.values(), [0.5, 0.25, 0.0, 0.0])
+
+
+def test_refrain_rule():
+    c = FairnessCounter(3, threshold=0.5)
+    c.update([0, 0], 2)  # user 0 uploaded twice (counts as 2 of 2)
+    assert list(c.participating()) == [False, True, True]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 10),
+    rounds=st.integers(1, 50),
+    k=st.integers(1, 3),
+    thr=st.floats(0.2, 0.9),
+    seed=st.integers(0, 2**30),
+)
+def test_counter_bounds_long_run_share(n, rounds, k, thr, seed):
+    """If every round only counter-passing users are selected, no user's
+    final share can exceed threshold + 1/total (one in-flight round)."""
+    rng = np.random.default_rng(seed)
+    c = FairnessCounter(n, threshold=thr)
+    for _ in range(rounds):
+        part = np.where(c.participating())[0]
+        if len(part) == 0:
+            break
+        kk = min(k, len(part))
+        winners = rng.choice(part, size=kk, replace=False)
+        c.update(list(winners), kk)
+    if c.total_merged:
+        assert (c.values() <= thr + k / c.total_merged + 1e-9).all()
+
+
+def test_values_zero_before_any_round():
+    c = FairnessCounter(5)
+    assert (c.values() == 0).all()
+    assert c.participating().all()

@@ -1,0 +1,75 @@
+"""CSMA contention simulator: determinism + protocol invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.csma import CSMASimulator, CSMAConfig
+
+
+def test_lowest_backoff_wins_first():
+    sim = CSMASimulator(seed=0)
+    res = sim.contend([0.01, 0.002, 0.03], [1.0, 1.0, 1.0], k_target=1)
+    assert res.winners == [1]
+
+
+def test_k_target_respected():
+    sim = CSMASimulator(seed=0)
+    res = sim.contend([0.01, 0.002, 0.03, 0.004], [1.0] * 4, k_target=2)
+    assert len(res.winners) == 2
+    assert res.winners == [1, 3]
+
+
+def test_participation_mask_silences_users():
+    sim = CSMASimulator(seed=0)
+    res = sim.contend([0.001, 0.002, 0.003], [1.0] * 3, k_target=2,
+                      participating=[False, True, True])
+    assert 0 not in res.winners
+    assert set(res.winners) == {1, 2}
+
+
+def test_collision_resolution_terminates():
+    """Identical backoffs collide; exponential backoff must resolve."""
+    sim = CSMASimulator(seed=42)
+    res = sim.contend([0.001, 0.001, 0.001], [0.01] * 3, k_target=3)
+    assert res.collisions >= 1
+    assert len(res.winners) == 3
+    assert len(set(res.winners)) == 3
+
+
+def test_deterministic_given_seed():
+    a = CSMASimulator(seed=7).contend([0.005, 0.005], [0.01] * 2, 2)
+    b = CSMASimulator(seed=7).contend([0.005, 0.005], [0.01] * 2, 2)
+    assert a.winners == b.winners and a.collisions == b.collisions
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 12),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**30),
+)
+def test_contention_invariants(n, k, seed):
+    """Winners are unique, participating, at most k, and delivery slots
+    are strictly increasing."""
+    rng = np.random.default_rng(seed)
+    backoffs = rng.uniform(1e-5, 5e-3, n)
+    windows = rng.uniform(1e-4, 5e-3, n)
+    part = rng.random(n) > 0.3
+    sim = CSMASimulator(seed=seed)
+    res = sim.contend(backoffs, windows, k_target=k, participating=part)
+    assert len(res.winners) == len(set(res.winners))
+    assert len(res.winners) <= k
+    assert all(part[w] for w in res.winners)
+    assert all(b > a for a, b in zip(res.finish_slots, res.finish_slots[1:]))
+    # server receives everything it asked for when enough users contend
+    if part.sum() >= k:
+        assert len(res.winners) == k
+
+
+def test_airtime_accounting():
+    cfg = CSMAConfig(tx_slots=50)
+    sim = CSMASimulator(cfg, seed=0)
+    res = sim.contend([20e-6 * 3, 20e-6 * 10], [1.0, 1.0], k_target=2)
+    # first delivery: 3 slots backoff + 50 tx; second: 7 more + 50
+    assert res.finish_slots[0] == 53
+    assert res.finish_slots[1] == 110

@@ -1,0 +1,77 @@
+"""Data pipeline: synthetic generators + FL partitioning properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (make_classification_dataset, make_token_stream,
+                        partition_iid, partition_noniid_shards)
+from repro.data.partition import user_label_histogram
+
+
+def test_synthetic_dataset_shapes_and_range():
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        "fashion", n_train=500, n_test=100)
+    assert xtr.shape == (500, 28, 28, 1) and yte.shape == (100,)
+    assert xtr.min() >= 0 and xtr.max() <= 1
+    assert set(np.unique(ytr)) <= set(range(10))
+    (xc, yc), _ = make_classification_dataset("cifar", n_train=50, n_test=10)
+    assert xc.shape == (50, 32, 32, 3)
+
+
+def test_synthetic_dataset_learnable():
+    """A linear probe must beat chance easily -> classes are separable."""
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        "fashion", n_train=2000, n_test=400)
+    x = xtr.reshape(len(xtr), -1)
+    xt = xte.reshape(len(xte), -1)
+    # one ridge-regression step per class
+    y1h = np.eye(10)[ytr]
+    w = np.linalg.solve(x.T @ x + 10.0 * np.eye(x.shape[1]), x.T @ y1h)
+    acc = (np.argmax(xt @ w, -1) == yte).mean()
+    assert acc > 0.5, acc
+
+
+def test_iid_partition_balanced():
+    (x, y), _ = make_classification_dataset("fashion", n_train=1000,
+                                            n_test=10)
+    users = partition_iid(x, y, 10)
+    sizes = [len(u[1]) for u in users]
+    assert max(sizes) - min(sizes) <= 1
+    # every user sees most classes
+    hist = user_label_histogram(users)
+    assert (hist > 0).sum(1).min() >= 5
+
+
+def test_noniid_partition_two_classes_per_user():
+    """McMahan split: each user holds ~2 labels (paper Sec. IV-A1)."""
+    (x, y), _ = make_classification_dataset("fashion", n_train=2000,
+                                            n_test=10)
+    users = partition_noniid_shards(x, y, 10, shards_per_user=2)
+    hist = user_label_histogram(users)
+    classes_per_user = (hist > 0).sum(1)
+    assert classes_per_user.max() <= 4      # 2 shards -> at most 4 labels
+    assert np.median(classes_per_user) <= 3  # typically ~2
+
+
+@settings(max_examples=10, deadline=None)
+@given(num_users=st.integers(2, 20), seed=st.integers(0, 1000))
+def test_noniid_partition_covers_all_data_once(num_users, seed):
+    n = num_users * 2 * 30
+    y = np.random.default_rng(seed).integers(0, 10, n).astype(np.int32)
+    x = np.arange(n, dtype=np.float32)[:, None]
+    users = partition_noniid_shards(x, y, num_users, seed=seed)
+    all_x = np.concatenate([u[0][:, 0] for u in users])
+    assert len(all_x) == len(set(all_x.astype(int)))  # no duplicates
+    assert len(all_x) == n                            # full coverage
+
+
+def test_token_stream_noniid_topics():
+    users = make_token_stream(4, seq_len=32, seqs_per_user=8,
+                              vocab_size=100, noniid=True, seed=0)
+    assert len(users) == 4
+    assert users[0].shape == (8, 33)
+    assert all(u.max() < 100 and u.min() >= 0 for u in users)
+    # non-IID: token histograms differ across users
+    h = [np.bincount(u.reshape(-1), minlength=100) for u in users]
+    cos = (h[0] @ h[1]) / (np.linalg.norm(h[0]) * np.linalg.norm(h[1]))
+    assert cos < 0.9

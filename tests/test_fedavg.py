@@ -1,0 +1,47 @@
+"""FedAvg aggregation (Eq. 1) + delta-form equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.server import fedavg, fedavg_delta
+
+
+def _models(k, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    return [{"w": jax.random.normal(kk, (6, 4)),
+             "b": jax.random.normal(kk, (4,))} for kk in keys]
+
+
+def test_fedavg_weighted_mean():
+    models = _models(3)
+    sizes = [100, 200, 700]
+    out = fedavg(models, sizes)
+    expect = sum(s * np.asarray(m["w"]) for m, s in zip(models, sizes)) / 1000
+    np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-5)
+
+
+def test_fedavg_equal_sizes_is_mean():
+    models = _models(4)
+    out = fedavg(models, [300, 300, 300, 300])
+    expect = np.mean([np.asarray(m["b"]) for m in models], axis=0)
+    np.testing.assert_allclose(np.asarray(out["b"]), expect, rtol=1e-5)
+
+
+def test_fedavg_single_model_identity():
+    (m,) = _models(1)
+    out = fedavg([m], [42])
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(m["w"]))
+
+
+def test_delta_form_equivalent_to_eq1():
+    """w + sum alpha_k (w_k - w) == sum alpha_k w_k (alphas sum to 1)."""
+    models = _models(3, seed=1)
+    g = _models(1, seed=9)[0]
+    sizes = [300, 300, 400]
+    direct = fedavg(models, sizes)
+    deltas = [jax.tree.map(lambda a, b: a - b, m, g) for m in models]
+    via_delta = fedavg_delta(g, deltas, sizes)
+    for ka in direct:
+        np.testing.assert_allclose(np.asarray(via_delta[ka]),
+                                   np.asarray(direct[ka]), rtol=1e-5,
+                                   atol=1e-6)

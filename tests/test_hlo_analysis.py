@@ -1,0 +1,37 @@
+"""HLO collective parser + roofline terms (no jax device init needed)."""
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+
+FAKE_HLO = """
+ENTRY %main {
+  %p0 = bf16[16,4096]{1,0} parameter(0)
+  %ag = bf16[256,4096]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(%conv), to_apply=%add
+  %ars = f32[8,128]{1,0} all-reduce-start(%x), to_apply=%add
+  %ard = f32[8,128]{1,0} all-reduce-done(%ars)
+  %a2a = bf16[64,64]{1,0} all-to-all(%y), dimensions={0}
+  %nothing = bf16[9,9]{1,0} add(%p0, %p0)
+  %rs = (f32[4]{0}, f32[4]{0}) reduce-scatter(%a, %b), to_apply=%add
+}
+"""
+
+
+def test_collective_bytes_parses_ops():
+    per_op = collective_bytes(FAKE_HLO)
+    assert per_op["all-gather"] == 256 * 4096 * 2
+    # all-reduce + all-reduce-start counted; -done NOT double counted
+    assert per_op["all-reduce"] == 1024 * 4 + 8 * 128 * 4
+    assert per_op["all-to-all"] == 64 * 64 * 2
+    assert per_op["reduce-scatter"] == 2 * 4 * 4
+    assert per_op["collective-permute"] == 0
+
+
+def test_collective_bytes_ignores_compute_ops():
+    assert sum(collective_bytes("%z = f32[100]{0} add(%a, %b)").values()) == 0
+
+
+def test_roofline_terms_dominant():
+    t = roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert abs(t["compute_s"] - 1.0) < 1e-6
+    assert abs(t["memory_s"] - 2.0) < 1e-6
+    assert abs(t["collective_s"] - 0.5) < 1e-6
+    assert t["dominant"] == "memory_s"

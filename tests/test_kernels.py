@@ -1,0 +1,99 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8,), (127,), (784, 200), (200,), (3, 5, 7), (1024, 128),
+          (2, 129, 5), (4096,)]
+DTYPES = ["float32", "bfloat16"]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_delta_norm_matches_ref(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    wl, wg = _rand(k1, shape, dtype), _rand(k2, shape, dtype)
+    d2k, g2k = ops.delta_norm(wl, wg, interpret=True)
+    d2r, g2r = ref.delta_norm_ref(wl, wg)
+    np.testing.assert_allclose(d2k, d2r, rtol=1e-5)
+    np.testing.assert_allclose(g2k, g2r, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_fedavg_matches_ref(shape, dtype, k):
+    key = jax.random.PRNGKey(1)
+    st_ = _rand(key, (k,) + shape, dtype)
+    a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (k,)))
+    out_k = np.asarray(ops.fedavg_combine(st_, a, interpret=True),
+                       np.float32)
+    out_r = np.asarray(ref.fedavg_combine_ref(st_, a), np.float32)
+    # output-dtype rounding: kernel (fused) and oracle (unfused) may
+    # differ by 1 ulp of the OUTPUT dtype on near-zero values
+    atol = 1e-6 if dtype == "float32" else 0.02
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=atol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("lr", [0.0, 1e-2, 1.0])
+def test_fused_sgd_matches_ref(shape, dtype, lr):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    p, g = _rand(k1, shape, dtype), _rand(k2, shape, dtype)
+    out_k = np.asarray(ops.fused_sgd(p, g, lr, interpret=True), np.float32)
+    out_r = np.asarray(ref.fused_sgd_ref(p, g, lr), np.float32)
+    atol = 1e-6 if dtype == "float32" else 0.02
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=atol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**30))
+def test_delta_norm_property_1d(n, seed):
+    """Invariants: d2 >= 0; identical models -> d2 == 0; g2 == ||w||^2."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    wl = jax.random.normal(k1, (n,))
+    wg = jax.random.normal(k2, (n,))
+    d2, g2 = ops.delta_norm(wl, wg, interpret=True)
+    assert d2 >= 0 and g2 >= 0
+    np.testing.assert_allclose(g2, np.sum(np.asarray(wg) ** 2), rtol=1e-5)
+    d2_same, _ = ops.delta_norm(wg, wg, interpret=True)
+    assert float(d2_same) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), k=st.integers(1, 6), seed=st.integers(0, 2**30))
+def test_fedavg_property_convexity(n, k, seed):
+    """Weighted avg of identical models is the model; output within the
+    per-coordinate min/max envelope of the inputs (alphas simplex)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (k, n))
+    a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(seed + 1), (k,)))
+    out = np.asarray(ops.fedavg_combine(x, a, interpret=True))
+    xs = np.asarray(x)
+    assert (out <= xs.max(0) + 1e-5).all()
+    assert (out >= xs.min(0) - 1e-5).all()
+    same = jnp.broadcast_to(x[:1], x.shape)
+    out_same = np.asarray(ops.fedavg_combine(same, a, interpret=True))
+    np.testing.assert_allclose(out_same, np.asarray(x[0]), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_kernels_work_under_jit():
+    @jax.jit
+    def f(wl, wg):
+        return ops.delta_norm(wl, wg, interpret=True)
+
+    wl = jnp.ones((300,))
+    wg = jnp.zeros((300,))
+    d2, g2 = f(wl, wg)
+    assert float(d2) == 300.0 and float(g2) == 0.0

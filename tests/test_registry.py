@@ -1,0 +1,64 @@
+"""Config registry + reduced-variant invariants + shape table."""
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (ARCH_IDS, SKIPS, LONG_CONTEXT_VARIANT,
+                                    get_config, get_shape, all_configs)
+
+
+def test_all_ten_archs_present():
+    assert len(ARCH_IDS) == 10
+    families = {get_config(a).family for a in ARCH_IDS}
+    assert families == {"dense", "moe", "ssm", "hybrid", "audio", "vlm"}
+
+
+def test_shape_table_matches_assignment():
+    t = {(s.name): (s.seq_len, s.global_batch, s.kind)
+         for s in INPUT_SHAPES.values()}
+    assert t["train_4k"] == (4096, 256, "train")
+    assert t["prefill_32k"] == (32768, 32, "prefill")
+    assert t["decode_32k"] == (32768, 128, "decode")
+    assert t["long_500k"] == (524288, 1, "decode")
+
+
+def test_unknown_ids_raise():
+    with pytest.raises(KeyError):
+        get_config("nope")
+    with pytest.raises(KeyError):
+        get_shape("nope")
+
+
+def test_skips_reference_valid_pairs():
+    for arch, shape in SKIPS:
+        assert arch in ARCH_IDS and shape in INPUT_SHAPES
+    for arch in LONG_CONTEXT_VARIANT:
+        assert arch in ARCH_IDS
+        assert not get_config(arch).is_subquadratic
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_respects_smoke_bounds(arch):
+    cfg = get_config(arch)
+    r = cfg.reduced()
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.family == cfg.family
+    assert r.attention_type == cfg.attention_type
+    if cfg.num_heads:
+        assert r.num_heads % r.num_kv_heads == 0
+    # vocab padding shards cleanly
+    assert r.padded_vocab % r.vocab_pad_multiple == 0
+    assert cfg.padded_vocab % cfg.vocab_pad_multiple == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_layer_windows_consistent(arch):
+    cfg = get_config(arch)
+    win = cfg.layer_windows(0)
+    assert len(win) == cfg.num_layers
+    long = cfg.layer_windows(0, long_context=True)
+    if not cfg.is_subquadratic and cfg.family != "audio":
+        # long-context variant: every layer windowed
+        assert all(w > 0 for w in long)

@@ -1,0 +1,69 @@
+"""Selection strategies: baselines behave per spec; the paper's method
+statistically prioritizes high-priority users."""
+import numpy as np
+import pytest
+
+from repro.core.selection import (SelectionContext, make_strategy,
+                                  STRATEGIES)
+
+
+def _ctx(priorities, k=2, seed=0, part=None, cw_base=2048.0):
+    priorities = np.asarray(priorities, float)
+    part = (np.ones(len(priorities), bool) if part is None
+            else np.asarray(part))
+    return SelectionContext(priorities=priorities, participating=part,
+                            k_target=k, rng=np.random.default_rng(seed),
+                            cw_base=cw_base)
+
+
+def test_priority_centralized_picks_topk():
+    s = make_strategy("priority-centralized")
+    winners = s.select(_ctx([1.0, 1.3, 1.1, 1.25], k=2))
+    assert set(winners) == {1, 3}
+
+
+def test_priority_centralized_respects_mask():
+    s = make_strategy("priority-centralized")
+    winners = s.select(_ctx([1.0, 1.3, 1.1, 1.25], k=2,
+                            part=[True, False, True, True]))
+    assert set(winners) == {3, 2}
+
+
+def test_random_centralized_uniformish():
+    s = make_strategy("random-centralized")
+    counts = np.zeros(4)
+    for i in range(400):
+        for w in s.select(_ctx([1.0] * 4, k=1, seed=i)):
+            counts[w] += 1
+    assert counts.min() > 60  # ~100 each
+
+def test_all_strategies_return_k():
+    for name in STRATEGIES:
+        s = make_strategy(name, seed=0)
+        winners = s.select(_ctx([1.0, 1.1, 1.2, 1.05, 1.15], k=3, seed=1))
+        assert len(winners) == 3, name
+        assert len(set(winners)) == 3
+
+
+def test_priority_distributed_prefers_high_priority():
+    """Paper's method: the high-priority user should win the channel far
+    more often than low-priority ones (Eq. 3: W = N / priority)."""
+    wins = np.zeros(3)
+    for i in range(300):
+        s = make_strategy("priority-distributed", seed=i)
+        # user 2 has a much higher priority -> much smaller CW
+        winners = s.select(_ctx([1.0, 1.0, 8.0], k=1, seed=i))
+        for w in winners:
+            wins[w] += 1
+    assert wins[2] > 0.65 * wins.sum(), wins
+    assert wins[2] > 3 * max(wins[0], wins[1]), wins
+
+
+def test_random_distributed_is_fairish():
+    wins = np.zeros(4)
+    for i in range(400):
+        s = make_strategy("random-distributed", seed=i)
+        for w in s.select(_ctx([5.0, 1.0, 1.0, 1.0], k=1, seed=i)):
+            wins[w] += 1
+    # priorities must NOT matter for the random baseline
+    assert wins.max() < 0.45 * wins.sum(), wins

@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the paper's system (Fig. 1 loop)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FLConfig, FLExperiment
+from repro.core.federated import make_accuracy_eval
+from repro.core.selection import STRATEGIES
+from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.models.paper_models import get_paper_model
+
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        "fashion", n_train=1500, n_test=300, seed=3)
+    x = xtr.reshape(len(xtr), -1)
+    xt = xte.reshape(len(xte), -1)
+    init_fn, apply_fn = get_paper_model("mlp", "fashion")
+    users = partition_noniid_shards(x, ytr, 10, seed=3)
+    user_data = [{"x": a, "y": b} for a, b in users]
+
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        oh = jax.nn.one_hot(batch["y"], 10)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    eval_fn = make_accuracy_eval(apply_fn, xt, yte)
+    params = init_fn(jax.random.PRNGKey(0))
+    return params, loss_fn, user_data, eval_fn
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_all_strategies_run_and_learn(fl_setup, strategy):
+    params, loss_fn, user_data, eval_fn = fl_setup
+    cfg = FLConfig(rounds=12, strategy=strategy, seed=1)
+    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+    hist = exp.run()
+    assert len(hist.accuracy) == 12
+    assert hist.uploads_total > 0
+    # learning happened: best accuracy beats the untrained model's
+    assert max(hist.accuracy) > eval_fn(params) + 0.02
+    # selections recorded and consistent
+    assert hist.selections.sum() == hist.uploads_total
+
+
+def test_counter_caps_selection_share(fl_setup):
+    """The paper's fairness mechanism: with the counter ON, no user's
+    selection share can stay above the threshold."""
+    params, loss_fn, user_data, eval_fn = fl_setup
+    cfg = FLConfig(rounds=25, strategy="priority-centralized",
+                   use_counter=True, counter_threshold=0.16, seed=0)
+    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+    hist = exp.run()
+    shares = hist.selections / max(1, hist.selections.sum())
+    # one in-flight round of slack (k/total), as in test_counter.py
+    assert shares.max() <= 0.16 + 2 / max(1, hist.uploads_total) + 1e-9
+
+
+def test_priority_without_counter_concentrates(fl_setup):
+    """Paper Fig. 4: priority-only selection is biased toward a few
+    users; the counter flattens it. Compare concentration."""
+    params, loss_fn, user_data, eval_fn = fl_setup
+
+    def run(use_counter, seed=5):
+        cfg = FLConfig(rounds=25, strategy="priority-centralized",
+                       use_counter=use_counter, seed=seed)
+        exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+        return exp.run().selections
+
+    sel_no = run(False)
+    sel_yes = run(True)
+    top_share_no = sel_no.max() / sel_no.sum()
+    top_share_yes = sel_yes.max() / sel_yes.sum()
+    assert top_share_no >= top_share_yes
+
+
+def test_round_uploads_bounded_by_k(fl_setup):
+    params, loss_fn, user_data, eval_fn = fl_setup
+    cfg = FLConfig(rounds=8, k_per_round=3,
+                   strategy="priority-distributed", seed=2)
+    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+    hist = exp.run()
+    assert hist.uploads_total <= 8 * 3
+
+
+def test_checkpoint_roundtrip(tmp_path, fl_setup):
+    params, loss_fn, user_data, eval_fn = fl_setup
+    from repro.checkpoint import save_checkpoint, load_checkpoint
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, params, extra={"round": 7})
+    restored = load_checkpoint(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    from repro.checkpoint.checkpoint import load_extra
+    assert int(load_extra(path)["round"]) == 7
