@@ -9,8 +9,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import FLConfig, FLExperiment
 from repro.core.federated import make_accuracy_eval, FLHistory
+from repro.engine import ExperimentSpec, build_host_engine
 from repro.data import (make_classification_dataset, partition_iid,
                         partition_noniid_shards)
 from repro.models.paper_models import get_paper_model
@@ -71,15 +71,17 @@ def _setup(model: str, dataset: str, iid: bool, seed: int):
 def run_strategy(name: str, *, model="mlp", dataset="fashion", iid=False,
                  strategy="priority-distributed", use_counter=True,
                  threshold=0.16, cw_base=2048.0, rounds: Optional[int] = None,
-                 seed=0, eval_every=2) -> BenchResult:
+                 seed=0, eval_every=2, strategy_options=None) -> BenchResult:
     rounds = rounds or ROUNDS
     params, loss_fn, user_data, eval_fn = _setup(model, dataset, iid, seed)
-    cfg = FLConfig(rounds=rounds, strategy=strategy, use_counter=use_counter,
-                   counter_threshold=threshold, cw_base=cw_base, seed=seed,
-                   eval_every=eval_every)
-    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+    spec = ExperimentSpec(rounds=rounds, strategy=strategy,
+                          strategy_options=strategy_options or {},
+                          use_counter=use_counter,
+                          counter_threshold=threshold, cw_base=cw_base,
+                          seed=seed, eval_every=eval_every)
+    engine = build_host_engine(spec, params, loss_fn, user_data, eval_fn)
     t0 = time.time()
-    hist = exp.run()
+    hist = engine.run()
     wall = time.time() - t0
     import numpy as np
     return BenchResult(name=name, wall_s=wall, rounds=rounds,

@@ -11,9 +11,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig2_iid, fig3_noniid, fig4_fairness,
-                        fig5_counter_acc, fig6_cw_size, roofline,
-                        kernel_bench)
+from benchmarks import (contention_bench, fig2_iid, fig3_noniid,
+                        fig4_fairness, fig5_counter_acc, fig6_cw_size,
+                        roofline, kernel_bench)
 
 SUITES = {
     "fig2": fig2_iid.run,
@@ -21,6 +21,7 @@ SUITES = {
     "fig4": fig4_fairness.run,
     "fig5": fig5_counter_acc.run,
     "fig6": fig6_cw_size.run,
+    "csma": contention_bench.run,
     "kernels": kernel_bench.run,
     "roofline": roofline.run,
 }

@@ -3,13 +3,37 @@ selection for federated learning via random-access (CSMA) contention.
 
 Public API:
     priority.model_priority       Eq. 2 layer-wise distance -> priority
-    csma.CSMASimulator            slotted CSMA/CA contention
+    csma.CSMASimulator            slotted CSMA/CA contention (+ contend_batch)
     counter.FairnessCounter       Step 4/5 refrain rule
-    selection.make_strategy       4 strategies (paper baselines + method)
-    federated.FLExperiment        end-to-end round orchestration (Fig. 1)
+    selection.make_strategy       DEPRECATED -> repro.engine registry
+    federated.FLExperiment        DEPRECATED -> repro.engine.FLEngine
+
+Round orchestration and the strategy registry live in ``repro.engine``
+(see DESIGN.md); the shims here keep pre-engine imports working.
 """
 from repro.core.priority import model_priority, layer_distance_ratios
 from repro.core.csma import CSMASimulator, CSMAConfig
 from repro.core.counter import FairnessCounter
-from repro.core.selection import make_strategy, STRATEGIES
-from repro.core.federated import FLExperiment, FLConfig
+
+# The deprecated shims (selection/federated) import repro.engine, and
+# repro.engine modules import repro.core.csma — which first runs THIS
+# package init. Loading the shims lazily (PEP 562) keeps both entry
+# orders working: `import repro.engine` no longer re-enters a
+# half-initialized engine package, and `from repro.core import
+# FLExperiment` still resolves.
+_LAZY = {
+    "make_strategy": "repro.core.selection",
+    "STRATEGIES": "repro.core.selection",
+    "FLExperiment": "repro.core.federated",
+    "FLConfig": "repro.core.federated",
+}
+
+__all__ = ["model_priority", "layer_distance_ratios", "CSMASimulator",
+           "CSMAConfig", "FairnessCounter", *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

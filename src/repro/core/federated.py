@@ -1,32 +1,38 @@
-"""End-to-end FL round orchestration — paper Fig. 1, Steps 1-5.
+"""DEPRECATED shim — round orchestration moved to ``repro.engine``.
 
-Model-agnostic: works over any (params pytree, loss_fn) pair, so the
-same driver runs the paper's MLP/CNN simulation on CPU and the
-federated-LLM examples on reduced transformer configs.
+``FLExperiment`` was the seed's host-loop driver (sequential per-user
+Python training). It now delegates to the engine API — an
+``FLEngine`` over a ``HostBackend`` — which trains the whole cohort as
+one jitted vmap/scan over stacked client params. Same Fig. 1 protocol,
+same seeded winner sequence (tests/test_engine.py asserts parity), one
+compile instead of one per client.
 
-Round flow (Fig. 1):
-  1. server broadcasts w^t (here: clients read the global pytree);
-  2. every client runs 1 local epoch of SGD;
-  3. clients compute Eq. 2 priority and Eq. 3 backoff;
-  4. counter refrain (Step 4) + contention / selection;
-  5. server FedAvg's the first K_t arrivals, broadcasts, counters update.
+New code should construct the engine directly:
+
+    from repro.engine import ExperimentSpec, build_host_engine
+    engine = build_host_engine(spec, params, loss_fn, user_data, eval_fn)
+    history = engine.run()
+
+``FLConfig`` remains as the legacy flat config; ``FLHistory`` is
+re-exported from ``repro.engine.types`` (with the new contention-stats
+fields filled in rather than always 0).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Sequence
 
 import jax
 import numpy as np
 
-from repro.core.client import Client
-from repro.core.counter import FairnessCounter
 from repro.core.csma import CSMAConfig
-from repro.core.priority import model_priority
-from repro.core.selection import SelectionContext, make_strategy
-from repro.core.server import fedavg
+from repro.engine.backends import HostBackend
+from repro.engine.engine import FLEngine
+from repro.engine.spec import ExperimentSpec
+from repro.engine.types import FLHistory
+
+__all__ = ["FLConfig", "FLHistory", "FLExperiment", "make_accuracy_eval"]
 
 
 @dataclass
@@ -45,108 +51,63 @@ class FLConfig:
     seed: int = 0
     eval_every: int = 1
 
-
-@dataclass
-class FLHistory:
-    accuracy: List[float] = field(default_factory=list)
-    eval_round: List[int] = field(default_factory=list)
-    train_loss: List[float] = field(default_factory=list)
-    selections: Optional[np.ndarray] = None    # (num_users,) counts
-    priorities: List[List[float]] = field(default_factory=list)
-    collisions: int = 0
-    uploads_total: int = 0
+    def to_spec(self) -> ExperimentSpec:
+        return ExperimentSpec(
+            k_per_round=self.k_per_round, rounds=self.rounds,
+            eval_every=self.eval_every, strategy=self.strategy,
+            cw_base=self.cw_base, use_counter=self.use_counter,
+            counter_threshold=self.counter_threshold, csma=self.csma,
+            lr=self.lr, batch_size=self.batch_size,
+            local_epochs=self.local_epochs, seed=self.seed)
 
 
 class FLExperiment:
-    """One FL run under one selection strategy."""
+    """Deprecated facade over ``FLEngine`` + ``HostBackend``."""
 
     def __init__(self, init_params, loss_fn, user_data: Sequence,
                  eval_fn: Callable, cfg: FLConfig):
-        """
-        init_params: params pytree (the round-0 global model).
-        loss_fn(params, batch) -> scalar; batch leaves (bs, ...).
-        user_data: per-user pytree of host arrays (leading dim = examples).
-        eval_fn(params) -> float metric (accuracy for the paper models).
-        """
+        warnings.warn(
+            "FLExperiment is deprecated; use repro.engine.FLEngine "
+            "(build_host_engine) instead", DeprecationWarning,
+            stacklevel=2)
         self.cfg = cfg
-        self.global_params = init_params
-        self.eval_fn = eval_fn
-        self.clients = [
-            Client(u, user_data[u], loss_fn, lr=cfg.lr,
-                   batch_size=cfg.batch_size, local_epochs=cfg.local_epochs,
-                   seed=cfg.seed)
-            for u in range(cfg.num_users)
-        ]
-        self.counter = FairnessCounter(cfg.num_users, cfg.counter_threshold)
-        self.strategy = make_strategy(cfg.strategy, cfg.csma, seed=cfg.seed)
-        self._rng = np.random.default_rng(cfg.seed)
-        self._prio_jit = jax.jit(model_priority)
+        if len(user_data) < cfg.num_users:
+            raise ValueError(
+                f"cfg.num_users={cfg.num_users} but only "
+                f"{len(user_data)} users' data supplied")
+        backend = HostBackend(
+            loss_fn, list(user_data)[:cfg.num_users], lr=cfg.lr,
+            batch_size=cfg.batch_size, local_epochs=cfg.local_epochs,
+            seed=cfg.seed)
+        self._engine = FLEngine(cfg.to_spec(), backend, init_params,
+                                eval_fn)
 
-    # ------------------------------------------------------------------
+    # legacy attribute surface ----------------------------------------
+    @property
+    def engine(self) -> FLEngine:
+        return self._engine
+
+    @property
+    def global_params(self):
+        return self._engine.global_params
+
+    @property
+    def counter(self):
+        return self._engine.counter
+
+    @property
+    def strategy(self):
+        return self._engine.strategy
+
+    @property
+    def clients(self):
+        return self._engine.backend.clients
+
     def run_round(self, t: int, history: FLHistory) -> None:
-        cfg = self.cfg
-        need_priority = self.strategy.uses_priority
-        # centralized-random selects BEFORE local training (true FedAvg);
-        # every other strategy requires all users to train (Step 2).
-        participating = (self.counter.participating() if cfg.use_counter
-                         else np.ones(cfg.num_users, bool))
-        if not participating.any():       # degenerate threshold: reset mask
-            participating = np.ones(cfg.num_users, bool)
+        self._engine.run_round(t, history)
 
-        if cfg.strategy == "random-centralized":
-            cand = np.where(participating)[0]
-            k = min(cfg.k_per_round, len(cand))
-            pre_selected = list(self._rng.choice(cand, size=k, replace=False))
-            train_set = pre_selected
-        else:
-            pre_selected = None
-            train_set = list(range(cfg.num_users))
-
-        locals_, losses, prios = {}, {}, np.ones(cfg.num_users)
-        for u in train_set:
-            locals_[u], losses[u] = self.clients[u].train(self.global_params)
-            if need_priority:
-                prios[u] = float(
-                    self._prio_jit(locals_[u], self.global_params))
-
-        if pre_selected is not None:
-            winners = pre_selected
-        else:
-            ctx = SelectionContext(
-                priorities=prios, participating=participating,
-                k_target=cfg.k_per_round, rng=self._rng,
-                cw_base=cfg.cw_base)
-            winners = self.strategy.select(ctx)
-
-        if winners:
-            models = [locals_[u] for u in winners]
-            sizes = [self.clients[u].num_examples for u in winners]
-            self.global_params = fedavg(models, sizes)
-            self.counter.update(winners, len(winners))
-            history.uploads_total += len(winners)
-            for u in winners:
-                history.selections[u] += 1
-        if need_priority:
-            history.priorities.append([float(prios[u]) for u in train_set])
-        if losses:
-            history.train_loss.append(float(np.mean(list(losses.values()))))
-
-    # ------------------------------------------------------------------
     def run(self, verbose: bool = False) -> FLHistory:
-        cfg = self.cfg
-        history = FLHistory(selections=np.zeros(cfg.num_users, np.int64))
-        for t in range(cfg.rounds):
-            self.run_round(t, history)
-            if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
-                acc = float(self.eval_fn(self.global_params))
-                history.accuracy.append(acc)
-                history.eval_round.append(t)
-                if verbose:
-                    print(f"[{cfg.strategy}] round {t:4d} "
-                          f"acc {acc:.4f} "
-                          f"loss {history.train_loss[-1]:.4f}"
-                          if history.train_loss else "")
-        return history
+        return self._engine.run(verbose)
 
 
 def make_accuracy_eval(apply_fn, x_test, y_test, batch: int = 256):

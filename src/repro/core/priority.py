@@ -54,6 +54,28 @@ def model_priority(local_params, global_params, use_kernel=True):
     return prio
 
 
+def stacked_model_priorities(local_stacked, global_params):
+    """Eq. (2) over a (S, ...)-stacked pytree of local models: per-stack
+    relative layer distances vs one global model, clamped at 1 like
+    ``layer_distance_ratios``, multiplied into (S,) priorities. The
+    vectorized twin of ``model_priority`` used by the stacked cohort /
+    silo paths."""
+    def leaf_ratio(wl, wg):
+        axes = tuple(range(1, wl.ndim))
+        d2 = jnp.sum(jnp.square(wl.astype(jnp.float32)
+                                - wg.astype(jnp.float32)[None]), axis=axes)
+        g2 = jnp.sum(jnp.square(wg.astype(jnp.float32)))
+        ratio = jnp.sqrt(d2) / jnp.maximum(jnp.sqrt(g2), 1e-12)
+        return jnp.minimum(ratio, 1.0)
+
+    prios = None
+    for wl, wg in zip(jax.tree.leaves(local_stacked),
+                      jax.tree.leaves(global_params)):
+        r = leaf_ratio(wl, wg)
+        prios = (1.0 + r) if prios is None else prios * (1.0 + r)
+    return prios
+
+
 def contention_window(priority, N: float):
     """Eq. (3): W = N / priority."""
     return N / priority

@@ -1,115 +1,52 @@
-"""User-selection strategies (paper Sec. IV-A3 baselines + the method).
+"""DEPRECATED shim — the strategy layer moved to ``repro.engine``.
 
-  random-centralized    server picks K_t users uniformly (classic FedAvg)
-  random-distributed    equal CW for everyone; CSMA decides (FL-over-WiFi
-                        status quo, e.g. FedFly [11])
-  priority-centralized  server picks top-K_t by Eq. 2 priority (counter-
-                        filtered) — the upper-bound the paper compares to
-  priority-distributed  THE PAPER'S METHOD: W = N / priority, counter
-                        refrain, CSMA contention; server merges the first
-                        K_t arrivals.
+The canonical implementations of the paper's four selection schemes
+(Sec. IV-A3 baselines + the method) now live in
+``repro.engine.strategies`` behind the decorator registry
+(``@register_strategy``), alongside registry-only extensions. This
+module re-exports them so pre-engine imports keep working:
 
-Each strategy consumes per-user priorities (where relevant) and returns
-the selected user ids for the round.
+  * ``make_strategy(name, ...)`` -> ``repro.engine.create_strategy``
+    (plus a DeprecationWarning);
+  * the strategy classes under their old names;
+  * ``SelectionContext`` (now the engine's richer context — a strict
+    superset, positionally compatible);
+  * ``STRATEGIES`` — still exactly the paper's four.
+
+Note ``select`` now returns a ``SelectionResult`` instead of a bare
+list; it iterates/indexes/compares like the old winner list, and
+additionally carries the contention's collision + airtime stats (which
+the old API silently dropped — FLHistory.collisions was always 0).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+import warnings
+from typing import Optional
 
-import numpy as np
+from repro.core.csma import CSMAConfig
+from repro.engine.registry import available_strategies, create_strategy
+from repro.engine.strategies import (PAPER_STRATEGIES, AdaptiveBiasedCW,
+                                     HeterogeneityTopK, PriorityCentralized,
+                                     PriorityDistributed, RandomCentralized,
+                                     RandomDistributed, Strategy)
+from repro.engine.types import SelectionContext, SelectionResult
 
-from repro.core.csma import CSMASimulator, CSMAConfig
-from repro.core.counter import FairnessCounter
+STRATEGIES = PAPER_STRATEGIES
 
-STRATEGIES = ("random-centralized", "random-distributed",
-              "priority-centralized", "priority-distributed")
-
-
-@dataclass
-class SelectionContext:
-    priorities: np.ndarray           # (K,) Eq. 2 values (1.0 if unused)
-    participating: np.ndarray        # (K,) counter mask (Step 4)
-    k_target: int
-    rng: np.random.Generator
-    cw_base: float = 2048.0          # N in Eq. 3 (slots-equivalent seconds unit)
-
-
-class _Base:
-    name: str = "base"
-    uses_priority = False
-    distributed = False
-
-    def select(self, ctx: SelectionContext) -> List[int]:
-        raise NotImplementedError
-
-
-class RandomCentralized(_Base):
-    name = "random-centralized"
-
-    def select(self, ctx):
-        cand = np.where(ctx.participating)[0]
-        k = min(ctx.k_target, len(cand))
-        return list(ctx.rng.choice(cand, size=k, replace=False))
-
-
-class PriorityCentralized(_Base):
-    name = "priority-centralized"
-    uses_priority = True
-
-    def select(self, ctx):
-        cand = np.where(ctx.participating)[0]
-        k = min(ctx.k_target, len(cand))
-        order = cand[np.argsort(-ctx.priorities[cand], kind="stable")]
-        return list(order[:k])
-
-
-class _DistributedCSMA(_Base):
-    distributed = True
-
-    def __init__(self, csma_config: Optional[CSMAConfig] = None, seed: int = 0):
-        self._sim = CSMASimulator(csma_config, seed=seed)
-
-    def _windows(self, ctx) -> np.ndarray:
-        raise NotImplementedError
-
-    def select(self, ctx):
-        windows = self._windows(ctx)
-        # Eq. 3: T_backoff = R * W with R ~ U(0,1), drawn by each user
-        backoffs = ctx.rng.uniform(0.0, 1.0, size=len(windows)) * windows
-        slot_s = self._sim.config.slot_us * 1e-6
-        res = self._sim.contend(
-            backoff_seconds=backoffs * slot_s,   # windows are in slot units
-            windows_seconds=windows * slot_s,
-            k_target=ctx.k_target,
-            participating=ctx.participating)
-        return res.winners
-
-
-class RandomDistributed(_DistributedCSMA):
-    name = "random-distributed"
-
-    def _windows(self, ctx):
-        return np.full(len(ctx.priorities), ctx.cw_base)
-
-
-class PriorityDistributed(_DistributedCSMA):
-    """The paper's method: W_k = N / priority_k (Eq. 3)."""
-    name = "priority-distributed"
-    uses_priority = True
-
-    def _windows(self, ctx):
-        return ctx.cw_base / np.maximum(ctx.priorities, 1e-9)
+__all__ = ["STRATEGIES", "SelectionContext", "SelectionResult",
+           "make_strategy", "Strategy", "RandomCentralized",
+           "RandomDistributed", "PriorityCentralized",
+           "PriorityDistributed", "HeterogeneityTopK", "AdaptiveBiasedCW"]
 
 
 def make_strategy(name: str, csma_config: Optional[CSMAConfig] = None,
-                  seed: int = 0) -> _Base:
-    if name == "random-centralized":
-        return RandomCentralized()
-    if name == "priority-centralized":
-        return PriorityCentralized()
-    if name == "random-distributed":
-        return RandomDistributed(csma_config, seed)
-    if name == "priority-distributed":
-        return PriorityDistributed(csma_config, seed)
-    raise ValueError(f"unknown strategy {name!r}; known: {STRATEGIES}")
+                  seed: int = 0) -> Strategy:
+    """Deprecated: use ``repro.engine.create_strategy`` (the registry)."""
+    warnings.warn(
+        "repro.core.selection.make_strategy is deprecated; use "
+        "repro.engine.create_strategy / @register_strategy",
+        DeprecationWarning, stacklevel=2)
+    if name not in available_strategies():
+        raise ValueError(
+            f"unknown strategy {name!r}; known: {available_strategies()}")
+    return create_strategy(name, csma_config=csma_config, seed=seed)

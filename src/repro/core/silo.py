@@ -28,6 +28,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.priority import stacked_model_priorities as _tree_delta_norms
 from repro.models.model import compute_loss
 
 
@@ -37,23 +38,33 @@ def stack_for_silos(params, n_silos: int):
         lambda p: jnp.broadcast_to(p[None], (n_silos,) + p.shape), params)
 
 
-def _tree_delta_norms(local_stacked, global_params):
-    """Per-silo Eq. 2 priority from stacked local models. (n_silos,)"""
-    def leaf_ratio(wl, wg):
-        # wl: (P, ...), wg: (...)
-        axes = tuple(range(1, wl.ndim))
-        d2 = jnp.sum(jnp.square(wl.astype(jnp.float32)
-                                - wg.astype(jnp.float32)[None]), axis=axes)
-        g2 = jnp.sum(jnp.square(wg.astype(jnp.float32)))
-        ratio = jnp.sqrt(d2) / jnp.maximum(jnp.sqrt(g2), 1e-12)
-        return jnp.minimum(ratio, 1.0)
+def make_silo_merge(merge_dtype: str = "float32"):
+    """Returns ``merge_stacked(local_stacked, global_params, alphas)``:
+    the selection-gated cross-pod merge  w <- w + sum_k alpha_k (w_k - w),
+    re-broadcast to stacked form. Factored out so callers that already
+    hold the trained local stack (e.g. the engine's SiloBackend) can
+    merge without re-running local training."""
+    mdt = jnp.dtype(merge_dtype)
 
-    prios = None
-    for wl, wg in zip(jax.tree.leaves(local_stacked),
-                      jax.tree.leaves(global_params)):
-        r = leaf_ratio(wl, wg)
-        prios = (1.0 + r) if prios is None else prios * (1.0 + r)
-    return prios
+    def merge_stacked(local_stacked, global_params, alphas):
+        a = alphas.astype(jnp.float32)
+
+        def merge(wl, wg):
+            delta = (wl.astype(jnp.float32)
+                     - wg.astype(jnp.float32)[None]).astype(mdt)
+            # contraction over the pod-sharded silo axis = the cross-pod
+            # all-reduce; the barrier stops XLA from hoisting the f32
+            # convert above the reduce (which would put f32 on the wire)
+            upd = jnp.einsum("s,s...->...", a.astype(mdt), delta,
+                             preferred_element_type=mdt)
+            upd = jax.lax.optimization_barrier(upd)
+            merged = wg.astype(jnp.float32) + upd.astype(jnp.float32)
+            return jnp.broadcast_to(merged[None],
+                                    wl.shape).astype(wl.dtype)
+
+        return jax.tree.map(merge, local_stacked, global_params)
+
+    return merge_stacked
 
 
 def make_fl_round_step(cfg, lr: float = 1e-2, long_context: bool = False,
@@ -74,7 +85,7 @@ def make_fl_round_step(cfg, lr: float = 1e-2, long_context: bool = False,
     """
     loss_fn = functools.partial(compute_loss, cfg=cfg,
                                 long_context=long_context)
-    mdt = jnp.dtype(merge_dtype)
+    merge_stacked = make_silo_merge(merge_dtype)
 
     def local_step(params, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
@@ -94,22 +105,7 @@ def make_fl_round_step(cfg, lr: float = 1e-2, long_context: bool = False,
         if not do_merge:
             return losses.mean(), local, priorities
         # (4) selection-gated merge: the only cross-'pod' traffic
-        a = alphas.astype(jnp.float32)
-
-        def merge(wl, wg):
-            delta = (wl.astype(jnp.float32)
-                     - wg.astype(jnp.float32)[None]).astype(mdt)
-            # contraction over the pod-sharded silo axis = the cross-pod
-            # all-reduce; the barrier stops XLA from hoisting the f32
-            # convert above the reduce (which would put f32 on the wire)
-            upd = jnp.einsum("s,s...->...", a.astype(mdt), delta,
-                             preferred_element_type=mdt)
-            upd = jax.lax.optimization_barrier(upd)
-            merged = wg.astype(jnp.float32) + upd.astype(jnp.float32)
-            return jnp.broadcast_to(merged[None],
-                                    wl.shape).astype(wl.dtype)
-
-        new_stacked = jax.tree.map(merge, local, global_params)
+        new_stacked = merge_stacked(local, global_params, alphas)
         return losses.mean(), new_stacked, priorities
 
     return fl_round

@@ -79,7 +79,7 @@ def make_classification_dataset(
         for c in (a, b):
             templates[c] = np.clip(
                 base + 0.30 * class_sep
-                * _smooth_template(rng, spec["shape"]) - 0.15, None, None)
+                * _smooth_template(rng, spec["shape"]) - 0.15, 0.0, 1.0)
     for c in range(spec["classes"]):
         if c not in in_pair:
             templates[c] = (class_sep * _smooth_template(rng, spec["shape"])

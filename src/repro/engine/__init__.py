@@ -1,0 +1,29 @@
+"""Public engine API: one way to run FL rounds on any backend.
+
+    from repro.engine import (ExperimentSpec, FLEngine, HostBackend,
+                              SiloBackend, build_host_engine,
+                              register_strategy, create_strategy)
+
+Strategies plug in through the decorator registry (see
+``repro.engine.strategies`` for the paper's four plus two
+literature-derived extensions); backends implement the three-method
+contract in ``repro.engine.backends``. DESIGN.md documents the
+architecture.
+"""
+from repro.engine.registry import (available_strategies, create_strategy,
+                                   get_strategy_class, register_strategy)
+from repro.engine.spec import ExperimentSpec
+from repro.engine.types import (FLHistory, SelectionContext,
+                                SelectionResult, TrainResult)
+from repro.engine.strategies import PAPER_STRATEGIES, Strategy
+from repro.engine.backends import (Backend, HostBackend, SiloBackend,
+                                   label_heterogeneity)
+from repro.engine.engine import FLEngine, build_host_engine
+
+__all__ = [
+    "available_strategies", "create_strategy", "get_strategy_class",
+    "register_strategy", "ExperimentSpec", "FLHistory",
+    "SelectionContext", "SelectionResult", "TrainResult",
+    "PAPER_STRATEGIES", "Strategy", "Backend", "HostBackend",
+    "SiloBackend", "label_heterogeneity", "FLEngine", "build_host_engine",
+]

@@ -1,0 +1,261 @@
+"""Execution backends — where the round's *learning* happens.
+
+A Backend owns model state + per-user data and exposes three moves to
+the engine (DESIGN.md §2):
+
+    init_state(init_params)          -> opaque global state
+    train_round(state, t, train_ids, need_priority) -> TrainResult
+    merge(state, train_result, winners)             -> new state
+    global_params(state)             -> params pytree (for eval)
+
+Two implementations:
+
+  HostBackend  the paper's simulation. Local SGD for all users runs as
+               ONE jitted vmap(scan) over stacked client params — the
+               stacked-pytree idiom from silo.py brought to the host
+               path — replacing the seed's sequential per-user Python
+               loop (and its per-client recompiles). Falls back to the
+               per-user path automatically when users' batch counts
+               differ (vmap needs a rectangular stack).
+  SiloBackend  the cross-silo TPU path: wraps silo.make_fl_round_step,
+               so each "user" is a pod-scale silo and the merge is the
+               selection-gated cross-pod collective.
+
+Contention stays on the host in both cases (physical-medium simulation,
+DESIGN.md §3); backends never see the CSMA layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import Client, batch_epoch
+from repro.core.priority import model_priority, stacked_model_priorities
+from repro.core.server import fedavg
+from repro.engine.types import TrainResult
+from repro.optim.sgd import sgd_update
+
+
+def label_heterogeneity(user_data: Sequence, num_classes: int = 10,
+                        label_key: str = "y") -> np.ndarray:
+    """Per-user total-variation distance to the population label mix.
+
+    Returns (num_users,) scores in [0, 1]; zeros when the data carries
+    no labels (token streams, unlabeled pytrees). Consumed by
+    heterogeneity-aware strategies via ``SelectionContext.heterogeneity``.
+    """
+    labels = []
+    for d in user_data:
+        y = d.get(label_key) if isinstance(d, dict) else None
+        if y is None:
+            return np.zeros(len(user_data))
+        labels.append(np.asarray(y, np.int64).ravel())
+    # width follows the data when labels exceed the declared class count
+    width = max(num_classes,
+                1 + max((int(y.max()) for y in labels if y.size),
+                        default=0))
+    hists = np.stack([np.bincount(y, minlength=width).astype(np.float64)
+                      for y in labels])
+    rows = hists.sum(axis=1, keepdims=True)
+    probs = hists / np.maximum(rows, 1.0)
+    pop = hists.sum(axis=0) / max(hists.sum(), 1.0)
+    return 0.5 * np.abs(probs - pop[None]).sum(axis=1)
+
+
+class Backend:
+    """Contract only — see module docstring. Subclasses must set
+    ``num_users`` and ``heterogeneity`` ((num_users,) in [0,1])."""
+    num_users: int
+    heterogeneity: np.ndarray
+
+    def init_state(self, init_params):
+        raise NotImplementedError
+
+    def train_round(self, state, t: int, train_ids: List[int],
+                    need_priority: bool) -> TrainResult:
+        raise NotImplementedError
+
+    def merge(self, state, train_result: TrainResult, winners: List[int]):
+        raise NotImplementedError
+
+    def global_params(self, state):
+        return state
+
+    def num_examples(self, u: int) -> int:
+        raise NotImplementedError
+
+
+class HostBackend(Backend):
+    """Paper-scale simulation over host data with stacked-vmap training."""
+
+    def __init__(self, loss_fn, user_data: Sequence, *, lr: float = 1e-2,
+                 batch_size: int = 32, local_epochs: int = 1, seed: int = 0,
+                 prefer_vmap: bool = True, num_classes: int = 10):
+        self.num_users = len(user_data)
+        self.heterogeneity = label_heterogeneity(user_data, num_classes)
+        self._prefer_vmap = prefer_vmap
+        # Clients carry the per-user data, example counts and rng streams
+        # (and the per-user jitted trainer for the ragged fallback path).
+        self.clients = [
+            Client(u, user_data[u], loss_fn, lr=lr, batch_size=batch_size,
+                   local_epochs=local_epochs, seed=seed)
+            for u in range(self.num_users)
+        ]
+        self._batch_size = batch_size
+        self._local_epochs = local_epochs
+
+        def train_one(params, batched):
+            def step(p, batch):
+                loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+                return sgd_update(p, grads, lr), loss
+
+            params, losses = jax.lax.scan(step, params, batched)
+            return params, losses.mean()
+
+        # one compile for ALL users, vs one compile per user in the old
+        # per-client loop
+        self._train_stack = jax.jit(jax.vmap(train_one))
+        self._prio_stack = jax.jit(stacked_model_priorities)
+        self._prio_one = jax.jit(model_priority)
+
+    # ------------------------------------------------------------------
+    def init_state(self, init_params):
+        return init_params
+
+    def num_examples(self, u):
+        return self.clients[u].num_examples
+
+    def _can_stack(self, train_ids) -> bool:
+        if not self._prefer_vmap or len(train_ids) < 2:
+            return False
+        nbs = {max(1, self.clients[u].num_examples // self._batch_size)
+               for u in train_ids}
+        return len(nbs) == 1
+
+    def train_round(self, state, t, train_ids, need_priority):
+        priorities = np.ones(self.num_users)
+        if not train_ids:
+            return TrainResult(losses={}, priorities=priorities,
+                               local_handle={})
+        if self._can_stack(train_ids):
+            # epoch-batch on host with each client's own rng stream (the
+            # exact draws of the per-user path), then train the whole
+            # cohort as one stacked vmap(scan)
+            stacked = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None],
+                                           (len(train_ids),) + p.shape),
+                state)
+            for _ in range(self._local_epochs):
+                per_user = [batch_epoch(self.clients[u]._rng,
+                                        self.clients[u].data,
+                                        self._batch_size)
+                            for u in train_ids]
+                batched = jax.tree.map(
+                    lambda *xs: np.stack(xs), *per_user)
+                stacked, loss_vec = self._train_stack(stacked, batched)
+            losses = {u: float(loss_vec[i])
+                      for i, u in enumerate(train_ids)}
+            if need_priority:
+                prios = np.asarray(self._prio_stack(stacked, state))
+                for i, u in enumerate(train_ids):
+                    priorities[u] = float(prios[i])
+            handle = {"stacked": stacked, "index": {u: i for i, u
+                                                    in enumerate(train_ids)}}
+            return TrainResult(losses=losses, priorities=priorities,
+                               local_handle=handle)
+
+        # ragged fallback: per-user jitted training (the seed path)
+        locals_: Dict[int, object] = {}
+        losses = {}
+        for u in train_ids:
+            locals_[u], loss = self.clients[u].train(state)
+            losses[u] = float(loss)
+            if need_priority:
+                priorities[u] = float(self._prio_one(locals_[u], state))
+        return TrainResult(losses=losses, priorities=priorities,
+                           local_handle=locals_)
+
+    def _local(self, handle, u):
+        if isinstance(handle, dict) and "stacked" in handle:
+            i = handle["index"][u]
+            return jax.tree.map(lambda p: p[i], handle["stacked"])
+        return handle[u]
+
+    def merge(self, state, train_result, winners):
+        models = [self._local(train_result.local_handle, u)
+                  for u in winners]
+        sizes = [self.clients[u].num_examples for u in winners]
+        return fedavg(models, sizes)
+
+
+class SiloBackend(Backend):
+    """Cross-silo path: one FL "user" per pod-scale silo.
+
+    Wraps the silo round machinery: training + Eq. 2 priorities run
+    once per round as a merge-free ``make_fl_round_step`` pass
+    (vmapped over the silo axis on-device, zero cross-silo traffic);
+    ``merge`` then applies ``make_silo_merge`` to the *already trained*
+    local stack with the selection's alpha weights, so only winners'
+    deltas cross the pod boundary. Because the whole cohort trains
+    inside one fused step, ``trains_before_selection`` strategies still
+    train every silo — selection gates only the merge traffic (exactly
+    the quantity the paper meters).
+    """
+
+    def __init__(self, model_cfg, token_data: Sequence[np.ndarray], *,
+                 lr: float = 1e-2, batch_size: int = 4,
+                 long_context: bool = False, merge_dtype: str = "float32"):
+        from repro.core.silo import (make_fl_round_step, make_silo_merge,
+                                     stack_for_silos)
+        self.num_users = len(token_data)
+        self.heterogeneity = np.zeros(self.num_users)
+        self._data = [np.asarray(d) for d in token_data]
+        self._batch_size = batch_size
+        self._stack = stack_for_silos
+        self._train = jax.jit(make_fl_round_step(
+            model_cfg, lr=lr, long_context=long_context, do_merge=False))
+        merge_stacked = make_silo_merge(merge_dtype)
+        self._merge = jax.jit(
+            lambda state, local, alphas: merge_stacked(
+                local, jax.tree.map(lambda p: p[0], state), alphas))
+
+    def init_state(self, init_params):
+        return self._stack(init_params, self.num_users)
+
+    def num_examples(self, u):
+        return len(self._data[u])
+
+    def global_params(self, state):
+        return jax.tree.map(lambda p: p[0], state)
+
+    def _round_batch(self, t):
+        B = self._batch_size
+        rows = []
+        for d in self._data:
+            idx = np.arange(t * B, (t + 1) * B) % len(d)
+            rows.append(d[idx])
+        return {"tokens": jnp.asarray(np.stack(rows))}
+
+    def train_round(self, state, t, train_ids, need_priority):
+        batch = self._round_batch(t)
+        # merge-free pass: losses + trained locals + priorities, zero
+        # cross-silo traffic; the locals are kept for the merge step
+        loss, local, prios = self._train(
+            state, batch, jnp.zeros((self.num_users,), jnp.float32))
+        priorities = np.ones(self.num_users)
+        if need_priority:
+            priorities = np.asarray(prios, np.float64).copy()
+        mean_loss = float(loss)
+        return TrainResult(losses={u: mean_loss for u in train_ids},
+                           priorities=priorities, local_handle=local)
+
+    def merge(self, state, train_result, winners):
+        sizes = np.array([self.num_examples(u) for u in winners],
+                         np.float64)
+        alphas = np.zeros(self.num_users, np.float32)
+        alphas[list(winners)] = (sizes / sizes.sum()).astype(np.float32)
+        return self._merge(state, train_result.local_handle,
+                           jnp.asarray(alphas))

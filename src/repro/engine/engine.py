@@ -1,0 +1,132 @@
+"""FLEngine — the single public orchestrator for FL rounds (Fig. 1).
+
+One round, regardless of strategy or backend:
+
+  1. counter refrain mask (Step 4);
+  2. if the strategy selects before training (capability flag, e.g.
+     classic FedAvg), select now and train only winners — otherwise
+     train everyone (Step 2) and compute Eq. 2 priorities (Step 3);
+  3. strategy.select over the SelectionContext (Step 4/5 contention);
+  4. backend.merge of the winners (Eq. 1 / the gated collective);
+  5. counter + history update — including the contention's collision
+     and airtime stats, which pre-engine code silently dropped.
+
+There is deliberately no strategy-name branching here: behaviour
+differences ride entirely on the Strategy capability flags and the
+Backend contract.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.counter import FairnessCounter
+from repro.engine.backends import Backend
+from repro.engine.registry import create_strategy
+from repro.engine.spec import ExperimentSpec
+from repro.engine.types import FLHistory, SelectionContext
+
+
+class FLEngine:
+    """One FL run: spec x strategy (registry) x backend."""
+
+    def __init__(self, spec: ExperimentSpec, backend: Backend, init_params,
+                 eval_fn: Optional[Callable] = None):
+        self.spec = spec
+        self.backend = backend
+        self.eval_fn = eval_fn
+        self.num_users = backend.num_users
+        self.counter = FairnessCounter(self.num_users,
+                                       spec.counter_threshold)
+        self.strategy = create_strategy(
+            spec.strategy, csma_config=spec.csma, seed=spec.seed,
+            **spec.strategy_options)
+        self._rng = np.random.default_rng(spec.seed)
+        self.state = backend.init_state(init_params)
+
+    # ------------------------------------------------------------------
+    @property
+    def global_params(self):
+        return self.backend.global_params(self.state)
+
+    def _context(self, priorities: np.ndarray, participating: np.ndarray,
+                 t: int) -> SelectionContext:
+        return SelectionContext(
+            priorities=priorities, participating=participating,
+            k_target=self.spec.k_per_round, rng=self._rng,
+            cw_base=self.spec.cw_base,
+            counter_values=self.counter.values(),
+            heterogeneity=self.backend.heterogeneity,
+            round_index=t)
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int, history: FLHistory) -> List[int]:
+        spec, strat = self.spec, self.strategy
+        participating = (self.counter.participating() if spec.use_counter
+                         else np.ones(self.num_users, bool))
+        if not participating.any():      # degenerate threshold: reset mask
+            participating = np.ones(self.num_users, bool)
+
+        if strat.trains_before_selection:
+            sel = strat.select(
+                self._context(np.ones(self.num_users), participating, t))
+            train_ids = list(sel.winners)
+        else:
+            sel = None
+            train_ids = list(range(self.num_users))
+
+        tr = self.backend.train_round(self.state, t, train_ids,
+                                      need_priority=strat.uses_priority)
+        if sel is None:
+            sel = strat.select(
+                self._context(tr.priorities, participating, t))
+
+        winners = [int(u) for u in sel.winners]
+        if winners:
+            self.state = self.backend.merge(self.state, tr, winners)
+            self.counter.update(winners, len(winners))
+            history.uploads_total += len(winners)
+            for u in winners:
+                history.selections[u] += 1
+        history.winners.append(winners)
+        history.collisions += sel.collisions
+        history.contention_slots += sel.elapsed_slots
+        if strat.uses_priority:
+            history.priorities.append(
+                [float(tr.priorities[u]) for u in train_ids])
+        if tr.losses:
+            history.train_loss.append(
+                float(np.mean(list(tr.losses.values()))))
+        return winners
+
+    # ------------------------------------------------------------------
+    def run(self, verbose: bool = False) -> FLHistory:
+        spec = self.spec
+        history = FLHistory(
+            selections=np.zeros(self.num_users, np.int64))
+        for t in range(spec.rounds):
+            self.run_round(t, history)
+            if self.eval_fn is not None and (
+                    t % spec.eval_every == 0 or t == spec.rounds - 1):
+                acc = float(self.eval_fn(self.global_params))
+                history.accuracy.append(acc)
+                history.eval_round.append(t)
+                if verbose:
+                    print(f"[{spec.strategy}] round {t:4d} "
+                          f"acc {acc:.4f}"
+                          + (f" loss {history.train_loss[-1]:.4f}"
+                             if history.train_loss else ""))
+        return history
+
+
+def build_host_engine(spec: ExperimentSpec, init_params, loss_fn,
+                      user_data, eval_fn=None, *,
+                      prefer_vmap: bool = True) -> FLEngine:
+    """Convenience: spec + host data -> engine over HostBackend."""
+    from repro.engine.backends import HostBackend
+    backend = HostBackend(
+        loss_fn, user_data, lr=spec.lr, batch_size=spec.batch_size,
+        local_epochs=spec.local_epochs, seed=spec.seed,
+        prefer_vmap=prefer_vmap)
+    return FLEngine(spec, backend, init_params, eval_fn)

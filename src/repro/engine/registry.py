@@ -1,0 +1,67 @@
+"""Decorator-based strategy registry (DESIGN.md §2).
+
+Selection strategies self-register under a public name:
+
+    @register_strategy("priority-distributed")
+    class PriorityDistributed(Strategy):
+        uses_priority = True
+        distributed = True
+        ...
+
+and the engine resolves them by name — ``run_round`` carries zero
+strategy-name branching; behavioural differences live entirely in the
+strategy's capability flags (``uses_priority``,
+``trains_before_selection``, ``distributed``) and its ``select``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Type
+
+_REGISTRY: Dict[str, Type] = {}
+
+
+def register_strategy(name: str, *, overwrite: bool = False):
+    """Class decorator: publish a Strategy under ``name``.
+
+    Re-registering an existing name raises unless ``overwrite=True``
+    (explicit opt-in for experiment forks that shadow a builtin).
+    """
+    if not isinstance(name, str) or not name:
+        raise ValueError("strategy name must be a non-empty string")
+
+    def deco(cls):
+        if name in _REGISTRY and not overwrite:
+            raise ValueError(
+                f"strategy {name!r} already registered "
+                f"(by {_REGISTRY[name].__qualname__}); "
+                f"pass overwrite=True to replace it")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_strategies() -> Tuple[str, ...]:
+    """All registered names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy_class(name: str) -> Type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; "
+            f"known: {available_strategies()}") from None
+
+
+def create_strategy(name: str, csma_config=None, seed: int = 0, **options):
+    """Instantiate a registered strategy.
+
+    ``csma_config``/``seed`` configure the contention simulator of
+    distributed strategies (centralized ones ignore them); ``options``
+    are strategy-specific keyword arguments.
+    """
+    cls = get_strategy_class(name)
+    return cls(csma_config=csma_config, seed=seed, **options)

@@ -1,0 +1,34 @@
+"""Experiment specification — the single config object driving FLEngine.
+
+Backend-agnostic: the same spec runs the paper's host simulation
+(``HostBackend``) and the cross-silo TPU path (``SiloBackend``); only
+the backend construction differs. ``strategy_options`` forwards keyword
+arguments to the registered strategy class (e.g. ``{"gamma": 2.0}`` for
+``hetero-topk``), so new strategies need no spec changes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+from repro.core.csma import CSMAConfig
+
+
+@dataclass
+class ExperimentSpec:
+    # round structure
+    k_per_round: int = 2          # |K^t|
+    rounds: int = 100
+    eval_every: int = 1
+    # selection layer (the paper's contribution)
+    strategy: str = "priority-distributed"
+    strategy_options: Dict[str, Any] = field(default_factory=dict)
+    cw_base: float = 2048.0       # N in Eq. 3
+    use_counter: bool = True
+    counter_threshold: float = 0.16
+    csma: CSMAConfig = field(default_factory=CSMAConfig)
+    # local training (consumed by backend factories)
+    lr: float = 1e-2
+    batch_size: int = 32
+    local_epochs: int = 1
+    seed: int = 0

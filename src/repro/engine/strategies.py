@@ -1,0 +1,187 @@
+"""Selection strategies behind the registry (DESIGN.md §2).
+
+The four paper strategies (Sec. IV-A3 baselines + the method):
+
+  random-centralized    server picks K_t users uniformly (classic FedAvg)
+  random-distributed    equal CW for everyone; CSMA decides
+  priority-centralized  server picks top-K_t by Eq. 2 priority
+  priority-distributed  THE PAPER'S METHOD: W = N / priority, counter
+                        refrain, CSMA contention, first-K_t merge
+
+plus two registry-proving extensions from the related literature:
+
+  hetero-topk       heterogeneity-aware centralized top-K: Eq. 2 priority
+                    scaled by each user's label-distribution divergence
+                    (after "Data Heterogeneity-Aware Client Selection for
+                    Federated Learning in Wireless Networks")
+  adaptive-biased   adaptive-biased CW scheduling: the Eq. 3 window is
+                    additionally biased by each user's selection deficit,
+                    so under-served users contend harder (after "Adaptive
+                    Biased User Scheduling for Heterogeneous Wireless
+                    Federated Learning Network")
+
+Every strategy declares capability flags instead of being special-cased
+by name:
+
+  uses_priority           the round must compute Eq. 2 priorities
+  trains_before_selection selection happens BEFORE local training and
+                          only winners train (true FedAvg); otherwise
+                          all users train first (paper Steps 2-3)
+  distributed             winners emerge from medium contention (carries
+                          collision/airtime stats in its result)
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.csma import CSMAConfig, CSMASimulator
+from repro.engine.registry import register_strategy
+from repro.engine.types import SelectionContext, SelectionResult
+
+#: the four selection schemes evaluated in the paper, in figure order
+PAPER_STRATEGIES = ("random-centralized", "random-distributed",
+                    "priority-centralized", "priority-distributed")
+
+
+class Strategy:
+    """Base strategy: capability flags + the ``select`` contract."""
+    name: str = "?"
+    uses_priority: bool = False
+    distributed: bool = False
+    trains_before_selection: bool = False
+
+    def __init__(self, csma_config: Optional[CSMAConfig] = None,
+                 seed: int = 0):
+        del csma_config, seed  # centralized strategies need no medium
+
+    def select(self, ctx: SelectionContext) -> SelectionResult:
+        raise NotImplementedError
+
+
+@register_strategy("random-centralized")
+class RandomCentralized(Strategy):
+    """Uniform server-side pick; only the chosen K_t train (FedAvg)."""
+    trains_before_selection = True
+
+    def select(self, ctx):
+        cand = np.where(ctx.participating)[0]
+        k = min(ctx.k_target, len(cand))
+        return SelectionResult(
+            winners=[int(u) for u in
+                     ctx.rng.choice(cand, size=k, replace=False)])
+
+
+@register_strategy("priority-centralized")
+class PriorityCentralized(Strategy):
+    """Top-K_t by Eq. 2 priority — the paper's centralized upper bound."""
+    uses_priority = True
+
+    def select(self, ctx):
+        cand = np.where(ctx.participating)[0]
+        k = min(ctx.k_target, len(cand))
+        order = cand[np.argsort(-ctx.priorities[cand], kind="stable")]
+        return SelectionResult(winners=[int(u) for u in order[:k]])
+
+
+class _DistributedCSMA(Strategy):
+    """Shared CSMA plumbing: subclass supplies per-user CW sizes."""
+    distributed = True
+
+    def __init__(self, csma_config: Optional[CSMAConfig] = None,
+                 seed: int = 0):
+        self._sim = CSMASimulator(csma_config, seed=seed)
+
+    def _windows(self, ctx) -> np.ndarray:
+        raise NotImplementedError
+
+    def select(self, ctx):
+        windows = self._windows(ctx)
+        # Eq. 3: T_backoff = R * W with R ~ U(0,1), drawn by each user
+        backoffs = ctx.rng.uniform(0.0, 1.0, size=len(windows)) * windows
+        slot_s = self._sim.config.slot_us * 1e-6
+        res = self._sim.contend(
+            backoff_seconds=backoffs * slot_s,   # windows are in slot units
+            windows_seconds=windows * slot_s,
+            k_target=ctx.k_target,
+            participating=ctx.participating)
+        return SelectionResult(winners=res.winners,
+                               collisions=res.collisions,
+                               elapsed_slots=res.elapsed_slots,
+                               finish_slots=res.finish_slots)
+
+
+@register_strategy("random-distributed")
+class RandomDistributed(_DistributedCSMA):
+    """Equal CW for everyone; the medium alone picks (FL-over-WiFi)."""
+
+    def _windows(self, ctx):
+        return np.full(len(ctx.priorities), ctx.cw_base)
+
+
+@register_strategy("priority-distributed")
+class PriorityDistributed(_DistributedCSMA):
+    """The paper's method: W_k = N / priority_k (Eq. 3)."""
+    uses_priority = True
+
+    def _windows(self, ctx):
+        return ctx.cw_base / np.maximum(ctx.priorities, 1e-9)
+
+
+@register_strategy("hetero-topk")
+class HeterogeneityTopK(Strategy):
+    """Centralized top-K by priority x (1 + gamma * heterogeneity).
+
+    ``heterogeneity`` is a per-user data-divergence score in [0, 1]
+    (total-variation distance between the user's label distribution and
+    the population's — supplied by the backend via the context). Users
+    whose data deviates most from the population are boosted, on top of
+    the Eq. 2 model-distance signal. With no heterogeneity info this
+    degrades gracefully to priority-centralized.
+    """
+    uses_priority = True
+
+    def __init__(self, csma_config=None, seed: int = 0,
+                 gamma: float = 1.0):
+        super().__init__(csma_config, seed)
+        self.gamma = float(gamma)
+
+    def select(self, ctx):
+        het = getattr(ctx, "heterogeneity", None)
+        scores = np.asarray(ctx.priorities, np.float64).copy()
+        if het is not None:
+            scores = scores * (1.0 + self.gamma * np.asarray(het, np.float64))
+        cand = np.where(ctx.participating)[0]
+        k = min(ctx.k_target, len(cand))
+        order = cand[np.argsort(-scores[cand], kind="stable")]
+        return SelectionResult(winners=[int(u) for u in order[:k]])
+
+
+@register_strategy("adaptive-biased")
+class AdaptiveBiasedCW(_DistributedCSMA):
+    """Distributed CW scheduling with an adaptive fairness bias.
+
+    Each user's Eq. 3 window is divided by ``exp(eta * deficit)`` where
+    ``deficit = 1/K - share_so_far`` (its fair upload share minus its
+    realized share, from the fairness-counter values the engine already
+    tracks). Under-served users get smaller windows and contend harder;
+    over-served users back off — a *soft*, self-tuning version of the
+    paper's hard counter-refrain, and each user can compute its own bias
+    locally, so the scheme stays distributed.
+    """
+    uses_priority = True
+
+    def __init__(self, csma_config=None, seed: int = 0, eta: float = 4.0):
+        super().__init__(csma_config, seed)
+        self.eta = float(eta)
+
+    def _windows(self, ctx):
+        prio = np.maximum(ctx.priorities, 1e-9)
+        shares = getattr(ctx, "counter_values", None)
+        if shares is None:
+            bias = np.ones_like(prio)
+        else:
+            deficit = 1.0 / len(prio) - np.asarray(shares, np.float64)
+            bias = np.exp(self.eta * deficit)
+        return ctx.cw_base / (prio * bias)

@@ -1,0 +1,100 @@
+"""Shared value types of the engine API (DESIGN.md §2).
+
+``SelectionContext`` is everything a strategy may look at when picking
+the round's uploaders; ``SelectionResult`` is what it hands back —
+winners *plus* the contention cost (collisions / airtime) so the
+orchestrator can account for the medium, not just the outcome.
+
+``SelectionResult`` is deliberately sequence-like (iteration, len,
+indexing, equality against lists): pre-engine code treated a strategy's
+return value as a plain winner list, and every such call site keeps
+working unchanged against the richer type.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class SelectionContext:
+    """Per-round inputs to ``Strategy.select``.
+
+    The first five fields are the classic (paper) surface; the optional
+    tail exists for registry strategies that exploit side information —
+    ``counter_values`` for adaptive bias, ``heterogeneity`` for
+    data-aware scoring. Strategies must treat every optional field as
+    possibly-None (legacy callers construct contexts without them).
+    """
+    priorities: np.ndarray           # (K,) Eq. 2 values (1.0 if unused)
+    participating: np.ndarray        # (K,) counter mask (Step 4)
+    k_target: int
+    rng: np.random.Generator
+    cw_base: float = 2048.0          # N in Eq. 3
+    counter_values: Optional[np.ndarray] = None   # (K,) upload shares
+    heterogeneity: Optional[np.ndarray] = None    # (K,) data-divergence in [0,1]
+    round_index: int = 0
+
+
+@dataclass
+class SelectionResult:
+    """Winners in delivery order + contention statistics."""
+    winners: List[int]
+    collisions: int = 0
+    elapsed_slots: int = 0
+    finish_slots: List[int] = field(default_factory=list)
+
+    # -- sequence protocol: behaves like the old bare winner list ------
+    def __iter__(self):
+        return iter(self.winners)
+
+    def __len__(self):
+        return len(self.winners)
+
+    def __getitem__(self, i):
+        return self.winners[i]
+
+    def __contains__(self, u):
+        return u in self.winners
+
+    def __bool__(self):
+        return bool(self.winners)
+
+    def __eq__(self, other):
+        if isinstance(other, SelectionResult):
+            return (self.winners == other.winners
+                    and self.collisions == other.collisions
+                    and self.elapsed_slots == other.elapsed_slots)
+        if isinstance(other, (list, tuple)):
+            return self.winners == list(other)
+        return NotImplemented
+
+
+@dataclass
+class TrainResult:
+    """One backend training pass.
+
+    ``losses`` maps trained user id -> mean local loss; ``priorities``
+    is dense over all users (1.0 where untrained / not computed).
+    ``local_handle`` is backend-opaque — hand it back to the same
+    backend's ``merge``.
+    """
+    losses: Dict[int, float]
+    priorities: np.ndarray
+    local_handle: Any = None
+
+
+@dataclass
+class FLHistory:
+    """Round-by-round record of one engine run."""
+    accuracy: List[float] = field(default_factory=list)
+    eval_round: List[int] = field(default_factory=list)
+    train_loss: List[float] = field(default_factory=list)
+    selections: Optional[np.ndarray] = None    # (num_users,) counts
+    priorities: List[List[float]] = field(default_factory=list)
+    collisions: int = 0
+    uploads_total: int = 0
+    contention_slots: int = 0                  # total airtime+backoff slots
+    winners: List[List[int]] = field(default_factory=list)  # per round

@@ -1,5 +1,8 @@
 """Fairness counter (Step 4/5) invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.counter import FairnessCounter

@@ -1,6 +1,8 @@
 """CSMA contention simulator: determinism + protocol invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.csma import CSMASimulator, CSMAConfig

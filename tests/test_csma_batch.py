@@ -1,0 +1,112 @@
+"""Batched CSMA contention: winner-for-winner parity with the scalar
+event loop, plus shape/invariant checks. No hypothesis dependency —
+this file backstops the contention invariants when test_csma.py's
+property tests are skipped."""
+import numpy as np
+import pytest
+
+from repro.core.csma import BatchCSMAResult, CSMAConfig, CSMASimulator
+
+
+def _random_case(rng, n):
+    backoffs = rng.uniform(1e-5, 5e-3, n)
+    windows = rng.uniform(1e-4, 5e-3, n)
+    part = rng.random(n) > 0.3
+    if not part.any():
+        part[0] = True
+    return backoffs, windows, part
+
+
+def test_batch_matches_scalar_winner_for_winner():
+    """The parity contract: row b of contend_batch(seeds=[s..]) equals
+    CSMASimulator(seed=s_b).contend on the same inputs, exactly."""
+    meta = np.random.default_rng(123)
+    B, n, k = 24, 8, 3
+    backoffs = np.empty((B, n))
+    windows = np.empty((B, n))
+    part = np.empty((B, n), bool)
+    for b in range(B):
+        backoffs[b], windows[b], part[b] = _random_case(meta, n)
+    seeds = [int(s) for s in meta.integers(0, 2 ** 30, size=B)]
+
+    batch = CSMASimulator(seed=0).contend_batch(
+        backoffs, windows, k_target=k, participating=part, seeds=seeds)
+    for b in range(B):
+        scalar = CSMASimulator(seed=seeds[b]).contend(
+            backoffs[b], windows[b], k_target=k, participating=part[b])
+        got = batch.round_result(b)
+        assert got.winners == scalar.winners, b
+        assert got.finish_slots == scalar.finish_slots, b
+        assert got.collisions == scalar.collisions, b
+        assert got.elapsed_slots == scalar.elapsed_slots, b
+
+
+def test_batch_parity_under_forced_collisions():
+    """Identical tiny backoffs collide repeatedly; the per-row redraw
+    streams must still track the scalar simulator draw-for-draw."""
+    B, n = 8, 5
+    backoffs = np.full((B, n), 0.001)
+    windows = np.full((B, n), 0.01)
+    seeds = list(range(40, 40 + B))
+    batch = CSMASimulator(seed=0).contend_batch(
+        backoffs, windows, k_target=n, seeds=seeds)
+    for b in range(B):
+        scalar = CSMASimulator(seed=seeds[b]).contend(
+            backoffs[b], windows[b], k_target=n)
+        assert scalar.collisions >= 1
+        got = batch.round_result(b)
+        assert got.winners == scalar.winners
+        assert got.collisions == scalar.collisions
+
+
+def test_batch_shapes_and_padding():
+    sim = CSMASimulator(seed=1)
+    # one participant but k_target=3: one delivery, the rest -1 padded
+    res = sim.contend_batch(
+        np.array([[0.001, 0.002]]), np.array([0.01, 0.01]), k_target=3,
+        participating=np.array([True, False]))
+    assert isinstance(res, BatchCSMAResult)
+    assert res.winners.shape == (1, 3)
+    assert res.n_delivered[0] == 1
+    assert res.winners[0, 0] == 0
+    assert (res.winners[0, 1:] == -1).all()
+    assert (res.finish_slots[0, 1:] == -1).all()
+
+
+def test_batch_broadcasts_shared_windows_and_mask():
+    """(N,) windows/participating broadcast across all B rows."""
+    rng = np.random.default_rng(7)
+    backoffs = rng.uniform(1e-4, 1e-3, (6, 4))
+    res = CSMASimulator(seed=2).contend_batch(
+        backoffs, np.full(4, 0.01), k_target=2,
+        participating=np.array([True, True, True, False]))
+    assert res.winners.shape == (6, 2)
+    assert (res.winners != 3).all()
+    assert (res.n_delivered == 2).all()
+
+
+def test_batch_deterministic_without_explicit_seeds():
+    a = CSMASimulator(seed=9).contend_batch(
+        np.full((4, 3), 0.001), np.full(3, 0.01), k_target=2)
+    b = CSMASimulator(seed=9).contend_batch(
+        np.full((4, 3), 0.001), np.full(3, 0.01), k_target=2)
+    np.testing.assert_array_equal(a.winners, b.winners)
+    np.testing.assert_array_equal(a.collisions, b.collisions)
+
+
+def test_batch_invariants_many_contenders():
+    """1k-contender smoke: unique, participating winners; increasing
+    finish slots; k deliveries when enough users contend."""
+    rng = np.random.default_rng(3)
+    B, n, k = 4, 1000, 5
+    backoffs = rng.uniform(1e-5, 5e-3, (B, n))
+    windows = rng.uniform(1e-4, 5e-3, (B, n))
+    part = rng.random((B, n)) > 0.5
+    res = CSMASimulator(seed=4).contend_batch(
+        backoffs, windows, k_target=k, participating=part)
+    for b in range(B):
+        w = res.winners[b][res.winners[b] >= 0]
+        assert len(w) == len(set(w.tolist())) == k
+        assert part[b, w].all()
+        fs = res.finish_slots[b][: len(w)]
+        assert (np.diff(fs) > 0).all()

@@ -1,6 +1,8 @@
 """Data pipeline: synthetic generators + FL partitioning properties."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (make_classification_dataset, make_token_stream,

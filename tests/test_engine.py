@@ -1,0 +1,357 @@
+"""Engine API: strategy registry, FLEngine rounds, backend parity, and
+back-compat against the deprecated FLExperiment facade."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.federated import FLConfig, FLExperiment, make_accuracy_eval
+from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.engine import (ExperimentSpec, FLEngine, HostBackend,
+                          PAPER_STRATEGIES, SelectionContext,
+                          SelectionResult, Strategy, available_strategies,
+                          build_host_engine, create_strategy,
+                          get_strategy_class, register_strategy)
+from repro.engine import registry as registry_mod
+from repro.models.paper_models import get_paper_model
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_has_paper_and_extension_strategies():
+    names = available_strategies()
+    for name in PAPER_STRATEGIES:
+        assert name in names
+    assert "hetero-topk" in names
+    assert "adaptive-biased" in names
+
+
+def test_registry_lookup_and_create():
+    cls = get_strategy_class("priority-distributed")
+    s = create_strategy("priority-distributed", seed=3)
+    assert isinstance(s, cls)
+    assert s.name == "priority-distributed"
+    assert s.uses_priority and s.distributed
+    assert not s.trains_before_selection
+
+
+def test_registry_unknown_name_raises_with_known_list():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy_class("no-such-strategy")
+    with pytest.raises(ValueError, match="priority-distributed"):
+        create_strategy("no-such-strategy")
+
+
+def test_registry_duplicate_requires_overwrite():
+    @register_strategy("tmp-dup-test")
+    class A(Strategy):
+        def select(self, ctx):
+            return SelectionResult(winners=[])
+
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            @register_strategy("tmp-dup-test")
+            class B(Strategy):
+                def select(self, ctx):
+                    return SelectionResult(winners=[])
+
+        @register_strategy("tmp-dup-test", overwrite=True)
+        class C(Strategy):
+            def select(self, ctx):
+                return SelectionResult(winners=[0])
+
+        assert get_strategy_class("tmp-dup-test") is C
+    finally:
+        registry_mod._REGISTRY.pop("tmp-dup-test", None)
+
+
+def test_registry_rejects_bad_names():
+    with pytest.raises(ValueError):
+        register_strategy("")
+    with pytest.raises(ValueError):
+        register_strategy(None)
+
+
+def test_capability_flags_cover_paper_strategies():
+    """run_round branches only on flags, so they must be correct."""
+    flags = {n: get_strategy_class(n) for n in PAPER_STRATEGIES}
+    assert flags["random-centralized"].trains_before_selection
+    assert not flags["random-centralized"].uses_priority
+    assert flags["priority-centralized"].uses_priority
+    assert flags["priority-distributed"].distributed
+    assert flags["random-distributed"].distributed
+    assert not flags["random-distributed"].uses_priority
+
+
+# ----------------------------------------------------------- new strategies
+def _ctx(priorities, k=2, seed=0, **extra):
+    priorities = np.asarray(priorities, float)
+    return SelectionContext(
+        priorities=priorities,
+        participating=np.ones(len(priorities), bool), k_target=k,
+        rng=np.random.default_rng(seed), **extra)
+
+
+def test_hetero_topk_boosts_divergent_users():
+    s = create_strategy("hetero-topk", gamma=5.0)
+    # equal priorities; user 2 holds the most divergent data
+    ctx = _ctx([1.0, 1.0, 1.0, 1.0], k=1,
+               heterogeneity=np.array([0.1, 0.2, 0.9, 0.0]))
+    assert list(s.select(ctx)) == [2]
+    # no heterogeneity info -> degrades to priority order
+    ctx2 = _ctx([1.0, 1.5, 1.1, 1.0], k=1)
+    assert list(s.select(ctx2)) == [1]
+
+
+def test_adaptive_biased_shrinks_windows_of_underserved():
+    s = create_strategy("adaptive-biased", eta=4.0)
+    ctx = _ctx([1.0, 1.0, 1.0], k=1,
+               counter_values=np.array([0.8, 0.2, 0.0]))
+    w = s._windows(ctx)
+    assert w[2] < w[1] < w[0]   # never-selected user contends hardest
+
+
+def test_new_strategies_run_inside_engine(small_fl_setup):
+    params, loss_fn, user_data, eval_fn = small_fl_setup
+    for name, opts in (("hetero-topk", {"gamma": 2.0}),
+                       ("adaptive-biased", {"eta": 4.0})):
+        spec = ExperimentSpec(rounds=4, strategy=name,
+                              strategy_options=opts, seed=0)
+        hist = build_host_engine(spec, params, loss_fn, user_data,
+                                 eval_fn).run()
+        assert hist.uploads_total > 0
+        assert all(len(w) <= spec.k_per_round for w in hist.winners)
+
+
+# ------------------------------------------------------------- engine runs
+@pytest.fixture(scope="module")
+def small_fl_setup():
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        "fashion", n_train=800, n_test=200, seed=3)
+    x = xtr.reshape(len(xtr), -1)
+    xt = xte.reshape(len(xte), -1)
+    init_fn, apply_fn = get_paper_model("mlp", "fashion")
+    users = partition_noniid_shards(x, ytr, 8, seed=3)
+    user_data = [{"x": a, "y": b} for a, b in users]
+
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        oh = jax.nn.one_hot(batch["y"], 10)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    eval_fn = make_accuracy_eval(apply_fn, xt, yte)
+    params = init_fn(jax.random.PRNGKey(0))
+    return params, loss_fn, user_data, eval_fn
+
+
+def _seed_reference_winners(init_params, loss_fn, user_data, *, rounds,
+                            strategy, seed, k=2, cw_base=2048.0,
+                            threshold=0.16):
+    """Faithful transcription of the pre-engine FLExperiment.run_round
+    (sequential per-user training, direct rng.choice pre-selection for
+    random-centralized, per-user jitted Eq. 2) — the independent oracle
+    the engine's orchestration is pinned against."""
+    from repro.core.client import Client
+    from repro.core.counter import FairnessCounter
+    from repro.core.priority import model_priority
+    from repro.core.server import fedavg
+
+    n = len(user_data)
+    clients = [Client(u, user_data[u], loss_fn, lr=1e-2, batch_size=32,
+                      local_epochs=1, seed=seed) for u in range(n)]
+    counter = FairnessCounter(n, threshold)
+    strat = create_strategy(strategy, seed=seed)
+    rng = np.random.default_rng(seed)
+    prio_jit = jax.jit(model_priority)
+    params = init_params
+    winners_seq = []
+    for _t in range(rounds):
+        participating = counter.participating()
+        if not participating.any():
+            participating = np.ones(n, bool)
+        if strategy == "random-centralized":
+            cand = np.where(participating)[0]
+            kk = min(k, len(cand))
+            pre = [int(u) for u in rng.choice(cand, size=kk,
+                                              replace=False)]
+            train_set = pre
+        else:
+            pre = None
+            train_set = list(range(n))
+        locals_, prios = {}, np.ones(n)
+        for u in train_set:
+            locals_[u], _ = clients[u].train(params)
+            if strat.uses_priority:
+                prios[u] = float(prio_jit(locals_[u], params))
+        if pre is not None:
+            winners = pre
+        else:
+            ctx = SelectionContext(priorities=prios,
+                                   participating=participating,
+                                   k_target=k, rng=rng, cw_base=cw_base)
+            winners = [int(u) for u in strat.select(ctx)]
+        if winners:
+            params = fedavg([locals_[u] for u in winners],
+                            [clients[u].num_examples for u in winners])
+            counter.update(winners, len(winners))
+        winners_seq.append(winners)
+    return winners_seq
+
+
+@pytest.mark.parametrize("strategy", PAPER_STRATEGIES)
+def test_engine_matches_seed_sequential_reference(small_fl_setup,
+                                                  strategy):
+    """The engine's orchestration (flag-driven round flow, stacked vmap
+    cohort training) must reproduce the seed's sequential per-user loop
+    winner-for-winner on fixed seeds."""
+    params, loss_fn, user_data, eval_fn = small_fl_setup
+    rounds, seed = 5, 1
+    expected = _seed_reference_winners(params, loss_fn, user_data,
+                                       rounds=rounds, strategy=strategy,
+                                       seed=seed)
+    spec = ExperimentSpec(rounds=rounds, strategy=strategy, seed=seed)
+    hist = build_host_engine(spec, params, loss_fn, user_data,
+                             eval_fn).run()
+    assert hist.winners == expected
+
+
+@pytest.mark.parametrize("strategy", PAPER_STRATEGIES)
+def test_flexperiment_matches_flengine_winners(small_fl_setup, strategy):
+    """Back-compat contract: the deprecated facade and the engine
+    produce the identical seeded per-round winner sequence."""
+    params, loss_fn, user_data, eval_fn = small_fl_setup
+    rounds, seed = 6, 1
+
+    spec = ExperimentSpec(rounds=rounds, strategy=strategy, seed=seed)
+    hist_engine = build_host_engine(spec, params, loss_fn, user_data,
+                                    eval_fn).run()
+
+    cfg = FLConfig(rounds=rounds, strategy=strategy, seed=seed,
+                   num_users=len(user_data))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        hist_legacy = FLExperiment(params, loss_fn, user_data, eval_fn,
+                                   cfg).run()
+
+    assert hist_engine.winners == hist_legacy.winners
+    assert hist_engine.uploads_total == hist_legacy.uploads_total
+    np.testing.assert_array_equal(hist_engine.selections,
+                                  hist_legacy.selections)
+
+
+def test_contention_stats_reach_history(small_fl_setup):
+    """Satellite fix: CSMAResult.collisions/elapsed_slots used to be
+    dropped on the floor — distributed runs must now account airtime."""
+    params, loss_fn, user_data, eval_fn = small_fl_setup
+    spec = ExperimentSpec(rounds=5, strategy="priority-distributed",
+                          seed=0)
+    hist = build_host_engine(spec, params, loss_fn, user_data,
+                             eval_fn).run()
+    assert hist.contention_slots > 0          # airtime was burned
+    assert hist.collisions >= 0
+    # centralized selection touches no medium
+    spec_c = ExperimentSpec(rounds=5, strategy="priority-centralized",
+                            seed=0)
+    hist_c = build_host_engine(spec_c, params, loss_fn, user_data,
+                               eval_fn).run()
+    assert hist_c.contention_slots == 0 and hist_c.collisions == 0
+
+
+def test_vmap_and_fallback_paths_agree(small_fl_setup):
+    """The stacked vmap(scan) cohort trainer must reproduce the ragged
+    per-user path: same winner sequence, matching priorities/losses."""
+    params, loss_fn, user_data, eval_fn = small_fl_setup
+    spec = ExperimentSpec(rounds=4, strategy="priority-distributed",
+                          seed=2)
+    h_vmap = build_host_engine(spec, params, loss_fn, user_data, eval_fn,
+                               prefer_vmap=True).run()
+    h_loop = build_host_engine(spec, params, loss_fn, user_data, eval_fn,
+                               prefer_vmap=False).run()
+    assert h_vmap.winners == h_loop.winners
+    np.testing.assert_allclose(h_vmap.train_loss, h_loop.train_loss,
+                               rtol=1e-4)
+    np.testing.assert_allclose(h_vmap.priorities, h_loop.priorities,
+                               rtol=1e-3)
+
+
+def test_host_backend_ragged_users_fall_back(small_fl_setup):
+    """Unequal per-user batch counts can't stack; the backend must
+    detect it and still run correctly."""
+    params, loss_fn, user_data, eval_fn = small_fl_setup
+    ragged = [jax.tree.map(lambda a: a[: len(a) - 40 * (u % 2)], d)
+              for u, d in enumerate(user_data)]
+    backend = HostBackend(loss_fn, ragged, seed=0)
+    assert not backend._can_stack(list(range(len(ragged))))
+    spec = ExperimentSpec(rounds=3, strategy="priority-distributed",
+                          seed=0)
+    hist = FLEngine(spec, backend, params, eval_fn).run()
+    assert hist.uploads_total > 0
+    assert len(hist.accuracy) == 3
+
+
+def test_label_heterogeneity_scores():
+    from repro.engine import label_heterogeneity
+    skewed = [{"x": np.zeros((4, 2)), "y": np.array([0, 0, 0, 0])},
+              {"x": np.zeros((4, 2)), "y": np.array([0, 1, 2, 3])},
+              {"x": np.zeros((4, 2)), "y": np.array([0, 1, 2, 3])}]
+    h = label_heterogeneity(skewed, num_classes=4)
+    assert h[0] > h[1] >= 0       # single-label user diverges most
+    np.testing.assert_allclose(h[1], h[2])
+    tokens = [np.zeros((4, 8), np.int32)] * 2
+    np.testing.assert_array_equal(
+        label_heterogeneity(tokens, num_classes=4), [0.0, 0.0])
+
+
+def test_silo_backend_runs_through_engine():
+    """Same engine, silo backend: the cross-silo TPU path shares the
+    round API with the host simulation."""
+    from repro.configs.registry import get_config
+    from repro.data import make_token_stream
+    from repro.engine import SiloBackend
+    from repro.models.model import init_params
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    data = make_token_stream(2, 16, 8, cfg.vocab_size, seed=0)
+    backend = SiloBackend(cfg, data, lr=1e-2, batch_size=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    spec = ExperimentSpec(rounds=2, k_per_round=1,
+                          strategy="priority-distributed",
+                          counter_threshold=0.9, seed=0)
+    engine = FLEngine(spec, backend, params)
+    hist = engine.run()
+    assert hist.uploads_total >= 1
+    assert len(hist.winners) == 2
+    assert all(np.isfinite(v) for v in hist.train_loss)
+    # replicas stay synchronized after the gated merge
+    for leaf in jax.tree.leaves(engine.state):
+        np.testing.assert_array_equal(np.asarray(leaf[0]),
+                                      np.asarray(leaf[1]))
+
+
+def test_selection_result_behaves_like_winner_list():
+    r = SelectionResult(winners=[3, 1], collisions=2, elapsed_slots=100)
+    assert list(r) == [3, 1] and len(r) == 2 and r[0] == 3
+    assert 1 in r and 5 not in r
+    assert r == [3, 1]
+    assert bool(SelectionResult(winners=[])) is False
+
+
+def test_engine_importable_before_core():
+    """Regression: `import repro.engine` must work as the FIRST repro
+    import (the core package's deprecated shims import engine back, so
+    its init must stay lazy or the cycle re-enters a half-built
+    module)."""
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.engine, repro.core; "
+         "print(repro.core.FLConfig().strategy)"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.abspath(src)})
+    assert out.returncode == 0, out.stderr
+    assert "priority-distributed" in out.stdout
