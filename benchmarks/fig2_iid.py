@@ -2,13 +2,13 @@
 be comparable (claim C1). Averaged over BENCH_SEEDS seeds."""
 from __future__ import annotations
 
-from repro.core.selection import STRATEGIES
+from repro.engine import PAPER_STRATEGIES
 from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
 
 
 def run(model="mlp", dataset="fashion"):
     lines, auc = [], {}
-    for strat in STRATEGIES:
+    for strat in PAPER_STRATEGIES:
         rs = run_seeds(f"fig2/iid/{dataset}/{model}/{strat}",
                        model=model, dataset=dataset, iid=True,
                        strategy=strat)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.selection import STRATEGIES
+from repro.engine import PAPER_STRATEGIES
 from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
 
 
@@ -20,7 +20,7 @@ def _rounds_to(hist, target):
 
 def run(model="mlp", dataset="fashion", target=0.30):
     lines, auc, r2t = [], {}, {}
-    for strat in STRATEGIES:
+    for strat in PAPER_STRATEGIES:
         rs = run_seeds(f"fig3/noniid/{dataset}/{model}/{strat}",
                        model=model, dataset=dataset, iid=False,
                        strategy=strat)

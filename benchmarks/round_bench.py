@@ -1,0 +1,146 @@
+"""Round-throughput benchmark: the fused device-resident HostBackend
+round step vs the PR-1 stacked path vs the ragged per-user fallback.
+
+The paper's claim is convergence *per radio round*, so rounds/sec is
+the currency that buys CW / counter / bias sweeps at scale. This suite
+drives the full engine round (train + Eq. 2 priorities + top-K
+selection + Eq. 1 merge + counter) over a user-scaling curve and writes
+``BENCH_round.json`` at the repo root — the perf trajectory artifact CI
+uploads per PR.
+
+Selection is ``priority-centralized`` so the numbers isolate the round
+step (the CSMA medium has its own suite, ``contention_bench.py``).
+Winner sequences are asserted identical across paths on the shared
+seed, so a path can't win by drifting.
+
+  BENCH_ROUNDS=2 PYTHONPATH=src python -m benchmarks.run round   # smoke
+  BENCH_ROUND_USERS=100,1000,10000 ... python -m benchmarks.run round
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "30"))
+WARMUP = int(os.environ.get("BENCH_ROUND_WARMUP", "2"))
+# best-of-N timed repeats per mode: throughput under OS jitter
+REPEATS = int(os.environ.get("BENCH_ROUND_REPEATS", "3"))
+USERS = [int(u) for u in
+         os.environ.get("BENCH_ROUND_USERS", "100,1000").split(",")]
+# the sequential per-user path stops being fun beyond this
+RAGGED_CAP = int(os.environ.get("BENCH_ROUND_RAGGED_CAP", "200"))
+
+N_PER_USER = 64
+DIM = 32
+CLASSES = 10
+BATCH = 32
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_round.json")
+
+
+def _make_setup(num_users: int, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    user_data = []
+    for u in range(num_users):
+        probs = np.ones(CLASSES) / CLASSES
+        probs[u % CLASSES] += 1.0       # label skew -> non-flat priorities
+        probs /= probs.sum()
+        user_data.append({
+            "x": rng.normal(size=(N_PER_USER, DIM)).astype(np.float32),
+            "y": rng.choice(CLASSES, N_PER_USER, p=probs),
+        })
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], CLASSES)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((DIM, CLASSES), jnp.float32),
+              "b": jnp.zeros((CLASSES,), jnp.float32)}
+    return params, loss_fn, user_data
+
+
+def _bench_mode(mode: str, num_users: int):
+    """Returns (rounds_per_sec, winner_sequence) for one round path."""
+    from repro.engine import ExperimentSpec, build_host_engine
+    from repro.engine.types import FLHistory
+
+    params, loss_fn, user_data = _make_setup(num_users)
+    spec = ExperimentSpec(rounds=WARMUP + ROUNDS,
+                          strategy="priority-centralized",
+                          batch_size=BATCH, seed=0, eval_every=10 ** 9)
+    engine = build_host_engine(spec, params, loss_fn, user_data,
+                               round_mode=mode)
+    history = FLHistory(selections=np.zeros(num_users, np.int64))
+    for t in range(WARMUP):                 # compile + cache warm
+        engine.run_round(t, history)
+    best = float("inf")
+    t = WARMUP
+    for _ in range(REPEATS):                # best-of: rejects OS jitter
+        t0 = time.time()
+        for _ in range(ROUNDS):
+            engine.run_round(t, history)
+            t += 1
+        best = min(best, time.time() - t0)
+    return ROUNDS / best, history.winners
+
+
+def run():
+    import jax
+
+    lines = []
+    report = {
+        "config": {"rounds": ROUNDS, "warmup": WARMUP,
+                   "n_per_user": N_PER_USER, "dim": DIM,
+                   "batch_size": BATCH, "strategy": "priority-centralized"},
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "results": [],
+        "speedup_fused_vs_stacked": {},
+        "winner_parity": {},
+    }
+    for n in USERS:
+        rps = {}
+        winners = {}
+        modes = ["fused", "stacked"] + (
+            ["ragged"] if n <= RAGGED_CAP else [])
+        for mode in modes:
+            rps[mode], winners[mode] = _bench_mode(mode, n)
+            report["results"].append({
+                "users": n, "mode": mode,
+                "rounds_per_sec": round(rps[mode], 3),
+                "us_per_round": round(1e6 / rps[mode], 1),
+            })
+            lines.append(f"round/{mode}/{n},{1e6 / rps[mode]:.0f},"
+                         f"rounds_per_sec={rps[mode]:.2f}")
+        if n > RAGGED_CAP:
+            lines.append(f"round/ragged/{n},0,"
+                         "skipped_set_BENCH_ROUND_RAGGED_CAP")
+        parity = all(winners[m] == winners["fused"] for m in modes)
+        speedup = rps["fused"] / rps["stacked"]
+        report["speedup_fused_vs_stacked"][str(n)] = round(speedup, 2)
+        report["winner_parity"][str(n)] = bool(parity)
+        lines.append(f"round/derived/{n},0,"
+                     f"speedup_fused_vs_stacked={speedup:.2f}x;"
+                     f"winner_parity={parity}")
+    # write the report BEFORE failing on parity — a divergence must not
+    # discard the measurements that diagnose it
+    with open(_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    lines.append(f"round/json,0,wrote={os.path.abspath(_JSON_PATH)}")
+    bad = [n for n, ok in report["winner_parity"].items() if not ok]
+    assert not bad, f"round paths diverged at users={bad}"
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print("\n".join(run()))

@@ -14,10 +14,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import FLConfig, FLExperiment
 from repro.core.federated import make_accuracy_eval
-from repro.core.selection import STRATEGIES
 from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.engine import (ExperimentSpec, PAPER_STRATEGIES,
+                          build_host_engine)
 from repro.models.paper_models import get_paper_model
 
 
@@ -50,14 +50,15 @@ def main():
     outdir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(outdir, exist_ok=True)
     results = {}
-    runs = [(s, True) for s in STRATEGIES]
+    runs = [(s, True) for s in PAPER_STRATEGIES]
     runs.append(("priority-centralized", False))  # counter ablation
     for strategy, use_counter in runs:
         tag = strategy + ("" if use_counter else "/no-counter")
-        cfg = FLConfig(rounds=args.rounds, strategy=strategy,
-                       use_counter=use_counter, eval_every=2,
-                       seed=args.seed)
-        hist = FLExperiment(params, loss_fn, user_data, eval_fn, cfg).run()
+        spec = ExperimentSpec(rounds=args.rounds, strategy=strategy,
+                              use_counter=use_counter, eval_every=2,
+                              seed=args.seed)
+        hist = build_host_engine(spec, params, loss_fn, user_data,
+                                 eval_fn).run()
         results[tag] = {
             "round": hist.eval_round, "acc": hist.accuracy,
             "selections": hist.selections.tolist(),

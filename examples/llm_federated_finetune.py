@@ -20,8 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core import FLConfig, FLExperiment
 from repro.data import make_token_stream
+from repro.engine import ExperimentSpec, build_host_engine
 from repro.models.model import init_params, compute_loss
 
 
@@ -56,11 +56,11 @@ def main():
         return -float(eval_jit(params))   # negated loss: higher = better
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    flcfg = FLConfig(num_users=args.users, k_per_round=2,
-                     rounds=args.rounds, lr=args.lr, batch_size=8,
-                     strategy=args.strategy, seed=args.seed, eval_every=2)
-    exp = FLExperiment(params, loss_fn, user_data, eval_fn, flcfg)
-    hist = exp.run()
+    spec = ExperimentSpec(k_per_round=2, rounds=args.rounds, lr=args.lr,
+                          batch_size=8, strategy=args.strategy,
+                          seed=args.seed, eval_every=2)
+    hist = build_host_engine(spec, params, loss_fn, user_data,
+                             eval_fn).run()
     for r, m in zip(hist.eval_round, hist.accuracy):
         print(f"  round {r:3d}  eval_loss {-m:.4f}")
     print("selections:", hist.selections.tolist())

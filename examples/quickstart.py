@@ -15,9 +15,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import FLConfig, FLExperiment
 from repro.core.federated import make_accuracy_eval
 from repro.data import make_classification_dataset, partition_noniid_shards
+from repro.engine import ExperimentSpec, build_host_engine
 from repro.models.paper_models import get_paper_model
 
 
@@ -38,8 +38,9 @@ def main():
     params = init_fn(jax.random.PRNGKey(0))
 
     for strategy in ("random-distributed", "priority-distributed"):
-        cfg = FLConfig(rounds=40, strategy=strategy, eval_every=4)
-        hist = FLExperiment(params, loss_fn, user_data, eval_fn, cfg).run()
+        spec = ExperimentSpec(rounds=40, strategy=strategy, eval_every=4)
+        hist = build_host_engine(spec, params, loss_fn, user_data,
+                                 eval_fn).run()
         print(f"\n== {strategy} ==")
         for r, a in zip(hist.eval_round, hist.accuracy):
             print(f"  round {r:3d}  acc {a:.3f}")

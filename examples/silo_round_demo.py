@@ -64,7 +64,7 @@ def main():
             alphas[w] = 1.0 / len(res.winners)
         counter.update(res.winners, max(1, len(res.winners)))
         _, stacked, _ = fl_round(stacked, batch, jnp.asarray(alphas))
-        print(f"round {t}: loss {float(loss):.4f} "
+        print(f"round {t}: loss {float(np.mean(loss)):.4f} "
               f"priorities {[round(float(p), 3) for p in prios_np]} "
               f"winner {res.winners} collisions {res.collisions}")
     print("selection counts:", counter.uploads.tolist())

@@ -12,20 +12,37 @@ from repro.core.priority import model_priority
 from repro.optim.sgd import sgd_update
 
 
+def sgd_epoch_scan(loss_fn: Callable, lr: float) -> Callable:
+    """Returns ``run(params, batched_data) -> (params, per_batch_losses)``:
+    one SGD step per batch, scanned.
+
+    THE local-SGD inner loop — the ragged per-user trainer, the stacked
+    vmap path and the fused cohort round all build on this one closure,
+    so the three HostBackend paths can't drift apart numerically
+    (their winner parity is pinned by ``tests/test_fused_round.py``).
+    """
+
+    def run(params, batched_data):
+        def step(p, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+            return sgd_update(p, grads, lr), loss
+
+        return jax.lax.scan(step, params, batched_data)
+
+    return run
+
+
 def make_local_trainer(loss_fn: Callable, lr: float) -> Callable:
     """Returns jit'd ``train(params, batched_data) -> (params, mean_loss)``.
 
     ``batched_data``: pytree whose leaves have shape (num_batches, batch,
     ...); one SGD step per batch, scanned.
     """
+    run = sgd_epoch_scan(loss_fn, lr)
 
     @jax.jit
     def train(params, batched_data):
-        def step(p, batch):
-            loss, grads = jax.value_and_grad(loss_fn)(p, batch)
-            return sgd_update(p, grads, lr), loss
-
-        params, losses = jax.lax.scan(step, params, batched_data)
+        params, losses = run(params, batched_data)
         return params, losses.mean()
 
     return train

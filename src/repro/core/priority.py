@@ -54,26 +54,22 @@ def model_priority(local_params, global_params, use_kernel=True):
     return prio
 
 
-def stacked_model_priorities(local_stacked, global_params):
-    """Eq. (2) over a (S, ...)-stacked pytree of local models: per-stack
-    relative layer distances vs one global model, clamped at 1 like
-    ``layer_distance_ratios``, multiplied into (S,) priorities. The
-    vectorized twin of ``model_priority`` used by the stacked cohort /
-    silo paths."""
-    def leaf_ratio(wl, wg):
-        axes = tuple(range(1, wl.ndim))
-        d2 = jnp.sum(jnp.square(wl.astype(jnp.float32)
-                                - wg.astype(jnp.float32)[None]), axis=axes)
-        g2 = jnp.sum(jnp.square(wg.astype(jnp.float32)))
-        ratio = jnp.sqrt(d2) / jnp.maximum(jnp.sqrt(g2), 1e-12)
-        return jnp.minimum(ratio, 1.0)
+def stacked_model_priorities(local_stacked, global_params,
+                             use_kernel=False):
+    """Eq. (2) over a (S, ...)-stacked pytree of local models — THE one
+    vectorized twin of ``model_priority`` (a vmap of it over the stack
+    axis), shared by the stacked cohort, fused cohort and silo paths so
+    Eq. 2 has exactly one definition.
 
-    prios = None
-    for wl, wg in zip(jax.tree.leaves(local_stacked),
-                      jax.tree.leaves(global_params)):
-        r = leaf_ratio(wl, wg)
-        prios = (1.0 + r) if prios is None else prios * (1.0 + r)
-    return prios
+    ``use_kernel=False`` (default) keeps the reduction pure-jnp, which
+    GSPMD partitions natively — required inside the sharded silo
+    program. The fused HostBackend passes its dispatch decision through
+    so single-partition runs reach the ``kernels.ops.delta_norm``
+    Pallas path on TPU / under interpret mode."""
+    def one(local):
+        return model_priority(local, global_params, use_kernel=use_kernel)
+
+    return jax.vmap(one)(local_stacked)
 
 
 def contention_window(priority, N: float):

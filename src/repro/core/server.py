@@ -33,6 +33,34 @@ def fedavg(models: Sequence, data_sizes: Sequence[float], use_kernel=True):
     return jax.tree.map(combine, *models)
 
 
+def winner_alphas(num_users: int, winners: Sequence[int],
+                  data_sizes: Sequence[float]) -> np.ndarray:
+    """Dense (num_users,) f32 merge-weight vector for a masked Eq. (1):
+    normalized |D_k| shares at the winners' indices, exact zero
+    elsewhere. One definition shared by the host and silo merges."""
+    sizes = np.asarray(data_sizes, np.float64)
+    alphas = np.zeros(num_users, np.float32)
+    alphas[list(winners)] = (sizes / sizes.sum()).astype(np.float32)
+    return alphas
+
+
+def fedavg_masked(stacked_params, alphas, use_kernel=True):
+    """Eq. (1) as a masked reduction over the FULL cohort stack.
+
+    ``stacked_params``: (U, ...) pytree holding every user's local model;
+    ``alphas``: (U,) f32 merge weights — normalized |D_k| shares for the
+    round's winners, exactly zero elsewhere. Equivalent to ``fedavg``
+    over the winners' gathered models, but stays one fused per-leaf
+    reduction on the stacked pytree (no per-winner gather / restack),
+    which is what lets the fused HostBackend round keep the cohort
+    device-resident. jit-safe; winners enter only through ``alphas``.
+    """
+    return jax.tree.map(
+        lambda leaf: kops.fedavg_combine(leaf, alphas,
+                                         use_kernel=use_kernel),
+        stacked_params)
+
+
 def fedavg_delta(global_params, deltas: Sequence, data_sizes, use_kernel=True):
     """Delta form: w + sum_k alpha_k (w_k - w). Equivalent to Eq. (1) when
     every delta is (w_k - w); this is the form used at LLM scale so

@@ -71,7 +71,12 @@ def make_fl_round_step(cfg, lr: float = 1e-2, long_context: bool = False,
                        do_merge: bool = True,
                        merge_dtype: str = "float32"):
     """Returns fl_round(stacked_params, batch, alphas) ->
-    (mean_loss, new_stacked_params, priorities).
+    (per_silo_losses, new_stacked_params, priorities).
+
+    ``per_silo_losses`` is the (S,) vector of each silo's OWN local
+    loss (callers wanting the cohort mean take ``.mean()``); earlier
+    revisions collapsed it to a scalar, which made the engine report
+    the cohort-mean loss for every silo.
 
     stacked_params: (S, ...) pytree, silo-stacked (shard dim 0 over 'pod').
     batch: {"tokens": (S, B, L+1), ...} silo-major.
@@ -103,10 +108,10 @@ def make_fl_round_step(cfg, lr: float = 1e-2, long_context: bool = False,
         global_params = jax.tree.map(lambda p: p[0], stacked_params)
         priorities = _tree_delta_norms(local, global_params)
         if not do_merge:
-            return losses.mean(), local, priorities
+            return losses, local, priorities
         # (4) selection-gated merge: the only cross-'pod' traffic
         new_stacked = merge_stacked(local, global_params, alphas)
-        return losses.mean(), new_stacked, priorities
+        return losses, new_stacked, priorities
 
     return fl_round
 

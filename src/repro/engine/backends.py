@@ -10,13 +10,36 @@ the engine (DESIGN.md §2):
 
 Two implementations:
 
-  HostBackend  the paper's simulation. Local SGD for all users runs as
-               ONE jitted vmap(scan) over stacked client params — the
-               stacked-pytree idiom from silo.py brought to the host
-               path — replacing the seed's sequential per-user Python
-               loop (and its per-client recompiles). Falls back to the
-               per-user path automatically when users' batch counts
-               differ (vmap needs a rectangular stack).
+  HostBackend  the paper's simulation. Three round paths, fastest
+               applicable wins:
+
+               fused    (default) ONE jitted, donated, device-resident
+                        step per round: local_epochs folded into the
+                        scanned batch axis, Eq. 2 priorities fused into
+                        the same call via ``kernels.ops.delta_norm``,
+                        and the merge a masked alpha-weighted reduction
+                        over the full stacked cohort through
+                        ``kernels.ops.fedavg_combine`` — the trained
+                        stack is donated into the merge and the merged
+                        stack stays device-resident for the next round
+                        (no per-round broadcast rebuild). The cohort
+                        axis optionally shards over a ``jax.sharding``
+                        mesh (``sharding/cohort.py``; no-op on one
+                        device). Requires a rectangular cohort (equal
+                        per-user example counts) and a full-cohort
+                        round.
+               stacked  the PR-1 path: per-epoch vmap(scan) dispatch +
+                        per-winner gather merge. Used for partial-cohort
+                        rounds (``trains_before_selection`` strategies)
+                        and kept as the benchmark baseline
+                        (``benchmarks/round_bench.py``).
+               ragged   per-user jitted training (the seed path), when
+                        users' batch counts differ and nothing stacks.
+
+               All three are draw-for-draw equivalent: epoch batching
+               stays on host with each client's own rng stream, so
+               fixed seeds give identical winner sequences
+               (``tests/test_fused_round.py``).
   SiloBackend  the cross-silo TPU path: wraps silo.make_fl_round_step,
                so each "user" is a pod-scale silo and the merge is the
                selection-gated cross-pod collective.
@@ -32,11 +55,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.client import Client, batch_epoch
+from repro.core.client import Client, batch_epoch, sgd_epoch_scan
 from repro.core.priority import model_priority, stacked_model_priorities
-from repro.core.server import fedavg
+from repro.core.server import fedavg, fedavg_masked, winner_alphas
 from repro.engine.types import TrainResult
-from repro.optim.sgd import sgd_update
+from repro.sharding.cohort import (cohort_sharding, replicated_sharding,
+                                   shardable)
 
 
 def label_heterogeneity(user_data: Sequence, num_classes: int = 10,
@@ -89,14 +113,31 @@ class Backend:
 
 
 class HostBackend(Backend):
-    """Paper-scale simulation over host data with stacked-vmap training."""
+    """Paper-scale simulation over host data. See module docstring for
+    the fused / stacked / ragged round paths.
+
+    ``round_mode``: "fused" (default), "stacked" (the PR-1 path, kept as
+    the benchmark baseline), or "ragged" (per-user jitted loop).
+    ``mesh``: optional 1-axis ``jax.sharding`` mesh from
+    ``sharding.cohort_mesh`` — the fused stack, batches and per-user
+    outputs shard their leading cohort axis over it when the user count
+    divides the axis (no-op on one device).
+    """
 
     def __init__(self, loss_fn, user_data: Sequence, *, lr: float = 1e-2,
                  batch_size: int = 32, local_epochs: int = 1, seed: int = 0,
-                 prefer_vmap: bool = True, num_classes: int = 10):
+                 prefer_vmap: bool = True, num_classes: int = 10,
+                 round_mode: Optional[str] = None, mesh=None):
+        if round_mode is None:
+            round_mode = "fused" if prefer_vmap else "ragged"
+        if round_mode not in ("fused", "stacked", "ragged"):
+            raise ValueError(f"unknown round_mode {round_mode!r}")
         self.num_users = len(user_data)
         self.heterogeneity = label_heterogeneity(user_data, num_classes)
-        self._prefer_vmap = prefer_vmap
+        # an explicit round_mode subsumes the legacy prefer_vmap flag:
+        # "stacked"/"fused" always stack what they can, "ragged" never
+        self._mode = round_mode
+        self._prefer_vmap = round_mode != "ragged"
         # Clients carry the per-user data, example counts and rng streams
         # (and the per-user jitted trainer for the ragged fallback path).
         self.clients = [
@@ -104,15 +145,24 @@ class HostBackend(Backend):
                    local_epochs=local_epochs, seed=seed)
             for u in range(self.num_users)
         ]
+        self._loss_fn = loss_fn
+        self._lr = lr
         self._batch_size = batch_size
         self._local_epochs = local_epochs
+        self._mesh = mesh
+        self._shard = shardable(self.num_users, mesh)
+        # Pallas under GSPMD needs custom partitioning; when the cohort
+        # actually shards over >1 device, route the fused reductions
+        # through the jnp oracle, which GSPMD partitions on its own.
+        # Single-partition execution (no mesh, 1-long axis, or an
+        # unusable mesh) keeps the kernel path.
+        self._use_kernel = (not self._shard) or mesh.size == 1
+
+        epoch_run = sgd_epoch_scan(loss_fn, lr)
+        self._epoch_run = epoch_run   # the shared local-SGD inner loop
 
         def train_one(params, batched):
-            def step(p, batch):
-                loss, grads = jax.value_and_grad(loss_fn)(p, batch)
-                return sgd_update(p, grads, lr), loss
-
-            params, losses = jax.lax.scan(step, params, batched)
+            params, losses = epoch_run(params, batched)
             return params, losses.mean()
 
         # one compile for ALL users, vs one compile per user in the old
@@ -120,6 +170,17 @@ class HostBackend(Backend):
         self._train_stack = jax.jit(jax.vmap(train_one))
         self._prio_stack = jax.jit(stacked_model_priorities)
         self._prio_one = jax.jit(model_priority)
+
+        # ---- fused-path state (built lazily on first fused round) ----
+        ns = {c.num_examples for c in self.clients}
+        self._rect = (len(ns) == 1
+                      and batch_size <= self.clients[0].num_examples)
+        self._xstack = None        # (U, n, ...) pre-stacked user data
+        self._fused_round = None
+        self._fused_merge_fn = None
+        self._bcast = None
+        self._resident = None      # device-resident merged cohort stack
+        self._resident_key = None  # the global-state object it mirrors
 
     # ------------------------------------------------------------------
     def init_state(self, init_params):
@@ -135,15 +196,118 @@ class HostBackend(Backend):
                for u in train_ids}
         return len(nbs) == 1
 
+    def _can_fuse(self, train_ids) -> bool:
+        return (self._mode == "fused" and self._rect
+                and len(train_ids) == self.num_users)
+
+    # ------------------------------------------------- fused round path
+    def _build_fused(self):
+        U = self.num_users
+        nb = max(1, self.clients[0].num_examples // self._batch_size)
+        self._nb = nb
+        self._xstack = jax.tree.map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]),
+            *[c.data for c in self.clients])
+        # repoint each client at a VIEW of its stack row so the fallback
+        # paths keep working while the dataset lives in host memory once,
+        # not twice (np.stack copied; the originals can now be collected)
+        for c in self.clients:
+            c.data = jax.tree.map(lambda leaf: leaf[c.uid], self._xstack)
+        epoch_run, uk = self._epoch_run, self._use_kernel
+
+        def bcast(g):
+            return jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (U,) + p.shape), g)
+
+        def fused_round(stack, batched, need_prio):
+            # rows of `stack` are identical at round start (the merged /
+            # broadcast global), so row 0 is the Eq. 2 reference model
+            glob = jax.tree.map(lambda p: p[0], stack)
+            trained, losses = jax.vmap(epoch_run)(stack, batched)
+            # per-user loss = mean over the LAST epoch's batches, the
+            # exact quantity the stacked / ragged paths report
+            loss_u = losses[:, -nb:].mean(axis=1)
+            if need_prio:
+                prios = stacked_model_priorities(trained, glob,
+                                                 use_kernel=uk)
+            else:
+                prios = jnp.ones((U,), jnp.float32)
+            return trained, loss_u, prios
+
+        def fused_merge(trained, alphas):
+            new_glob = fedavg_masked(trained, alphas, use_kernel=uk)
+            new_stack = jax.tree.map(
+                lambda g, l: jnp.broadcast_to(g[None], l.shape),
+                new_glob, trained)
+            return new_glob, new_stack
+
+        if self._shard:
+            cs = cohort_sharding(self._mesh)
+            rep = replicated_sharding(self._mesh)
+            self._bcast = jax.jit(bcast, out_shardings=cs)
+            self._fused_round = jax.jit(
+                fused_round, static_argnums=2, donate_argnums=0,
+                in_shardings=(cs, cs), out_shardings=(cs, cs, cs))
+            self._fused_merge_fn = jax.jit(
+                fused_merge, donate_argnums=0,
+                in_shardings=(cs, rep), out_shardings=(rep, cs))
+        else:
+            self._bcast = jax.jit(bcast)
+            self._fused_round = jax.jit(fused_round, static_argnums=2,
+                                        donate_argnums=0)
+            self._fused_merge_fn = jax.jit(fused_merge, donate_argnums=0)
+
+    def _fused_batches(self):
+        """(U, E*nb, bs, ...) round batches: every client draws one
+        epoch permutation per epoch from ITS OWN rng stream — the exact
+        draws of the stacked / ragged paths — then one fancy-index over
+        the pre-stacked data replaces U per-user gathers + np.stack."""
+        U, bs, nb, E = (self.num_users, self._batch_size, self._nb,
+                        self._local_epochs)
+        n = self.clients[0].num_examples
+        take = nb * bs
+        perms = np.empty((E, U, take), np.int64)
+        for e in range(E):
+            for c in self.clients:
+                perms[e, c.uid] = c._rng.permutation(n)[:take]
+        big = perms.transpose(1, 0, 2).reshape(U, E * take)
+        rows = np.arange(U)[:, None]
+        return jax.tree.map(
+            lambda leaf: leaf[rows, big].reshape(
+                (U, E * nb, bs) + leaf.shape[2:]),
+            self._xstack)
+
+    def _train_round_fused(self, state, need_priority) -> TrainResult:
+        if self._fused_round is None:
+            self._build_fused()
+        if self._resident is not None and self._resident_key is state:
+            stack = self._resident          # device-resident since merge
+        else:
+            stack = self._bcast(state)      # first round / unmerged round
+        # the stack buffer is donated into the trained stack below
+        self._resident = self._resident_key = None
+        trained, loss_vec, prios = self._fused_round(
+            stack, self._fused_batches(), bool(need_priority))
+        priorities = (np.asarray(prios, np.float64).copy()
+                      if need_priority else np.ones(self.num_users))
+        # dense (U,) loss vector — a per-user dict would reintroduce the
+        # O(U) Python conversion the fused path exists to kill
+        return TrainResult(losses=np.asarray(loss_vec, np.float64),
+                           priorities=priorities,
+                           local_handle={"fused_stack": trained})
+
+    # ------------------------------------------------------------------
     def train_round(self, state, t, train_ids, need_priority):
         priorities = np.ones(self.num_users)
         if not train_ids:
             return TrainResult(losses={}, priorities=priorities,
                                local_handle={})
-        if self._can_stack(train_ids):
-            # epoch-batch on host with each client's own rng stream (the
-            # exact draws of the per-user path), then train the whole
-            # cohort as one stacked vmap(scan)
+        if self._can_fuse(train_ids):
+            return self._train_round_fused(state, need_priority)
+        if self._mode != "ragged" and self._can_stack(train_ids):
+            # PR-1 stacked path: epoch-batch on host with each client's
+            # own rng stream, then train the whole (sub)cohort as one
+            # stacked vmap(scan) per epoch
             stacked = jax.tree.map(
                 lambda p: jnp.broadcast_to(p[None],
                                            (len(train_ids),) + p.shape),
@@ -185,8 +349,23 @@ class HostBackend(Backend):
         return handle[u]
 
     def merge(self, state, train_result, winners):
-        models = [self._local(train_result.local_handle, u)
-                  for u in winners]
+        handle = train_result.local_handle
+        if isinstance(handle, dict) and "fused_stack" in handle:
+            alphas = winner_alphas(
+                self.num_users, winners,
+                [self.clients[u].num_examples for u in winners])
+            new_glob, new_stack = self._fused_merge_fn(
+                handle["fused_stack"], jnp.asarray(alphas))
+            handle["fused_stack"] = None     # buffer donated into the stack
+            self._resident = new_stack       # stays on device for round t+1
+            self._resident_key = new_glob
+            return new_glob
+        # gather-merge (stacked / ragged handles): the produced state is
+        # no longer mirrored by any resident stack — drop it so a
+        # cohort-sized pytree can't stay pinned on device across a run
+        # that switched to partial-cohort rounds
+        self._resident = self._resident_key = None
+        models = [self._local(handle, u) for u in winners]
         sizes = [self.clients[u].num_examples for u in winners]
         return fedavg(models, sizes)
 
@@ -241,21 +420,19 @@ class SiloBackend(Backend):
 
     def train_round(self, state, t, train_ids, need_priority):
         batch = self._round_batch(t)
-        # merge-free pass: losses + trained locals + priorities, zero
-        # cross-silo traffic; the locals are kept for the merge step
-        loss, local, prios = self._train(
+        # merge-free pass: per-silo losses + trained locals + priorities,
+        # zero cross-silo traffic; the locals are kept for the merge step
+        loss_vec, local, prios = self._train(
             state, batch, jnp.zeros((self.num_users,), jnp.float32))
         priorities = np.ones(self.num_users)
         if need_priority:
             priorities = np.asarray(prios, np.float64).copy()
-        mean_loss = float(loss)
-        return TrainResult(losses={u: mean_loss for u in train_ids},
+        loss_np = np.asarray(loss_vec)
+        return TrainResult(losses={u: float(loss_np[u]) for u in train_ids},
                            priorities=priorities, local_handle=local)
 
     def merge(self, state, train_result, winners):
-        sizes = np.array([self.num_examples(u) for u in winners],
-                         np.float64)
-        alphas = np.zeros(self.num_users, np.float32)
-        alphas[list(winners)] = (sizes / sizes.sum()).astype(np.float32)
+        alphas = winner_alphas(self.num_users, winners,
+                               [self.num_examples(u) for u in winners])
         return self._merge(state, train_result.local_handle,
                            jnp.asarray(alphas))

@@ -93,11 +93,15 @@ class FLEngine:
         history.collisions += sel.collisions
         history.contention_slots += sel.elapsed_slots
         if strat.uses_priority:
+            # one vectorized conversion — per-element float() is O(U)
+            # Python overhead at 1e4+ users
             history.priorities.append(
-                [float(tr.priorities[u]) for u in train_ids])
-        if tr.losses:
-            history.train_loss.append(
-                float(np.mean(list(tr.losses.values()))))
+                np.asarray(tr.priorities, np.float64)[train_ids].tolist())
+        if tr.losses is not None and len(tr.losses):
+            # dict (partial-cohort rounds) or dense (U,) vector (fused)
+            vals = (list(tr.losses.values())
+                    if isinstance(tr.losses, dict) else tr.losses)
+            history.train_loss.append(float(np.mean(vals)))
         return winners
 
     # ------------------------------------------------------------------
@@ -122,11 +126,17 @@ class FLEngine:
 
 def build_host_engine(spec: ExperimentSpec, init_params, loss_fn,
                       user_data, eval_fn=None, *,
-                      prefer_vmap: bool = True) -> FLEngine:
-    """Convenience: spec + host data -> engine over HostBackend."""
+                      prefer_vmap: bool = True, round_mode: str = None,
+                      mesh=None) -> FLEngine:
+    """Convenience: spec + host data -> engine over HostBackend.
+
+    ``round_mode`` picks the backend round path ("fused" / "stacked" /
+    "ragged"; default fused); ``mesh`` optionally shards the fused
+    cohort axis over devices (see ``repro.sharding.cohort``).
+    """
     from repro.engine.backends import HostBackend
     backend = HostBackend(
         loss_fn, user_data, lr=spec.lr, batch_size=spec.batch_size,
         local_epochs=spec.local_epochs, seed=spec.seed,
-        prefer_vmap=prefer_vmap)
+        prefer_vmap=prefer_vmap, round_mode=round_mode, mesh=mesh)
     return FLEngine(spec, backend, init_params, eval_fn)

@@ -13,7 +13,7 @@ working unchanged against the richer type.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
@@ -76,12 +76,15 @@ class SelectionResult:
 class TrainResult:
     """One backend training pass.
 
-    ``losses`` maps trained user id -> mean local loss; ``priorities``
-    is dense over all users (1.0 where untrained / not computed).
-    ``local_handle`` is backend-opaque — hand it back to the same
-    backend's ``merge``.
+    ``losses`` is either a dict mapping trained user id -> mean local
+    loss (partial-cohort rounds) or a dense (num_users,) float vector
+    (full-cohort rounds — the fused path returns the vector to avoid
+    an O(U) per-element Python conversion at 1e4+ users).
+    ``priorities`` is dense over all users (1.0 where untrained / not
+    computed). ``local_handle`` is backend-opaque — hand it back to the
+    same backend's ``merge``.
     """
-    losses: Dict[int, float]
+    losses: Union[Dict[int, float], np.ndarray]
     priorities: np.ndarray
     local_handle: Any = None
 

@@ -20,7 +20,11 @@ LANES = 128
 def _kernel(x_ref, a_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (K, 1, BLOCK_COLS)
     a = a_ref[...].astype(jnp.float32)          # (K, 1)
-    o_ref[...] = jnp.sum(x * a[:, :, None], axis=0).astype(o_ref.dtype)
+    aw = a[:, :, None]
+    # masked semantics: alpha == 0 contributes exact zero even for a
+    # non-finite row (a diverged non-winner in the full-cohort merge)
+    terms = jnp.where(aw != 0.0, x * aw, 0.0)
+    o_ref[...] = jnp.sum(terms, axis=0).astype(o_ref.dtype)
 
 
 def _retile(x, k):

@@ -8,6 +8,13 @@ Dispatch policy:
 
 Force interpret globally with REPRO_PALLAS_INTERPRET=1 or per-call with
 ``interpret=True``.
+
+Batching contract: every wrapper here is safe under ``jax.vmap`` — the
+Pallas calls batch through the standard pallas_call batching rule (a
+leading grid dimension) and the jnp oracles batch natively. The fused
+HostBackend round step relies on this, vmapping ``delta_norm`` over the
+stacked cohort axis for Eq. 2 and feeding the full (U, ...) stack to
+``fedavg_combine`` for the masked Eq. 1 merge (DESIGN.md §3).
 """
 from __future__ import annotations
 

@@ -13,11 +13,17 @@ def delta_norm_ref(w_local, w_global):
 
 
 def fedavg_combine_ref(stacked, alphas):
-    """stacked: (K, ...), alphas: (K,) f32 -> weighted sum, stacked.dtype."""
+    """stacked: (K, ...), alphas: (K,) f32 -> weighted sum, stacked.dtype.
+
+    Masked semantics: a zero alpha contributes EXACT zero even when that
+    row holds inf/NaN — the masked full-cohort merge feeds every user's
+    local model through here and a diverged loser must not poison the
+    global (0 * inf would be NaN under a plain product-sum).
+    """
     a = alphas.astype(jnp.float32).reshape(
         (-1,) + (1,) * (stacked.ndim - 1))
-    return jnp.sum(stacked.astype(jnp.float32) * a, axis=0).astype(
-        stacked.dtype)
+    terms = jnp.where(a != 0.0, stacked.astype(jnp.float32) * a, 0.0)
+    return jnp.sum(terms, axis=0).astype(stacked.dtype)
 
 
 def fused_sgd_ref(param, grad, lr):

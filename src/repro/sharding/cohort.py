@@ -1,0 +1,58 @@
+"""Cohort-axis sharding — batch the host cohort over devices, not lanes.
+
+``sharding/rules.py`` partitions ONE model's tensors over an FSDP x
+tensor mesh. This module is its orthogonal sibling for the host
+simulation: the ``HostBackend`` fused round step carries a *stacked*
+cohort pytree with a leading user axis (U, ...), and at 1e4-1e5 users
+that axis — not the per-user model — is what must spread across
+hardware. We shard ONLY the leading cohort axis and replicate each
+user's (small) model parameters within it; the per-round reduction
+(Eq. 1 masked combine) then lowers to a cross-device psum under GSPMD.
+
+On a single device everything here is a no-op by construction: a 1-long
+mesh axis shards nothing, so the same code path runs everywhere and a
+1-device-mesh run is bit-identical to a mesh-less run (pinned by
+``tests/test_fused_round.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: logical name of the leading stacked-user axis
+COHORT_AXIS = "cohort"
+
+
+def cohort_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """A 1-D mesh over ``devices`` (default: all local devices) whose
+    single axis is the cohort axis."""
+    import numpy as np
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    return Mesh(devs.reshape(-1), (COHORT_AXIS,))
+
+
+def cohort_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for any leading-(U, ...) leaf: split dim 0 over the
+    cohort axis, replicate the rest (each user's model is small)."""
+    return NamedSharding(mesh, P(COHORT_AXIS))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicated — for the global model and other per-round
+    scalars/small pytrees."""
+    return NamedSharding(mesh, P())
+
+
+def shardable(num_users: int, mesh: Optional[Mesh]) -> bool:
+    """True when the cohort axis can actually split over ``mesh``.
+
+    False (replicated-execution fallback, still correct) when there is
+    no mesh, the mesh has no ``"cohort"`` axis (e.g. a reused training
+    mesh built outside ``cohort_mesh``), or GSPMD's divisibility
+    requirement fails for ``num_users``.
+    """
+    if mesh is None or COHORT_AXIS not in mesh.shape:
+        return False
+    return num_users % mesh.shape[COHORT_AXIS] == 0

@@ -1,0 +1,300 @@
+"""Fused device-resident HostBackend round step (DESIGN.md §3):
+seed-exact parity against the PR-1 stacked path and the ragged
+fallback, cohort-mesh sharding parity, kernel dispatch through the
+engine, and the donation/residency invariants."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.server import fedavg, fedavg_masked
+from repro.engine import (ExperimentSpec, FLEngine, HostBackend,
+                          PAPER_STRATEGIES, build_host_engine)
+from repro.sharding import cohort_mesh, shardable
+
+
+# ------------------------------------------------------------------ setup
+NUM_USERS, N_PER_USER, DIM, CLASSES = 8, 64, 16, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Rectangular cohort (equal per-user example counts) so all three
+    round paths apply; a linear softmax model keeps rounds cheap."""
+    rng = np.random.default_rng(7)
+    user_data = []
+    for u in range(NUM_USERS):
+        # skewed labels so Eq. 2 priorities separate users
+        probs = np.ones(CLASSES) / CLASSES
+        probs[u % CLASSES] += 1.0
+        probs /= probs.sum()
+        user_data.append({
+            "x": rng.normal(size=(N_PER_USER, DIM)).astype(np.float32),
+            "y": rng.choice(CLASSES, N_PER_USER, p=probs),
+        })
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], CLASSES)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((DIM, CLASSES), jnp.float32),
+              "b": jnp.zeros((CLASSES,), jnp.float32)}
+    return params, loss_fn, user_data
+
+
+def _run(setup, mode, strategy, *, rounds=4, seed=1, epochs=1, mesh=None):
+    params, loss_fn, user_data = setup
+    spec = ExperimentSpec(rounds=rounds, strategy=strategy, seed=seed,
+                          batch_size=32, local_epochs=epochs)
+    engine = build_host_engine(spec, params, loss_fn, user_data,
+                               round_mode=mode, mesh=mesh)
+    hist = engine.run()
+    return hist, engine
+
+
+# ----------------------------------------------------------------- parity
+@pytest.mark.parametrize("strategy", PAPER_STRATEGIES)
+def test_fused_matches_stacked_and_ragged(setup, strategy):
+    """Acceptance pin: winner-for-winner seed parity of the fused path
+    vs the PR-1 stacked path and the ragged per-user fallback, plus
+    matching losses/priorities and final global params."""
+    h_fused, e_fused = _run(setup, "fused", strategy)
+    h_stack, e_stack = _run(setup, "stacked", strategy)
+    h_ragged, e_ragged = _run(setup, "ragged", strategy)
+
+    assert h_fused.winners == h_stack.winners
+    assert h_fused.winners == h_ragged.winners
+    np.testing.assert_allclose(h_fused.train_loss, h_stack.train_loss,
+                               rtol=1e-4)
+    np.testing.assert_allclose(h_fused.train_loss, h_ragged.train_loss,
+                               rtol=1e-4)
+    if h_fused.priorities:
+        np.testing.assert_allclose(h_fused.priorities, h_ragged.priorities,
+                                   rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(e_fused.global_params),
+                    jax.tree.leaves(e_ragged.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fused_folds_local_epochs(setup):
+    """local_epochs ride the scanned batch axis in ONE call — must
+    reproduce the ragged path's per-epoch loop draws exactly."""
+    h_fused, _ = _run(setup, "fused", "priority-distributed", epochs=3)
+    h_ragged, _ = _run(setup, "ragged", "priority-distributed", epochs=3)
+    assert h_fused.winners == h_ragged.winners
+    np.testing.assert_allclose(h_fused.train_loss, h_ragged.train_loss,
+                               rtol=1e-4)
+
+
+def test_one_device_mesh_parity(setup):
+    """A 1-long cohort mesh must be a bit-exact no-op vs no mesh."""
+    mesh = cohort_mesh(jax.devices()[:1])
+    assert shardable(NUM_USERS, mesh)
+    h_mesh, e_mesh = _run(setup, "fused", "priority-distributed",
+                          mesh=mesh)
+    h_none, e_none = _run(setup, "fused", "priority-distributed")
+    assert h_mesh.winners == h_none.winners
+    assert h_mesh.train_loss == h_none.train_loss
+    for a, b in zip(jax.tree.leaves(e_mesh.global_params),
+                    jax.tree.leaves(e_none.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class _FakeMesh:
+    """Mesh stand-in with a >1-long cohort axis (a 1-CPU test box can't
+    build a real one) — enough surface for the divisibility guard."""
+    shape = {"cohort": 3}
+    size = 3
+
+
+def test_non_divisible_cohort_skips_sharding(setup):
+    """U not divisible by the mesh axis -> the backend must fall back
+    to replicated (un-sharded) execution with identical results."""
+    assert NUM_USERS % _FakeMesh.shape["cohort"] != 0
+    assert not shardable(NUM_USERS, _FakeMesh())
+    assert not shardable(3, None)
+
+    params, loss_fn, user_data = setup
+    backend = HostBackend(loss_fn, user_data, batch_size=32, seed=1,
+                          round_mode="fused", mesh=_FakeMesh())
+    assert backend._shard is False
+    spec = ExperimentSpec(rounds=3, strategy="priority-distributed",
+                          seed=1, batch_size=32)
+    h_guarded = FLEngine(spec, backend, params).run()
+    h_plain, _ = _run(setup, "fused", "priority-distributed", rounds=3)
+    assert h_guarded.winners == h_plain.winners
+    assert h_guarded.train_loss == h_plain.train_loss
+
+
+# ------------------------------------------------- kernel dispatch (ops)
+def test_interpret_mode_exercises_kernels_through_engine(setup,
+                                                         monkeypatch):
+    """REPRO_PALLAS_INTERPRET=1 must route the fused round's Eq. 2 and
+    Eq. 1 reductions through the Pallas kernel bodies (interpret mode)
+    AND still reproduce the jnp-oracle winner sequence."""
+    h_oracle, _ = _run(setup, "fused", "priority-distributed", rounds=2)
+
+    import repro.kernels.ops as kops
+    calls = {"delta": 0, "fedavg": 0}
+    real_delta, real_fedavg = kops.delta_norm_pallas, kops.fedavg_pallas
+
+    def spy_delta(*a, **kw):
+        calls["delta"] += 1
+        return real_delta(*a, **kw)
+
+    def spy_fedavg(*a, **kw):
+        calls["fedavg"] += 1
+        return real_fedavg(*a, **kw)
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    monkeypatch.setattr(kops, "delta_norm_pallas", spy_delta)
+    monkeypatch.setattr(kops, "fedavg_pallas", spy_fedavg)
+
+    h_interp, _ = _run(setup, "fused", "priority-distributed", rounds=2)
+    assert calls["delta"] > 0, "Eq. 2 never reached delta_norm kernel"
+    assert calls["fedavg"] > 0, "merge never reached fedavg kernel"
+    assert h_interp.winners == h_oracle.winners
+    np.testing.assert_allclose(h_interp.train_loss, h_oracle.train_loss,
+                               rtol=1e-4)
+
+
+def test_fedavg_masked_equals_gathered_fedavg():
+    """Masked full-cohort reduction == classic gather-then-fedavg."""
+    rng = np.random.default_rng(0)
+    U = 6
+    stack = {"w": jnp.asarray(rng.normal(size=(U, 5, 3)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(U, 3)), jnp.float32)}
+    winners, sizes = [1, 4], np.array([100.0, 300.0])
+    alphas = np.zeros(U, np.float32)
+    alphas[winners] = sizes / sizes.sum()
+    masked = fedavg_masked(stack, jnp.asarray(alphas))
+    gathered = fedavg([jax.tree.map(lambda p: p[u], stack)
+                       for u in winners], sizes)
+    for a, b in zip(jax.tree.leaves(masked), jax.tree.leaves(gathered)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6)
+
+
+def test_diverged_loser_cannot_poison_masked_merge():
+    """A non-winner whose local SGD blew up (inf/NaN params) carries
+    alpha == 0 — the masked reduction must still produce the finite
+    winners-only average (0 * inf must not leak NaN)."""
+    w = np.ones((4, 8), np.float32)
+    w[2] = np.inf                     # user 2 diverged; never selected
+    w[3] = np.nan
+    stack = {"w": jnp.asarray(w)}
+    alphas = jnp.asarray(np.array([0.25, 0.75, 0.0, 0.0], np.float32))
+    out = np.asarray(fedavg_masked(stack, alphas)["w"])
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, np.ones(8), rtol=1e-6)
+    # interpret-mode kernel body has the same masked semantics
+    from repro.kernels import ops
+    out_k = np.asarray(ops.fedavg_combine(jnp.asarray(w), alphas,
+                                          interpret=True))
+    np.testing.assert_allclose(out_k, np.ones(8), rtol=1e-6)
+
+
+# -------------------------------------------- residency / donation rules
+def test_resident_stack_reused_after_merge(setup):
+    params, loss_fn, user_data = setup
+    backend = HostBackend(loss_fn, user_data, batch_size=32, seed=0,
+                          round_mode="fused")
+    state = backend.init_state(params)
+    tr = backend.train_round(state, 0, list(range(NUM_USERS)), True)
+    assert "fused_stack" in tr.local_handle
+    assert backend._resident is None          # not merged yet
+    state2 = backend.merge(state, tr, [0, 3])
+    assert backend._resident is not None      # cohort stays on device
+    assert backend._resident_key is state2
+    assert tr.local_handle["fused_stack"] is None   # donated into merge
+    # next round consumes the resident stack without a broadcast rebuild
+    tr2 = backend.train_round(state2, 1, list(range(NUM_USERS)), True)
+    assert backend._resident is None          # donated into training
+    assert len(tr2.losses) == NUM_USERS
+
+
+def test_unmerged_round_rebuilds_from_state(setup):
+    """A round with no winners leaves state untouched; the next round
+    must rebuild the stack from the global (residency invalidated)."""
+    params, loss_fn, user_data = setup
+    backend = HostBackend(loss_fn, user_data, batch_size=32, seed=0,
+                          round_mode="fused")
+    state = backend.init_state(params)
+    backend.train_round(state, 0, list(range(NUM_USERS)), False)
+    # no merge happened; training again from the same state must work
+    tr2 = backend.train_round(state, 1, list(range(NUM_USERS)), False)
+    assert len(tr2.losses) == NUM_USERS
+
+
+def test_partial_cohort_round_uses_stacked_path(setup):
+    """trains_before_selection strategies train a subset — the fused
+    full-cohort step must not fire; the stacked subset path does."""
+    params, loss_fn, user_data = setup
+    backend = HostBackend(loss_fn, user_data, batch_size=32, seed=0,
+                          round_mode="fused")
+    state = backend.init_state(params)
+    subset = [2, 5]
+    assert not backend._can_fuse(subset)
+    tr = backend.train_round(state, 0, subset, False)
+    assert "stacked" in tr.local_handle
+    assert set(tr.losses) == set(subset)
+    new_state = backend.merge(state, tr, subset)   # gather-merge path
+    assert jax.tree.structure(new_state) == jax.tree.structure(state)
+
+
+def test_explicit_round_mode_overrides_prefer_vmap(setup):
+    """round_mode='stacked' must take the stacked path even with
+    prefer_vmap=False — an explicit mode subsumes the legacy flag."""
+    params, loss_fn, user_data = setup
+    backend = HostBackend(loss_fn, user_data, batch_size=32, seed=0,
+                          prefer_vmap=False, round_mode="stacked")
+    state = backend.init_state(params)
+    tr = backend.train_round(state, 0, list(range(NUM_USERS)), False)
+    assert "stacked" in tr.local_handle
+
+
+def test_mesh_without_cohort_axis_falls_back(setup):
+    """A reused mesh whose axis isn't named 'cohort' must degrade to
+    replicated execution, not crash the backend constructor."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    assert not shardable(NUM_USERS, mesh)
+    params, loss_fn, user_data = setup
+    backend = HostBackend(loss_fn, user_data, batch_size=32, seed=0,
+                          round_mode="fused", mesh=mesh)
+    assert backend._shard is False
+    tr = backend.train_round(backend.init_state(params), 0,
+                             list(range(NUM_USERS)), False)
+    assert "fused_stack" in tr.local_handle
+
+
+def test_fused_via_engine_random_centralized(setup):
+    """End-to-end: a trains-before-selection strategy mixes subset
+    rounds (stacked path) under a fused-mode backend without breaking
+    residency bookkeeping."""
+    h_fused, _ = _run(setup, "fused", "random-centralized", rounds=5)
+    h_ragged, _ = _run(setup, "ragged", "random-centralized", rounds=5)
+    assert h_fused.winners == h_ragged.winners
+
+
+# ---------------------------------------------------- silo loss satellite
+def test_silo_backend_reports_per_silo_losses():
+    """Satellite fix: SiloBackend used to report the cohort-mean loss
+    for every silo; losses must now differ across silos with different
+    data."""
+    from repro.configs.registry import get_config
+    from repro.data import make_token_stream
+    from repro.engine import SiloBackend
+    from repro.models.model import init_params
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    data = make_token_stream(3, 16, 8, cfg.vocab_size, noniid=True, seed=0)
+    backend = SiloBackend(cfg, data, lr=1e-2, batch_size=2)
+    state = backend.init_state(init_params(jax.random.PRNGKey(0), cfg))
+    tr = backend.train_round(state, 0, [0, 1, 2], need_priority=False)
+    vals = [tr.losses[u] for u in (0, 1, 2)]
+    assert all(np.isfinite(v) for v in vals)
+    assert len(set(vals)) > 1, "per-silo losses collapsed to one value"
