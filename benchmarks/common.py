@@ -1,16 +1,27 @@
-"""Shared benchmark plumbing: build + run one FL experiment."""
+"""Shared benchmark plumbing: build FL experiments and run them as
+SWEEPS — each paper figure is one ``FLEngine.run_sweep`` call over its
+(strategy, seed, CW, counter) cells, stacked into a single device
+program (DESIGN.md §5), instead of one engine run per cell.
+
+Sweep cells share ONE dataset/model instance (``_setup(seed=0)``); the
+per-cell ``seed`` drives the FL randomness — client batch streams,
+selection rng, contention — which is the axis the paper averages over.
+(Pre-sweep benchmarks re-drew the dataset per seed; the claim metrics
+are averages either way, and sharing the dataset is what lets all
+cells ride one stacked cohort.)
+"""
 from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.federated import make_accuracy_eval, FLHistory
-from repro.engine import ExperimentSpec, build_host_engine
+from repro.engine import (ExperimentSpec, FLHistory, SweepSpec,
+                          build_host_engine, make_accuracy_eval)
 from repro.data import (make_classification_dataset, partition_iid,
                         partition_noniid_shards)
 from repro.models.paper_models import get_paper_model
@@ -24,6 +35,7 @@ N_TEST = int(os.environ.get("BENCH_NTEST", "600"))
 # strategies stay distinguishable over a few hundred rounds
 NOISE = float(os.environ.get("BENCH_NOISE", "0.5"))
 CLASS_SEP = float(os.environ.get("BENCH_SEP", "0.6"))
+SEEDS = int(os.environ.get("BENCH_SEEDS", "2"))
 
 
 @dataclass
@@ -68,13 +80,68 @@ def _setup(model: str, dataset: str, iid: bool, seed: int):
     return out
 
 
+def base_spec(rounds: Optional[int] = None, eval_every: int = 2,
+              **overrides) -> ExperimentSpec:
+    """The figures' shared base cell; overrides ride through."""
+    return ExperimentSpec(rounds=rounds or ROUNDS,
+                          eval_every=eval_every, **overrides)
+
+
+def _bench_result(name: str, spec: ExperimentSpec, hist: FLHistory,
+                  wall_s: float) -> BenchResult:
+    import numpy as np
+    return BenchResult(name=name, wall_s=wall_s, rounds=spec.rounds,
+                       final_acc=hist.accuracy[-1],
+                       best_acc=max(hist.accuracy),
+                       auc=float(np.mean(hist.accuracy)), history=hist)
+
+
+def run_cells(prefix: str, sweep: SweepSpec, *, model="mlp",
+              dataset="fashion", iid=False,
+              setup_seed: int = 0) -> List[BenchResult]:
+    """ONE run_sweep call for a figure's whole cell list.
+
+    Per-cell wall time is the sweep wall split evenly (the cells run
+    stacked; there is no meaningful per-cell wall)."""
+    params, loss_fn, user_data, eval_fn = _setup(model, dataset, iid,
+                                                 setup_seed)
+    engine = build_host_engine(sweep.specs[0], params, loss_fn,
+                               user_data, eval_fn)
+    result = engine.run_sweep(sweep)
+    per_cell = result.wall_s / len(sweep)
+    labels = sweep.labels or [str(i) for i in range(len(sweep))]
+    return [_bench_result(f"{prefix}/{lab}", sp, h, per_cell)
+            for lab, sp, h in zip(labels, sweep.specs, result)]
+
+
+def run_grid(prefix: str, *, model="mlp", dataset="fashion", iid=False,
+             base: Optional[ExperimentSpec] = None,
+             **axes: Sequence) -> Dict[Tuple, BenchResult]:
+    """Cartesian sweep over spec fields; keyed by the value combos.
+
+        grid = run_grid("fig2", iid=True,
+                        strategy=list(PAPER_STRATEGIES),
+                        seed=list(range(SEEDS)))
+        grid[("priority-distributed", 0)].auc
+    """
+    import itertools
+    base = base or base_spec()
+    axes = {k: list(v) for k, v in axes.items()}   # survive one-shot
+    sweep = SweepSpec.grid(base, **axes)           # iterables
+    results = run_cells(prefix, sweep, model=model, dataset=dataset,
+                        iid=iid)
+    keys = itertools.product(*axes.values())
+    return {k: r for k, r in zip(keys, results)}
+
+
 def run_strategy(name: str, *, model="mlp", dataset="fashion", iid=False,
                  strategy="priority-distributed", use_counter=True,
                  threshold=0.16, cw_base=2048.0, rounds: Optional[int] = None,
                  seed=0, eval_every=2, strategy_options=None) -> BenchResult:
-    rounds = rounds or ROUNDS
+    """One-off single-cell run (kept for ad-hoc benchmarking; the
+    figures batch their cells through run_cells/run_grid)."""
     params, loss_fn, user_data, eval_fn = _setup(model, dataset, iid, seed)
-    spec = ExperimentSpec(rounds=rounds, strategy=strategy,
+    spec = ExperimentSpec(rounds=rounds or ROUNDS, strategy=strategy,
                           strategy_options=strategy_options or {},
                           use_counter=use_counter,
                           counter_threshold=threshold, cw_base=cw_base,
@@ -82,26 +149,28 @@ def run_strategy(name: str, *, model="mlp", dataset="fashion", iid=False,
     engine = build_host_engine(spec, params, loss_fn, user_data, eval_fn)
     t0 = time.time()
     hist = engine.run()
-    wall = time.time() - t0
-    import numpy as np
-    return BenchResult(name=name, wall_s=wall, rounds=rounds,
-                       final_acc=hist.accuracy[-1],
-                       best_acc=max(hist.accuracy),
-                       auc=float(np.mean(hist.accuracy)), history=hist)
+    return _bench_result(name, spec, hist, time.time() - t0)
+
+
+def cells_over_seeds(base: ExperimentSpec, cases: Sequence[Tuple[str, dict]],
+                     seeds: Optional[int] = None) -> SweepSpec:
+    """Explicit (tag, overrides) cases x seeds -> one SweepSpec.
+
+    For figures whose cells are NOT a full product (e.g. fig5's three
+    strategy/counter combinations). Cell order: case-major, seed-minor;
+    labels are ``tag/s<seed>``."""
+    seeds = SEEDS if seeds is None else seeds
+    specs, labels = [], []
+    for tag, overrides in cases:
+        for s in range(seeds):
+            specs.append(replace(base, seed=s, **overrides))
+            labels.append(f"{tag}/s{s}")
+    return SweepSpec(specs=specs, labels=labels)
 
 
 def csv_line(name: str, wall_s: float, rounds: int, derived: str) -> str:
     us_per_round = wall_s / max(rounds, 1) * 1e6
     return f"{name},{us_per_round:.0f},{derived}"
-
-
-SEEDS = int(os.environ.get("BENCH_SEEDS", "2"))
-
-
-def run_seeds(name, **kw):
-    """Run one configuration over BENCH_SEEDS seeds; returns list."""
-    return [run_strategy(f"{name}/s{s}", seed=s, **kw)
-            for s in range(SEEDS)]
 
 
 def mean_auc(results):

@@ -1,25 +1,29 @@
 """Paper Fig. 2: four selection strategies on the IID split — all should
-be comparable (claim C1). Averaged over BENCH_SEEDS seeds."""
+be comparable (claim C1). Averaged over BENCH_SEEDS seeds; the whole
+strategy x seed grid runs as ONE engine sweep."""
 from __future__ import annotations
 
 from repro.engine import PAPER_STRATEGIES
-from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
+from benchmarks.common import (SEEDS, csv_line, mean_auc, mean_best,
+                               run_grid)
 
 
 def run(model="mlp", dataset="fashion"):
+    prefix = f"fig2/iid/{dataset}/{model}"
+    grid = run_grid(prefix, model=model, dataset=dataset, iid=True,
+                    strategy=list(PAPER_STRATEGIES),
+                    seed=list(range(SEEDS)))
     lines, auc = [], {}
     for strat in PAPER_STRATEGIES:
-        rs = run_seeds(f"fig2/iid/{dataset}/{model}/{strat}",
-                       model=model, dataset=dataset, iid=True,
-                       strategy=strat)
+        rs = [grid[(strat, s)] for s in range(SEEDS)]
         auc[strat] = mean_auc(rs)
         lines.append(csv_line(
-            rs[0].name.rsplit("/s", 1)[0],
+            f"{prefix}/{strat}",
             sum(r.wall_s for r in rs), rs[0].rounds * len(rs),
             f"best_acc={mean_best(rs):.4f};auc={auc[strat]:.4f};"
             f"seeds={len(rs)}"))
     spread = max(auc.values()) - min(auc.values())
-    lines.append(f"fig2/iid/{dataset}/{model}/spread,0,"
+    lines.append(f"{prefix}/spread,0,"
                  f"claimC1_auc_spread={spread:.4f}")
     return lines
 

@@ -1,13 +1,15 @@
 """Paper Fig. 3: four strategies on the non-IID split — priority beats
 random; distributed-priority ~ centralized-priority (claim C2).
-Averaged over BENCH_SEEDS seeds. Reports both trajectory AUC and
-rounds-to-threshold (the paper's "rapidly achieve convergence" claim)."""
+Averaged over BENCH_SEEDS seeds; the strategy x seed grid runs as ONE
+engine sweep. Reports both trajectory AUC and rounds-to-threshold (the
+paper's "rapidly achieve convergence" claim)."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.engine import PAPER_STRATEGIES
-from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
+from benchmarks.common import (SEEDS, csv_line, mean_auc, mean_best,
+                               run_grid)
 
 
 def _rounds_to(hist, target):
@@ -19,16 +21,18 @@ def _rounds_to(hist, target):
 
 
 def run(model="mlp", dataset="fashion", target=0.30):
+    prefix = f"fig3/noniid/{dataset}/{model}"
+    grid = run_grid(prefix, model=model, dataset=dataset, iid=False,
+                    strategy=list(PAPER_STRATEGIES),
+                    seed=list(range(SEEDS)))
     lines, auc, r2t = [], {}, {}
     for strat in PAPER_STRATEGIES:
-        rs = run_seeds(f"fig3/noniid/{dataset}/{model}/{strat}",
-                       model=model, dataset=dataset, iid=False,
-                       strategy=strat)
+        rs = [grid[(strat, s)] for s in range(SEEDS)]
         auc[strat] = mean_auc(rs)
         r2t[strat] = float(np.mean(
             [_rounds_to(r.history, target) for r in rs]))
         lines.append(csv_line(
-            rs[0].name.rsplit("/s", 1)[0],
+            f"{prefix}/{strat}",
             sum(r.wall_s for r in rs), rs[0].rounds * len(rs),
             f"best_acc={mean_best(rs):.4f};auc={auc[strat]:.4f};"
             f"rounds_to_{int(target*100)}pct={r2t[strat]:.0f};"
@@ -42,7 +46,7 @@ def run(model="mlp", dataset="fashion", target=0.30):
     speedup = (min(r2t["random-centralized"], r2t["random-distributed"])
                / max(1.0, min(r2t["priority-centralized"],
                               r2t["priority-distributed"])))
-    lines.append(f"fig3/noniid/{dataset}/{model}/derived,0,"
+    lines.append(f"{prefix}/derived,0,"
                  f"claimC2_priority_gain={prio_gain:.4f};"
                  f"central_minus_distributed={dist_gap:.4f};"
                  f"convergence_speedup_x={speedup:.2f}")

@@ -1,11 +1,14 @@
 """Paper Fig. 4: per-user selection counts, priority selection with vs
 without the fairness counter (centralized, to isolate the counter's
-effect exactly as the paper does)."""
+effect exactly as the paper does). Both cells run as ONE engine sweep."""
 from __future__ import annotations
+
+from dataclasses import replace
 
 import numpy as np
 
-from benchmarks.common import run_strategy, csv_line
+from repro.engine import SweepSpec
+from benchmarks.common import base_spec, csv_line, run_cells
 
 
 def _gini(counts: np.ndarray) -> float:
@@ -17,25 +20,28 @@ def _gini(counts: np.ndarray) -> float:
 
 
 def run(model="mlp", dataset="fashion", seed=0):
-    lines = []
-    runs = {}
-    for use_counter, tag in [(False, "no-counter"), (True, "counter")]:
-        r = run_strategy(f"fig4/fairness/{tag}",
-                         model=model, dataset=dataset, iid=False,
-                         strategy="priority-centralized",
-                         use_counter=use_counter, seed=seed)
-        runs[tag] = r
+    base = base_spec(strategy="priority-centralized", seed=seed)
+    tags = ("no-counter", "counter")
+    sweep = SweepSpec(specs=[replace(base, use_counter=False),
+                             replace(base, use_counter=True)],
+                      labels=list(tags))
+    results = run_cells("fig4/fairness", sweep, model=model,
+                        dataset=dataset, iid=False)
+    runs = dict(zip(tags, results))
+    out = []
+    for tag in tags:
+        r = runs[tag]
         sel = r.history.selections
-        lines.append(csv_line(
-            r.name, r.wall_s, r.rounds,
+        out.append(csv_line(
+            f"fig4/fairness/{tag}", r.wall_s, r.rounds,
             f"gini={_gini(sel):.4f};max_share="
             f"{sel.max() / max(1, sel.sum()):.4f};"
             f"counts={'|'.join(map(str, sel.tolist()))}"))
     # paper claim C3a: the counter flattens the selection distribution
     flat_gain = (_gini(runs["no-counter"].history.selections)
                  - _gini(runs["counter"].history.selections))
-    lines.append(f"fig4/fairness/derived,0,claimC3a_gini_drop={flat_gain:.4f}")
-    return lines
+    out.append(f"fig4/fairness/derived,0,claimC3a_gini_drop={flat_gain:.4f}")
+    return out
 
 
 if __name__ == "__main__":

@@ -1,25 +1,30 @@
 """Paper Fig. 5: accuracy with vs without the counter (and vs random) in
 the centralized scenario — counter should win (claim C3b). Averaged over
-BENCH_SEEDS seeds."""
+BENCH_SEEDS seeds; all case x seed cells run as ONE engine sweep."""
 from __future__ import annotations
 
-from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
+from benchmarks.common import (SEEDS, base_spec, cells_over_seeds,
+                               csv_line, mean_auc, mean_best, run_cells)
+
+CASES = [
+    ("priority+counter", {"strategy": "priority-centralized",
+                          "use_counter": True}),
+    ("priority-no-counter", {"strategy": "priority-centralized",
+                             "use_counter": False}),
+    ("random", {"strategy": "random-centralized", "use_counter": True}),
+]
 
 
 def run(model="mlp", dataset="fashion"):
+    sweep = cells_over_seeds(base_spec(), CASES)
+    results = run_cells("fig5/counter_acc", sweep, model=model,
+                        dataset=dataset, iid=False)
     lines, auc = [], {}
-    cases = [
-        ("priority+counter", "priority-centralized", True),
-        ("priority-no-counter", "priority-centralized", False),
-        ("random", "random-centralized", True),
-    ]
-    for tag, strat, use_counter in cases:
-        rs = run_seeds(f"fig5/counter_acc/{tag}",
-                       model=model, dataset=dataset, iid=False,
-                       strategy=strat, use_counter=use_counter)
+    for i, (tag, _) in enumerate(CASES):
+        rs = results[i * SEEDS:(i + 1) * SEEDS]
         auc[tag] = mean_auc(rs)
         lines.append(csv_line(
-            rs[0].name.rsplit("/s", 1)[0],
+            f"fig5/counter_acc/{tag}",
             sum(r.wall_s for r in rs), rs[0].rounds * len(rs),
             f"best_acc={mean_best(rs):.4f};auc={auc[tag]:.4f};"
             f"seeds={len(rs)}"))

@@ -1,20 +1,25 @@
-"""Paper Fig. 6: effect of the CW base N (512..2048) on the paper\'s
+"""Paper Fig. 6: effect of the CW base N (512..2048) on the paper's
 method — larger N separates backoff times better (claim C4). Averaged
-over BENCH_SEEDS seeds."""
+over BENCH_SEEDS seeds; the CW x seed grid runs as ONE engine sweep."""
 from __future__ import annotations
 
-from benchmarks.common import run_seeds, mean_auc, mean_best, csv_line
+from benchmarks.common import (SEEDS, base_spec, csv_line, mean_auc,
+                               mean_best, run_grid)
+
+CWS = (512, 1024, 2048)
 
 
 def run(model="mlp", dataset="fashion"):
+    grid = run_grid("fig6/cw", model=model, dataset=dataset, iid=False,
+                    base=base_spec(strategy="priority-distributed"),
+                    cw_base=[float(n) for n in CWS],
+                    seed=list(range(SEEDS)))
     lines, auc = [], {}
-    for n in (512, 1024, 2048):
-        rs = run_seeds(f"fig6/cw/{n}",
-                       model=model, dataset=dataset, iid=False,
-                       strategy="priority-distributed", cw_base=float(n))
+    for n in CWS:
+        rs = [grid[(float(n), s)] for s in range(SEEDS)]
         auc[n] = mean_auc(rs)
         lines.append(csv_line(
-            rs[0].name.rsplit("/s", 1)[0],
+            f"fig6/cw/{n}",
             sum(r.wall_s for r in rs), rs[0].rounds * len(rs),
             f"best_acc={mean_best(rs):.4f};auc={auc[n]:.4f};"
             f"seeds={len(rs)}"))

@@ -13,7 +13,7 @@ import traceback
 
 from benchmarks import (contention_bench, fig2_iid, fig3_noniid,
                         fig4_fairness, fig5_counter_acc, fig6_cw_size,
-                        roofline, kernel_bench, round_bench)
+                        roofline, kernel_bench, round_bench, sweep_bench)
 
 SUITES = {
     "fig2": fig2_iid.run,
@@ -23,6 +23,7 @@ SUITES = {
     "fig6": fig6_cw_size.run,
     "csma": contention_bench.run,
     "round": round_bench.run,
+    "sweep": sweep_bench.run,
     "kernels": kernel_bench.run,
     "roofline": roofline.run,
 }

@@ -1,0 +1,160 @@
+"""Sweep-throughput benchmark: ``FLEngine.run_sweep`` (one stacked
+device program for E experiments + batched contention + async overlap)
+vs the same E experiments run sequentially through ``FLEngine.run``.
+
+The paper's results are sweeps — many (strategy, seed, CW) cells to
+convergence — so aggregate rounds/sec across the whole grid is the
+currency. The benchmark grid mixes all four paper strategies x seeds x
+CW bases (the fig2-fig6 shape), and asserts the sweep's winner
+sequences are bit-identical to the sequential runs before reporting a
+single number. Wall times include engine construction + compile: that
+is the real cost of each workflow (sequential pays one compile per
+cell, the sweep one per grid — part of the point).
+
+Writes ``BENCH_sweep.json`` at the repo root (CI uploads it per PR).
+
+  BENCH_ROUNDS=2 PYTHONPATH=src python -m benchmarks.run sweep   # smoke
+  BENCH_SWEEP_E=1,8,64 ... python -m benchmarks.run sweep
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "20"))
+E_LIST = [int(e) for e in
+          os.environ.get("BENCH_SWEEP_E", "1,8,64").split(",")]
+
+NUM_USERS = 10
+N_PER_USER = 64
+DIM = 32
+CLASSES = 10
+BATCH = 32
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_sweep.json")
+
+
+def _make_setup(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    user_data = []
+    for u in range(NUM_USERS):
+        probs = np.ones(CLASSES) / CLASSES
+        probs[u % CLASSES] += 1.0       # label skew -> non-flat priorities
+        probs /= probs.sum()
+        user_data.append({
+            "x": rng.normal(size=(N_PER_USER, DIM)).astype(np.float32),
+            "y": rng.choice(CLASSES, N_PER_USER, p=probs),
+        })
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], CLASSES)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((DIM, CLASSES), jnp.float32),
+              "b": jnp.zeros((CLASSES,), jnp.float32)}
+    return params, loss_fn, user_data
+
+
+def _grid_specs(E: int):
+    """First E cells of the 64-cell paper grid: 4 strategies x 8 seeds
+    x 2 CW bases, strategy-major so every E >= 4 mixes strategies."""
+    from repro.engine import ExperimentSpec, PAPER_STRATEGIES
+    specs = []
+    for seed in range(8):
+        for cw in (1024.0, 2048.0):
+            for strat in PAPER_STRATEGIES:
+                specs.append(ExperimentSpec(
+                    rounds=ROUNDS, strategy=strat, seed=seed,
+                    cw_base=cw, batch_size=BATCH, eval_every=10 ** 9))
+    return specs[:E]
+
+
+def run():
+    import jax
+    from repro.engine import build_host_engine
+
+    params, loss_fn, user_data = _make_setup()
+    lines = []
+    report = {
+        "config": {"rounds": ROUNDS, "users": NUM_USERS,
+                   "n_per_user": N_PER_USER, "dim": DIM,
+                   "batch_size": BATCH,
+                   "grid": "4 strategies x 8 seeds x 2 cw_bases"},
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "results": [],
+        "speedup_sweep_vs_sequential": {},
+        "winner_parity": {},
+    }
+    for E in E_LIST:
+        specs = _grid_specs(E)
+
+        t0 = time.time()
+        seq_winners = []
+        for sp in specs:
+            eng = build_host_engine(sp, params, loss_fn, user_data)
+            seq_winners.append(eng.run().winners)
+        seq_s = time.time() - t0
+
+        # best-of-2, alternating, so neither overlap mode inherits the
+        # other's warm allocator/cache state (on CPU "device" compute
+        # shares the host cores, so expect overlap_gain ~ 1 here; the
+        # pipeline pays off when the train call runs on an accelerator)
+        sweep_s = sweep_off_s = float("inf")
+        for _ in range(2):
+            t0 = time.time()
+            eng = build_host_engine(specs[0], params, loss_fn, user_data)
+            res = eng.run_sweep(specs, overlap=True)
+            sweep_s = min(sweep_s, time.time() - t0)
+            t0 = time.time()
+            eng2 = build_host_engine(specs[0], params, loss_fn, user_data)
+            res_off = eng2.run_sweep(specs, overlap=False)
+            sweep_off_s = min(sweep_off_s, time.time() - t0)
+
+        parity = all(res.histories[e].winners == seq_winners[e]
+                     for e in range(E))
+        parity_off = all(res_off.histories[e].winners == seq_winners[e]
+                         for e in range(E))
+        total_rounds = E * ROUNDS
+        speedup = seq_s / sweep_s
+        report["results"].append({
+            "experiments": E,
+            "sequential_s": round(seq_s, 3),
+            "sweep_s": round(sweep_s, 3),
+            "sweep_no_overlap_s": round(sweep_off_s, 3),
+            "sequential_rounds_per_sec": round(total_rounds / seq_s, 2),
+            "sweep_rounds_per_sec": round(total_rounds / sweep_s, 2),
+            "overlap_gain": round(sweep_off_s / sweep_s, 3),
+        })
+        report["speedup_sweep_vs_sequential"][str(E)] = round(speedup, 2)
+        report["winner_parity"][str(E)] = bool(parity and parity_off)
+        lines.append(f"sweep/sequential/{E},{1e6 * seq_s / total_rounds:.0f},"
+                     f"rounds_per_sec={total_rounds / seq_s:.2f}")
+        lines.append(f"sweep/batched/{E},{1e6 * sweep_s / total_rounds:.0f},"
+                     f"rounds_per_sec={total_rounds / sweep_s:.2f}")
+        lines.append(f"sweep/derived/{E},0,"
+                     f"speedup_vs_sequential={speedup:.2f}x;"
+                     f"overlap_gain={sweep_off_s / sweep_s:.3f}x;"
+                     f"winner_parity={parity and parity_off}")
+    # write the report BEFORE failing on parity — a divergence must not
+    # discard the measurements that diagnose it
+    with open(_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    lines.append(f"sweep/json,0,wrote={os.path.abspath(_JSON_PATH)}")
+    bad = [e for e, ok in report["winner_parity"].items() if not ok]
+    assert not bad, f"sweep vs sequential winners diverged at E={bad}"
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print("\n".join(run()))

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.federated import make_accuracy_eval
+from repro.engine import make_accuracy_eval
 from repro.data import make_classification_dataset, partition_noniid_shards
 from repro.engine import (ExperimentSpec, SelectionResult, Strategy,
                           build_host_engine, register_strategy)

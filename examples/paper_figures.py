@@ -1,0 +1,84 @@
+"""Reproduce the paper's Fig. 2 / Fig. 3 strategy-comparison curves with
+ONE ``run_sweep`` call per figure.
+
+Each figure is a sweep: the four selection strategies x several seeds,
+stacked into a single device program — no per-strategy / per-seed
+boilerplate, no sequential engine loop. The per-strategy accuracy
+trajectories (averaged over seeds) print as small text curves.
+
+  PYTHONPATH=src python examples/paper_figures.py
+  ROUNDS=150 SEEDS=3 PYTHONPATH=src python examples/paper_figures.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (make_classification_dataset, partition_iid,
+                        partition_noniid_shards)
+from repro.engine import (ExperimentSpec, PAPER_STRATEGIES, SweepSpec,
+                          build_host_engine, make_accuracy_eval)
+from repro.models.paper_models import get_paper_model
+
+ROUNDS = int(os.environ.get("ROUNDS", "60"))
+SEEDS = int(os.environ.get("SEEDS", "2"))
+
+
+def build_engine(iid: bool, spec: ExperimentSpec):
+    (xtr, ytr), (xte, yte) = make_classification_dataset(
+        "fashion", n_train=3000, n_test=600, noise=0.5, class_sep=0.6)
+    xtr, xte = xtr.reshape(len(xtr), -1), xte.reshape(len(xte), -1)
+    init_fn, apply_fn = get_paper_model("mlp", "fashion")
+    part = partition_iid if iid else partition_noniid_shards
+    users = part(xtr, ytr, 10, seed=0)
+    user_data = [{"x": x, "y": y} for x, y in users]
+
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        onehot = jax.nn.one_hot(batch["y"], 10)
+        return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
+
+    eval_fn = make_accuracy_eval(apply_fn, xte, yte)
+    params = init_fn(jax.random.PRNGKey(0))
+    return build_host_engine(spec, params, loss_fn, user_data, eval_fn)
+
+
+def text_curve(accs, width=40):
+    """Accuracy trajectory as a one-line sparkline."""
+    blocks = " .:-=+*#%@"
+    lo, hi = min(accs), max(accs)
+    span = max(hi - lo, 1e-9)
+    idx = np.linspace(0, len(accs) - 1, width).astype(int)
+    return "".join(blocks[int((accs[i] - lo) / span * (len(blocks) - 1))]
+                   for i in idx)
+
+
+def figure(name: str, iid: bool):
+    base = ExperimentSpec(rounds=ROUNDS, eval_every=2)
+    sweep = SweepSpec.grid(base, strategy=list(PAPER_STRATEGIES),
+                           seed=list(range(SEEDS)))
+    engine = build_engine(iid, base)
+    result = engine.run_sweep(sweep)        # the whole figure, one call
+
+    print(f"\n== {name} ({'IID' if iid else 'non-IID'}; {len(sweep)} "
+          f"cells, one run_sweep, {result.wall_s:.1f}s) ==")
+    for i, strat in enumerate(PAPER_STRATEGIES):
+        hists = result.histories[i * SEEDS:(i + 1) * SEEDS]
+        curves = np.array([h.accuracy for h in hists])
+        mean = curves.mean(axis=0)
+        print(f"  {strat:22s} |{text_curve(mean)}| "
+              f"final {mean[-1]:.3f}  best {curves.max(axis=1).mean():.3f}"
+              f"  auc {mean.mean():.3f}")
+
+
+def main():
+    figure("Fig. 2", iid=True)
+    figure("Fig. 3", iid=False)
+
+
+if __name__ == "__main__":
+    main()

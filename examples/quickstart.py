@@ -15,7 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core.federated import make_accuracy_eval
+from repro.engine import make_accuracy_eval
 from repro.data import make_classification_dataset, partition_noniid_shards
 from repro.engine import ExperimentSpec, build_host_engine
 from repro.models.paper_models import get_paper_model

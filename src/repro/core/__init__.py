@@ -4,36 +4,17 @@ selection for federated learning via random-access (CSMA) contention.
 Public API:
     priority.model_priority       Eq. 2 layer-wise distance -> priority
     csma.CSMASimulator            slotted CSMA/CA contention (+ contend_batch)
-    counter.FairnessCounter       Step 4/5 refrain rule
-    selection.make_strategy       DEPRECATED -> repro.engine registry
-    federated.FLExperiment        DEPRECATED -> repro.engine.FLEngine
+    counter.FairnessCounter       Step 4/5 refrain rule (+ the sweep
+                                  engine's vectorized SweepFairnessCounter)
 
-Round orchestration and the strategy registry live in ``repro.engine``
-(see DESIGN.md); the shims here keep pre-engine imports working.
+Round orchestration, sweeps and the strategy registry live in
+``repro.engine`` (see DESIGN.md). The pre-engine ``FLExperiment`` /
+``make_strategy`` shims served their deprecation cycle and are gone —
+use ``repro.engine.FLEngine`` / ``repro.engine.create_strategy``.
 """
 from repro.core.priority import model_priority, layer_distance_ratios
 from repro.core.csma import CSMASimulator, CSMAConfig
-from repro.core.counter import FairnessCounter
-
-# The deprecated shims (selection/federated) import repro.engine, and
-# repro.engine modules import repro.core.csma — which first runs THIS
-# package init. Loading the shims lazily (PEP 562) keeps both entry
-# orders working: `import repro.engine` no longer re-enters a
-# half-initialized engine package, and `from repro.core import
-# FLExperiment` still resolves.
-_LAZY = {
-    "make_strategy": "repro.core.selection",
-    "STRATEGIES": "repro.core.selection",
-    "FLExperiment": "repro.core.federated",
-    "FLConfig": "repro.core.federated",
-}
+from repro.core.counter import FairnessCounter, SweepFairnessCounter
 
 __all__ = ["model_priority", "layer_distance_ratios", "CSMASimulator",
-           "CSMAConfig", "FairnessCounter", *_LAZY]
-
-
-def __getattr__(name):
-    if name in _LAZY:
-        import importlib
-        return getattr(importlib.import_module(_LAZY[name]), name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+           "CSMAConfig", "FairnessCounter", "SweepFairnessCounter"]

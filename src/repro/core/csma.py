@@ -128,9 +128,10 @@ class CSMASimulator:
                           collisions=collisions, elapsed_slots=t)
 
     # ------------------------------------------------------------------
-    def contend_batch(self, backoff_seconds, windows_seconds, k_target: int,
+    def contend_batch(self, backoff_seconds, windows_seconds, k_target,
                       participating=None,
-                      seeds: Optional[Sequence[int]] = None
+                      seeds: Optional[Sequence[int]] = None,
+                      rngs: Optional[Sequence[np.random.Generator]] = None
                       ) -> BatchCSMAResult:
         """Vectorized ``contend`` over B independent contention rounds.
 
@@ -144,18 +145,31 @@ class CSMASimulator:
 
         backoff_seconds: (B, N) initial T_backoff draws, one row per round.
         windows_seconds: (B, N) or (N,) CW sizes for collision redraws.
-        k_target: deliveries after which each round closes.
+        k_target: deliveries after which each round closes — an int, or a
+            (B,) vector for per-row targets (sweep lanes with different
+            |K^t|). Result columns are sized to the largest target.
         participating: (B, N) or (N,) bool refrain mask; None = all live.
         seeds: optional per-round RNG seeds. With ``seeds[b] = s``, row b
             reproduces ``CSMASimulator(cfg, seed=s).contend(...)`` exactly,
             winner-for-winner (the parity contract tested in
             tests/test_csma_batch.py). Default: independent per-row seeds
             drawn from this simulator's own generator.
+        rngs: optional per-row ``np.random.Generator`` objects, mutually
+            exclusive with ``seeds``. Unlike ``seeds`` (fresh stream per
+            call), the generators are consumed in place — row b draws its
+            collision redraws exactly as a scalar simulator owning
+            ``rngs[b]`` would, so a *persistent* per-lane stream stays
+            winner-for-winner reproducible across successive batched
+            rounds. This is how the sweep engine keeps each experiment
+            lane's contention stream identical to a sequential run.
         """
         cfg = self.config
         slot_s = cfg.slot_us * 1e-6
         backoffs = np.atleast_2d(np.asarray(backoff_seconds, np.float64))
         B, n = backoffs.shape
+        k_arr = np.broadcast_to(
+            np.asarray(k_target, np.int64), (B,)).copy()
+        k_target = int(k_arr.max(initial=0))
         windows = np.broadcast_to(
             np.asarray(windows_seconds, np.float64), (B, n)).copy()
         if participating is None:
@@ -163,9 +177,15 @@ class CSMASimulator:
         else:
             active = np.broadcast_to(
                 np.asarray(participating, bool), (B, n)).copy()
-        if seeds is None:
-            seeds = self._rng.integers(0, 2 ** 63 - 1, size=B)
-        rngs = [np.random.default_rng(int(s)) for s in seeds]
+        if rngs is not None:
+            if seeds is not None:
+                raise ValueError("pass seeds or rngs, not both")
+            if len(rngs) != B:
+                raise ValueError(f"need {B} rngs, got {len(rngs)}")
+        else:
+            if seeds is None:
+                seeds = self._rng.integers(0, 2 ** 63 - 1, size=B)
+            rngs = [np.random.default_rng(int(s)) for s in seeds]
 
         # round() is half-to-even for both python floats and np.round,
         # so this matches the scalar path's per-element quantization.
@@ -179,7 +199,7 @@ class CSMASimulator:
         finish = np.full((B, k_target), -1, np.int64)
 
         def still_running():
-            return ((wins < k_target) & active.any(axis=1)
+            return ((wins < k_arr) & active.any(axis=1)
                     & (t < cfg.max_sim_slots))
 
         running = still_running()

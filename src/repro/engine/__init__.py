@@ -1,29 +1,43 @@
-"""Public engine API: one way to run FL rounds on any backend.
+"""Public engine API: one way to run FL rounds — and round sweeps — on
+any backend.
 
-    from repro.engine import (ExperimentSpec, FLEngine, HostBackend,
-                              SiloBackend, build_host_engine,
+    from repro.engine import (ExperimentSpec, SweepSpec, FLEngine,
+                              HostBackend, SiloBackend, build_host_engine,
                               register_strategy, create_strategy)
+
+    engine = build_host_engine(spec, params, loss_fn, user_data, eval_fn)
+    history = engine.run()                       # one experiment
+    result = engine.run_sweep(                   # E experiments, one
+        SweepSpec.grid(spec, strategy=PAPER_STRATEGIES,   # device program
+                       seed=range(3)))
 
 Strategies plug in through the decorator registry (see
 ``repro.engine.strategies`` for the paper's four plus two
 literature-derived extensions); backends implement the three-method
-contract in ``repro.engine.backends``. DESIGN.md documents the
+contract in ``repro.engine.backends`` (plus the optional sweep contract
+HostBackend's fused path provides). DESIGN.md documents the
 architecture.
 """
 from repro.engine.registry import (available_strategies, create_strategy,
-                                   get_strategy_class, register_strategy)
-from repro.engine.spec import ExperimentSpec
+                                   get_strategy_class, register_strategy,
+                                   select_grouped, supports_batched_select)
+from repro.engine.spec import ExperimentSpec, SweepSpec
 from repro.engine.types import (FLHistory, SelectionContext,
-                                SelectionResult, TrainResult)
+                                SelectionResult, SweepResult, TrainResult)
 from repro.engine.strategies import PAPER_STRATEGIES, Strategy
 from repro.engine.backends import (Backend, HostBackend, SiloBackend,
+                                   SweepState, SweepTrainResult,
                                    label_heterogeneity)
 from repro.engine.engine import FLEngine, build_host_engine
+from repro.engine.evals import make_accuracy_eval
 
 __all__ = [
     "available_strategies", "create_strategy", "get_strategy_class",
-    "register_strategy", "ExperimentSpec", "FLHistory",
-    "SelectionContext", "SelectionResult", "TrainResult",
+    "register_strategy", "select_grouped", "supports_batched_select",
+    "ExperimentSpec", "SweepSpec", "FLHistory", "SelectionContext",
+    "SelectionResult", "SweepResult", "TrainResult",
     "PAPER_STRATEGIES", "Strategy", "Backend", "HostBackend",
-    "SiloBackend", "label_heterogeneity", "FLEngine", "build_host_engine",
+    "SiloBackend", "SweepState", "SweepTrainResult",
+    "label_heterogeneity", "FLEngine", "build_host_engine",
+    "make_accuracy_eval",
 ]

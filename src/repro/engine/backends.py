@@ -49,7 +49,8 @@ DESIGN.md §3); backends never see the CSMA layer.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +61,8 @@ from repro.core.priority import model_priority, stacked_model_priorities
 from repro.core.server import fedavg, fedavg_masked, winner_alphas
 from repro.engine.types import TrainResult
 from repro.sharding.cohort import (cohort_sharding, replicated_sharding,
-                                   shardable)
+                                   shardable, sweep_global_sharding,
+                                   sweep_sharding, sweep_shardable)
 
 
 def label_heterogeneity(user_data: Sequence, num_classes: int = 10,
@@ -89,6 +91,35 @@ def label_heterogeneity(user_data: Sequence, num_classes: int = 10,
     return 0.5 * np.abs(probs - pop[None]).sum(axis=1)
 
 
+@dataclass
+class SweepState:
+    """Device + host state of one in-flight sweep (DESIGN.md §5).
+
+    ``glob`` is the (E, ...) stacked per-lane globals, ``stack`` the
+    (E, U, ...) cohort — both device-resident between rounds, chained
+    through donation exactly like the single-experiment fused path.
+    ``rngs[e][u]`` is lane e / user u's epoch-permutation stream, seeded
+    from the LANE's spec seed (not the backend's), so each lane draws
+    the identical batches a sequential run of that spec would.
+    """
+    num_lanes: int
+    glob: Any
+    stack: Any
+    rngs: List[List[np.random.Generator]]
+
+
+@dataclass
+class SweepTrainResult:
+    """One batched sweep training pass: device arrays, fetched lazily.
+
+    ``losses``/``priorities`` are (E, U) device arrays — the ONLY
+    values the engine syncs to host per round (the trained stack stays
+    on device and is donated into the merge)."""
+    trained: Any
+    losses: Any
+    priorities: Any
+
+
 class Backend:
     """Contract only — see module docstring. Subclasses must set
     ``num_users`` and ``heterogeneity`` ((num_users,) in [0,1])."""
@@ -110,6 +141,11 @@ class Backend:
 
     def num_examples(self, u: int) -> int:
         raise NotImplementedError
+
+    # ---- sweep contract (optional; HostBackend's fused path implements
+    # it, everything else reports unsupported and the engine refuses) --
+    def sweep_capable(self) -> bool:
+        return False
 
 
 class HostBackend(Backend):
@@ -134,6 +170,8 @@ class HostBackend(Backend):
             raise ValueError(f"unknown round_mode {round_mode!r}")
         self.num_users = len(user_data)
         self.heterogeneity = label_heterogeneity(user_data, num_classes)
+        self.seed = seed       # the clients' stream seed (engine checks
+        #                        it before taking the E=1 sweep path)
         # an explicit round_mode subsumes the legacy prefer_vmap flag:
         # "stacked"/"fused" always stack what they can, "ragged" never
         self._mode = round_mode
@@ -181,6 +219,7 @@ class HostBackend(Backend):
         self._bcast = None
         self._resident = None      # device-resident merged cohort stack
         self._resident_key = None  # the global-state object it mirrors
+        self._sweep_fns = {}       # E -> jitted sweep (bcast, round, merge)
 
     # ------------------------------------------------------------------
     def init_state(self, init_params):
@@ -201,10 +240,11 @@ class HostBackend(Backend):
                 and len(train_ids) == self.num_users)
 
     # ------------------------------------------------- fused round path
-    def _build_fused(self):
-        U = self.num_users
-        nb = max(1, self.clients[0].num_examples // self._batch_size)
-        self._nb = nb
+    def _ensure_xstack(self):
+        """Pre-stack the rectangular per-user data to (U, n, ...)."""
+        if self._xstack is not None:
+            return
+        self._nb = max(1, self.clients[0].num_examples // self._batch_size)
         self._xstack = jax.tree.map(
             lambda *xs: np.stack([np.asarray(x) for x in xs]),
             *[c.data for c in self.clients])
@@ -213,6 +253,11 @@ class HostBackend(Backend):
         # not twice (np.stack copied; the originals can now be collected)
         for c in self.clients:
             c.data = jax.tree.map(lambda leaf: leaf[c.uid], self._xstack)
+
+    def _build_fused(self):
+        U = self.num_users
+        self._ensure_xstack()
+        nb = self._nb
         epoch_run, uk = self._epoch_run, self._use_kernel
 
         def bcast(g):
@@ -368,6 +413,168 @@ class HostBackend(Backend):
         models = [self._local(handle, u) for u in winners]
         sizes = [self.clients[u].num_examples for u in winners]
         return fedavg(models, sizes)
+
+    # -------------------------------------------------- sweep round path
+    # E independent experiments as ONE device program (DESIGN.md §5):
+    # the fused round step vmapped over a leading experiment axis, so
+    # every array gains an (E, ...) prefix and the per-round device
+    # traffic is one train call + one merge call for the whole sweep.
+    def sweep_capable(self) -> bool:
+        """Sweeps need the fused full-cohort shape: fused mode and a
+        rectangular cohort (equal per-user example counts)."""
+        return self._mode == "fused" and self._rect
+
+    def _build_sweep_fns(self, E: int):
+        U, uk = self.num_users, self._use_kernel
+        self._ensure_xstack()
+        nb, epoch_run = self._nb, self._epoch_run
+        shard = (self._mesh is not None
+                 and sweep_shardable(E, U, self._mesh))
+        if shard:
+            # mirror the fused-path rule: Pallas under real GSPMD
+            # partitioning needs custom partitioning, so a >1-way split
+            # routes the reductions through the jnp oracle
+            uk = uk and self._mesh.size == 1
+
+        def bcast(g):
+            glob = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (E,) + p.shape), g)
+            stack = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None, None],
+                                           (E, U) + p.shape), g)
+            return glob, stack
+
+        def sweep_round(stack, batched, need_prio):
+            # per-lane rows are identical at round start, so lane e's
+            # Eq. 2 reference model is its row 0 — same trick as the
+            # single-experiment fused step, one axis up
+            glob = jax.tree.map(lambda p: p[:, 0], stack)
+            trained, losses = jax.vmap(jax.vmap(epoch_run))(stack, batched)
+            loss_u = losses[:, :, -nb:].mean(axis=2)          # (E, U)
+            if need_prio:
+                prios = jax.vmap(
+                    lambda tr, g: stacked_model_priorities(
+                        tr, g, use_kernel=uk))(trained, glob)
+            else:
+                prios = jnp.ones((E, U), jnp.float32)
+            return trained, loss_u, prios
+
+        def sweep_merge(trained, alphas, old_glob):
+            # masked Eq. 1 per lane; lanes whose alpha row is all-zero
+            # (winnerless round) keep their old global — the in-graph
+            # twin of the single path's "skip merge, rebuild from state"
+            merged = jax.vmap(
+                lambda s, a: fedavg_masked(s, a, use_kernel=uk))(
+                    trained, alphas)
+            has = alphas.sum(axis=1) > 0                      # (E,)
+            glob = jax.tree.map(
+                lambda m, o: jnp.where(
+                    has.reshape((E,) + (1,) * (m.ndim - 1)), m, o),
+                merged, old_glob)
+            stack = jax.tree.map(
+                lambda g, tr: jnp.broadcast_to(g[:, None], tr.shape),
+                glob, trained)
+            return glob, stack
+
+        if shard:
+            ss = sweep_sharding(self._mesh, E, U)
+            gs = sweep_global_sharding(self._mesh, E)
+            fns = (
+                jax.jit(bcast, out_shardings=(gs, ss)),
+                jax.jit(sweep_round, static_argnums=2, donate_argnums=0,
+                        in_shardings=(ss, ss),
+                        out_shardings=(ss, ss, ss)),
+                jax.jit(sweep_merge, donate_argnums=(0, 2),
+                        in_shardings=(ss, ss, gs),
+                        out_shardings=(gs, ss)),
+            )
+        else:
+            fns = (
+                jax.jit(bcast),
+                jax.jit(sweep_round, static_argnums=2, donate_argnums=0),
+                jax.jit(sweep_merge, donate_argnums=(0, 2)),
+            )
+        self._sweep_fns[E] = fns
+        return fns
+
+    def sweep_init(self, init_params, seeds: Sequence[int]) -> SweepState:
+        """Fresh device (glob, stack) + per-lane client rng streams.
+
+        ``seeds[e]`` is lane e's experiment seed; user u's stream is
+        ``default_rng(seed + 1000 * u)`` — exactly the stream a
+        dedicated per-spec backend (``Client``'s seeding rule) would
+        own, which is what makes sweep lanes batch-draw-identical to
+        sequential runs."""
+        if not self.sweep_capable():
+            raise ValueError(
+                "sweep needs round_mode='fused' and a rectangular "
+                "cohort (equal per-user example counts)")
+        E = len(seeds)
+        bcast, _, _ = self._sweep_fns.get(E) or self._build_sweep_fns(E)
+        glob, stack = bcast(init_params)
+        rngs = [[np.random.default_rng(int(s) + 1000 * u)
+                 for u in range(self.num_users)] for s in seeds]
+        return SweepState(num_lanes=E, glob=glob, stack=stack, rngs=rngs)
+
+    def sweep_batches(self, st: SweepState):
+        """(E, U, epochs*nb, bs, ...) round batches, one fancy-index.
+
+        Per (lane, user): one epoch permutation per local epoch from
+        that lane/user's OWN stream, in epoch order — the draws a
+        sequential fused run of the lane would make — then a single
+        gather over the shared (U, n, ...) data stack builds every
+        lane's round batches at once (the data is read-only and shared;
+        only the index tensor is per-lane)."""
+        E, U = st.num_lanes, self.num_users
+        bs, nb, ep = self._batch_size, self._nb, self._local_epochs
+        n = self.clients[0].num_examples
+        take = nb * bs
+        perms = np.empty((E, ep, U, take), np.int64)
+        for e in range(E):
+            for k in range(ep):
+                for u in range(U):
+                    perms[e, k, u] = st.rngs[e][u].permutation(n)[:take]
+        big = perms.transpose(0, 2, 1, 3).reshape(E, U, ep * take)
+        rows = np.arange(U)[None, :, None]
+        return jax.tree.map(
+            lambda leaf: leaf[rows, big].reshape(
+                (E, U, ep * nb, bs) + leaf.shape[2:]),
+            self._xstack)
+
+    def sweep_train(self, st: SweepState, batched,
+                    need_priority: bool) -> SweepTrainResult:
+        """Dispatch ONE jitted train call for all E lanes; the incoming
+        stack is donated into the trained stack (residency chain)."""
+        _, rnd, _ = self._sweep_fns[st.num_lanes]
+        stack, st.stack = st.stack, None      # donated below
+        trained, loss_u, prios = rnd(stack, batched, bool(need_priority))
+        return SweepTrainResult(trained=trained, losses=loss_u,
+                                priorities=prios)
+
+    def sweep_merge(self, st: SweepState, tr: SweepTrainResult,
+                    alphas: np.ndarray) -> None:
+        """Dispatch the batched masked merge; the trained stack is
+        donated in, and the merged (glob, stack) become the resident
+        device state for the next round."""
+        _, _, mrg = self._sweep_fns[st.num_lanes]
+        trained, tr.trained = tr.trained, None
+        st.glob, st.stack = mrg(trained, jnp.asarray(alphas), st.glob)
+
+    def sweep_global(self, st: SweepState, e: int):
+        """Lane e's current global params (for eval / extraction)."""
+        return jax.tree.map(lambda p: p[e], st.glob)
+
+    def sweep_adopt_streams(self, st: SweepState, e: int) -> None:
+        """Adopt lane e's batch rng streams as the clients' own.
+
+        A lane stream is the SAME seeded stream a client would have
+        consumed through the per-round path (same seed rule, one
+        permutation per epoch per round), so after an E=1 delegated
+        ``run`` this hands the advanced generators back — continuing
+        the engine per-round afterwards draws exactly where a pure
+        per-round run would, instead of replaying from the origin."""
+        for u, c in enumerate(self.clients):
+            c._rng = st.rngs[e][u]
 
 
 class SiloBackend(Backend):

@@ -2,7 +2,8 @@
 
 One round, regardless of strategy or backend:
 
-  1. counter refrain mask (Step 4);
+  1. counter refrain mask (Step 4) — upload shares are computed ONCE
+     per round and passed through (mask + SelectionContext.counter_values);
   2. if the strategy selects before training (capability flag, e.g.
      classic FedAvg), select now and train only winners — otherwise
      train everyone (Step 2) and compute Eq. 2 priorities (Step 3);
@@ -14,22 +15,66 @@ One round, regardless of strategy or backend:
 There is deliberately no strategy-name branching here: behaviour
 differences ride entirely on the Strategy capability flags and the
 Backend contract.
+
+**Sweeps are the native unit** (DESIGN.md §5): ``run_sweep`` stacks E
+independent experiment cells into one device program — the backend's
+fused round step vmapped over a leading experiment axis — and runs all
+E host-side selection layers per round through one batched pass
+(``select_grouped`` -> ``contend_batch``). The round loop is a small
+async pipeline: while the device trains round t, the host pre-draws
+round t+1's epoch batches; only the tiny (E, U) priority matrix syncs
+per round, and the next train call is dispatched before the host
+settles round t's bookkeeping. ``run`` on a sweep-capable backend is
+the E=1 special case of the same code path.
+
+Sweep lanes are bit-faithful to sequential runs: each lane owns its
+strategy instance (its contention rng), its engine rng, its fairness
+counter column, and its per-user batch streams, all seeded from the
+lane's spec — winner sequences match E separate ``run`` calls
+winner-for-winner (tests/test_sweep.py). One documented exception:
+``trains_before_selection`` lanes train the full cohort inside the
+sweep step (selection still gates the merge, like SiloBackend), so
+their loss traces cover all users, not just the pre-selected winners —
+winners/selections/merged params are unaffected.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+import time
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.counter import FairnessCounter
+from repro.core.counter import FairnessCounter, SweepFairnessCounter
+from repro.core.server import winner_alphas
 from repro.engine.backends import Backend
-from repro.engine.registry import create_strategy
-from repro.engine.spec import ExperimentSpec
-from repro.engine.types import FLHistory, SelectionContext
+from repro.engine.registry import create_strategy, select_grouped
+from repro.engine.spec import ExperimentSpec, SweepSpec
+from repro.engine.types import (FLHistory, SelectionContext, SweepResult)
+
+
+class _Lane:
+    """Host-side state of ONE experiment cell inside a (possibly E=1)
+    sweep: spec, strategy instance, engine rng, history. The fairness
+    counter lives outside (one vectorized ``SweepFairnessCounter`` row
+    per lane) so Step 5 stays a single numpy update across lanes."""
+
+    __slots__ = ("spec", "strategy", "rng", "history")
+
+    def __init__(self, spec: ExperimentSpec, num_users: int, *,
+                 strategy=None, rng=None):
+        self.spec = spec
+        self.strategy = strategy if strategy is not None else \
+            create_strategy(spec.strategy, csma_config=spec.csma,
+                            seed=spec.seed, **spec.strategy_options)
+        self.rng = rng if rng is not None else \
+            np.random.default_rng(spec.seed)
+        self.history = FLHistory(
+            selections=np.zeros(num_users, np.int64))
 
 
 class FLEngine:
-    """One FL run: spec x strategy (registry) x backend."""
+    """One FL run (or one E-cell sweep): spec x strategy (registry) x
+    backend."""
 
     def __init__(self, spec: ExperimentSpec, backend: Backend, init_params,
                  eval_fn: Optional[Callable] = None):
@@ -43,6 +88,7 @@ class FLEngine:
             spec.strategy, csma_config=spec.csma, seed=spec.seed,
             **spec.strategy_options)
         self._rng = np.random.default_rng(spec.seed)
+        self._init_params = init_params
         self.state = backend.init_state(init_params)
 
     # ------------------------------------------------------------------
@@ -51,26 +97,34 @@ class FLEngine:
         return self.backend.global_params(self.state)
 
     def _context(self, priorities: np.ndarray, participating: np.ndarray,
-                 t: int) -> SelectionContext:
+                 t: int, shares: np.ndarray) -> SelectionContext:
         return SelectionContext(
             priorities=priorities, participating=participating,
             k_target=self.spec.k_per_round, rng=self._rng,
             cw_base=self.spec.cw_base,
-            counter_values=self.counter.values(),
+            counter_values=shares,
             heterogeneity=self.backend.heterogeneity,
             round_index=t)
 
     # ------------------------------------------------------------------
     def run_round(self, t: int, history: FLHistory) -> List[int]:
+        """One single-experiment round through the per-lane backend
+        contract (train_round/merge) — the path for silo, stacked,
+        ragged and partial-cohort rounds, and the sequential reference
+        the sweep path is pinned against."""
         spec, strat = self.spec, self.strategy
-        participating = (self.counter.participating() if spec.use_counter
+        # upload shares: computed once, reused for the refrain mask AND
+        # the SelectionContext (they used to be derived independently)
+        shares = self.counter.values()
+        participating = (self.counter.participating(shares)
+                         if spec.use_counter
                          else np.ones(self.num_users, bool))
         if not participating.any():      # degenerate threshold: reset mask
             participating = np.ones(self.num_users, bool)
 
         if strat.trains_before_selection:
-            sel = strat.select(
-                self._context(np.ones(self.num_users), participating, t))
+            sel = strat.select(self._context(
+                np.ones(self.num_users), participating, t, shares))
             train_ids = list(sel.winners)
         else:
             sel = None
@@ -79,8 +133,8 @@ class FLEngine:
         tr = self.backend.train_round(self.state, t, train_ids,
                                       need_priority=strat.uses_priority)
         if sel is None:
-            sel = strat.select(
-                self._context(tr.priorities, participating, t))
+            sel = strat.select(self._context(
+                tr.priorities, participating, t, shares))
 
         winners = [int(u) for u in sel.winners]
         if winners:
@@ -107,6 +161,35 @@ class FLEngine:
     # ------------------------------------------------------------------
     def run(self, verbose: bool = False) -> FLHistory:
         spec = self.spec
+        # The E=1 sweep delegation re-derives the per-user batch streams
+        # from spec.seed, so it is only bit-faithful to the per-round
+        # path on a PRISTINE engine (state untouched since init — after
+        # any merged round the per-round path would continue consumed
+        # client streams) whose backend was seeded with the same spec
+        # seed. Anything else takes the per-lane loop.
+        if (self.backend.sweep_capable()
+                and not self.strategy.trains_before_selection
+                and self.state is self._init_params
+                and getattr(self.backend, "seed", None) == spec.seed):
+            # E=1 special case of the sweep code path: same lane loop,
+            # same device program shape, bound to THIS engine's
+            # strategy/rng so repeated-attribute access stays coherent
+            lane = _Lane(spec, self.num_users, strategy=self.strategy,
+                         rng=self._rng)
+            result, st, counters = self._run_lanes(
+                [lane], init_state=self.state, overlap=True,
+                verbose=verbose)
+            self.state = self.backend.sweep_global(st, 0)
+            self.counter.uploads[:] = counters.uploads[0]
+            self.counter.total_merged = int(counters.total_merged[0])
+            # the lane consumed spec-seeded batch streams; hand them to
+            # the clients so continued per-round training picks up the
+            # stream where a pure per-round run would be
+            self.backend.sweep_adopt_streams(st, 0)
+            return result.histories[0]
+
+        # per-lane path: silo / stacked / ragged backends and
+        # partial-cohort (trains_before_selection) rounds
         history = FLHistory(
             selections=np.zeros(self.num_users, np.int64))
         for t in range(spec.rounds):
@@ -122,6 +205,153 @@ class FLEngine:
                           + (f" loss {history.train_loss[-1]:.4f}"
                              if history.train_loss else ""))
         return history
+
+    # ------------------------------------------------------- sweep path
+    def run_sweep(self, sweep: Union[SweepSpec, Sequence[ExperimentSpec]],
+                  *, overlap: Optional[bool] = None,
+                  verbose: bool = False) -> SweepResult:
+        """Run E experiment cells as ONE stacked device program.
+
+        ``sweep``: a ``SweepSpec`` or a plain sequence of
+        ``ExperimentSpec`` cells (validated into one). Every cell starts
+        from the engine's initial params and its own spec seed, exactly
+        like E fresh sequential ``run`` calls. ``overlap`` overrides the
+        sweep's async-pipeline flag (results are bit-identical either
+        way; off is only useful for debugging and the pipeline bench).
+        """
+        if not isinstance(sweep, SweepSpec):
+            sweep = SweepSpec(specs=list(sweep))
+        if overlap is None:
+            overlap = sweep.overlap
+        if not self.backend.sweep_capable():
+            raise ValueError(
+                "run_sweep needs a sweep-capable backend (HostBackend "
+                "round_mode='fused' over a rectangular cohort); run the "
+                "cells sequentially through FLEngine.run instead")
+        lanes = [_Lane(spec, self.num_users) for spec in sweep.specs]
+        result, _, _ = self._run_lanes(
+            lanes, init_state=self._init_params, overlap=overlap,
+            verbose=verbose, labels=sweep.labels)
+        return result
+
+    # ------------------------------------------------------------------
+    def _select_lanes(self, lanes, counters, prios64, t):
+        """Host selection for all lanes: ONE shares/mask computation,
+        one grouped (batched) select dispatch."""
+        U = self.num_users
+        shares = counters.values()                 # (E, U), once per round
+        masks = counters.participating(shares)
+        het = self.backend.heterogeneity
+        ones = np.ones(U)
+        strategies, ctxs = [], []
+        for e, lane in enumerate(lanes):
+            spec, strat = lane.spec, lane.strategy
+            mask = (masks[e] if spec.use_counter
+                    else np.ones(U, bool))
+            if not mask.any():                     # degenerate threshold
+                mask = np.ones(U, bool)
+            prios = (prios64[e]
+                     if strat.uses_priority
+                     and not strat.trains_before_selection else ones)
+            strategies.append(strat)
+            ctxs.append(SelectionContext(
+                priorities=prios, participating=mask,
+                k_target=spec.k_per_round, rng=lane.rng,
+                cw_base=spec.cw_base, counter_values=shares[e],
+                heterogeneity=het, round_index=t))
+        sels = select_grouped(strategies, ctxs)
+        winners_all = [[int(u) for u in sel.winners] for sel in sels]
+        return winners_all, sels
+
+    def _record_lane(self, lane, sel, winners, loss_row, prios_row):
+        h = lane.history
+        if winners:
+            h.uploads_total += len(winners)
+            for u in winners:
+                h.selections[u] += 1
+        h.winners.append(winners)
+        h.collisions += sel.collisions
+        h.contention_slots += sel.elapsed_slots
+        if (lane.strategy.uses_priority
+                and not lane.strategy.trains_before_selection):
+            h.priorities.append(prios_row.tolist())
+        h.train_loss.append(float(np.mean(loss_row)))
+
+    def _run_lanes(self, lanes, *, init_state, overlap, verbose,
+                   labels=None):
+        """The sweep round loop: one batched device program, one batched
+        host selection layer, async host/device overlap.
+
+        Pipeline shape per round t (device work in brackets):
+
+            [train t in flight]  host pre-draws round t+1 batches
+            sync (E, U) priorities                       <- only sync
+            host: refrain masks + grouped CSMA contention
+            dispatch [merge t] then [train t+1]
+            host: counters, history, eval — device already busy
+
+        Turning ``overlap`` off moves the batch pre-draw after the
+        contention; every per-lane rng stream is consumed in the same
+        order either way, so the two schedules are bit-identical
+        (pinned in tests/test_sweep.py).
+        """
+        backend, U, E = self.backend, self.num_users, len(lanes)
+        rounds = lanes[0].spec.rounds
+        need_prio = any(l.strategy.uses_priority for l in lanes)
+        counters = SweepFairnessCounter(
+            E, U, np.array([l.spec.counter_threshold for l in lanes]))
+        t0 = time.time()
+        st = backend.sweep_init(init_state,
+                                [l.spec.seed for l in lanes])
+        tr = backend.sweep_train(st, backend.sweep_batches(st), need_prio)
+        for t in range(rounds):
+            last = t + 1 >= rounds
+            next_batched = None
+            if overlap and not last:
+                # host: round t+1's epoch permutations, drawn while the
+                # dispatched round-t train call runs on device
+                next_batched = backend.sweep_batches(st)
+            prios64 = np.asarray(tr.priorities, np.float64)  # (E, U) sync
+            winners_all, sels = self._select_lanes(
+                lanes, counters, prios64, t)
+            alphas = np.zeros((E, U), np.float32)
+            for e, winners in enumerate(winners_all):
+                if winners:
+                    alphas[e] = winner_alphas(
+                        U, winners,
+                        [backend.num_examples(u) for u in winners])
+            backend.sweep_merge(st, tr, alphas)
+            next_tr = None
+            if not last:
+                if next_batched is None:
+                    next_batched = backend.sweep_batches(st)
+                next_tr = backend.sweep_train(st, next_batched, need_prio)
+            # deferred bookkeeping: overlaps the in-flight train call
+            counters.update(winners_all)
+            losses64 = np.asarray(tr.losses, np.float64)
+            for e, lane in enumerate(lanes):
+                self._record_lane(lane, sels[e], winners_all[e],
+                                  losses64[e], prios64[e])
+            if self.eval_fn is not None:
+                for e, lane in enumerate(lanes):
+                    spec = lane.spec
+                    if t % spec.eval_every == 0 or t == spec.rounds - 1:
+                        acc = float(self.eval_fn(
+                            backend.sweep_global(st, e)))
+                        lane.history.accuracy.append(acc)
+                        lane.history.eval_round.append(t)
+                        if verbose:
+                            tag = (labels[e] if labels
+                                   else f"{spec.strategy}/{e}")
+                            print(f"[{tag}] round {t:4d} acc {acc:.4f}"
+                                  f" loss {lane.history.train_loss[-1]:.4f}")
+            tr = next_tr
+        result = SweepResult(
+            histories=[l.history for l in lanes],
+            specs=[l.spec for l in lanes], labels=labels,
+            overlap=overlap, wall_s=time.time() - t0,
+            final_globals=st.glob)
+        return result, st, counters
 
 
 def build_host_engine(spec: ExperimentSpec, init_params, loss_fn,

@@ -1,0 +1,27 @@
+"""Evaluation helpers for engine runs.
+
+Moved here from the deleted ``repro.core.federated`` shim — the eval
+callback is part of the engine surface (``FLEngine(eval_fn=...)``), not
+of the paper's core selection math.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_accuracy_eval(apply_fn, x_test, y_test, batch: int = 256):
+    """Batched classifier accuracy eval_fn."""
+    x_test = np.asarray(x_test)
+    y_test = np.asarray(y_test)
+    apply_jit = jax.jit(apply_fn)
+
+    def eval_fn(params) -> float:
+        correct = 0
+        for i in range(0, len(y_test), batch):
+            logits = apply_jit(params, x_test[i:i + batch])
+            correct += int((np.argmax(np.asarray(logits), -1)
+                            == y_test[i:i + batch]).sum())
+        return correct / len(y_test)
+
+    return eval_fn

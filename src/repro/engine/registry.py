@@ -65,3 +65,37 @@ def create_strategy(name: str, csma_config=None, seed: int = 0, **options):
     """
     cls = get_strategy_class(name)
     return cls(csma_config=csma_config, seed=seed, **options)
+
+
+def supports_batched_select(cls: Type) -> bool:
+    """True when ``cls`` overrides the base ``Strategy.select_batch``
+    loop with a vectorized implementation (capability introspection for
+    the sweep engine and for reporting)."""
+    from repro.engine.strategies import Strategy
+    impl = getattr(cls, "select_batch", None)
+    base = Strategy.select_batch
+    return (impl is not None
+            and getattr(impl, "__func__", impl)
+            is not getattr(base, "__func__", base))
+
+
+def select_grouped(strategies, ctxs):
+    """Dispatch E lanes' selections, batching per strategy class.
+
+    Lanes are grouped by ``type(strategy)`` (a sweep may mix schemes —
+    fig2/fig3 run all four paper strategies in one call) and each group
+    goes through its class's ``select_batch`` in one shot; result order
+    follows the input lanes. Every lane still consumes ITS OWN rng /
+    simulator streams inside the batch, so grouping never changes a
+    lane's outcome (the per-lane loop is the semantic reference).
+    """
+    out = [None] * len(ctxs)
+    groups = {}
+    for i, s in enumerate(strategies):
+        groups.setdefault(type(s), []).append(i)
+    for cls, idx in groups.items():
+        results = cls.select_batch([strategies[i] for i in idx],
+                                   [ctxs[i] for i in idx])
+        for i, r in zip(idx, results):
+            out[i] = r
+    return out

@@ -5,11 +5,20 @@ Backend-agnostic: the same spec runs the paper's host simulation
 the backend construction differs. ``strategy_options`` forwards keyword
 arguments to the registered strategy class (e.g. ``{"gamma": 2.0}`` for
 ``hetero-topk``), so new strategies need no spec changes.
+
+``SweepSpec`` is the sweep-native unit (DESIGN.md §5): E independent
+experiment cells — (strategy, seed, CW, bias, counter, ...) variations
+over ONE dataset/model — that ``FLEngine.run_sweep`` stacks into a
+single device program. Cells may vary every selection-layer field; the
+training-side fields consumed by the shared backend (``lr``,
+``batch_size``, ``local_epochs``) and the round horizon must agree
+across cells, which ``SweepSpec`` validates at construction.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict
+import itertools
+from dataclasses import dataclass, field, fields, replace
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core.csma import CSMAConfig
 
@@ -32,3 +41,68 @@ class ExperimentSpec:
     batch_size: int = 32
     local_epochs: int = 1
     seed: int = 0
+
+
+#: ExperimentSpec fields that must agree across the cells of one sweep —
+#: ``rounds`` because the lanes advance in lockstep, the rest because
+#: they configure the ONE backend every lane shares.
+SWEEP_SHARED_FIELDS = ("rounds", "lr", "batch_size", "local_epochs")
+
+
+@dataclass
+class SweepSpec:
+    """E experiment cells destined for one ``FLEngine.run_sweep`` call.
+
+    ``overlap`` toggles the async host/device pipeline (bit-identical
+    results either way — it only reorders host work relative to device
+    dispatch; tests/test_sweep.py pins the parity). ``labels`` names the
+    cells for reporting; ``grid`` fills them automatically.
+    """
+    specs: List[ExperimentSpec]
+    overlap: bool = True
+    labels: Optional[List[str]] = None
+
+    def __post_init__(self):
+        if not self.specs:
+            raise ValueError("SweepSpec needs at least one cell")
+        lead = self.specs[0]
+        for f in SWEEP_SHARED_FIELDS:
+            vals = {getattr(s, f) for s in self.specs}
+            if len(vals) > 1:
+                raise ValueError(
+                    f"sweep cells disagree on shared field {f!r}: "
+                    f"{sorted(vals)} — the lanes run in lockstep over "
+                    f"one backend, so {SWEEP_SHARED_FIELDS} must match")
+        if self.labels is not None and len(self.labels) != len(self.specs):
+            raise ValueError(
+                f"{len(self.labels)} labels for {len(self.specs)} cells")
+        self.rounds = lead.rounds
+
+    def __len__(self):
+        return len(self.specs)
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    @classmethod
+    def grid(cls, base: ExperimentSpec, *, overlap: bool = True,
+             **axes: Sequence) -> "SweepSpec":
+        """Cartesian product of spec-field variations over ``base``.
+
+            SweepSpec.grid(base, strategy=PAPER_STRATEGIES, seed=range(3))
+
+        Axes are swept in keyword order with the LAST axis fastest
+        (``itertools.product``), and each cell gets a ``field=value``
+        label. Unknown field names raise immediately.
+        """
+        known = {f.name for f in fields(ExperimentSpec)}
+        bad = set(axes) - known
+        if bad:
+            raise ValueError(f"unknown ExperimentSpec fields: {sorted(bad)}")
+        names = list(axes)
+        specs, labels = [], []
+        for combo in itertools.product(*(list(axes[n]) for n in names)):
+            specs.append(replace(base, **dict(zip(names, combo))))
+            labels.append(",".join(f"{n}={v}" for n, v
+                                   in zip(names, combo)))
+        return cls(specs=specs, overlap=overlap, labels=labels)

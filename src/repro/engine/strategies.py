@@ -32,7 +32,7 @@ by name:
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -59,6 +59,21 @@ class Strategy:
     def select(self, ctx: SelectionContext) -> SelectionResult:
         raise NotImplementedError
 
+    @classmethod
+    def select_batch(cls, strategies: Sequence["Strategy"],
+                     ctxs: Sequence[SelectionContext]
+                     ) -> List[SelectionResult]:
+        """Selection across E sweep lanes in one call (DESIGN.md §5).
+
+        ``strategies[e]`` is lane e's OWN instance (its rng / simulator
+        state must advance exactly as a sequential run would — that is
+        the sweep's bit-parity contract), ``ctxs[e]`` its round context.
+        The default is the per-lane loop, correct for every strategy;
+        subclasses override to vectorize the cross-lane math while
+        consuming each lane's streams in the same per-lane order.
+        """
+        return [s.select(c) for s, c in zip(strategies, ctxs)]
+
 
 @register_strategy("random-centralized")
 class RandomCentralized(Strategy):
@@ -83,6 +98,30 @@ class PriorityCentralized(Strategy):
         k = min(ctx.k_target, len(cand))
         order = cand[np.argsort(-ctx.priorities[cand], kind="stable")]
         return SelectionResult(winners=[int(u) for u in order[:k]])
+
+    @classmethod
+    def select_batch(cls, strategies, ctxs):
+        """One (E, U) stable argsort for all lanes.
+
+        Non-participants are scored +inf so they sort strictly last;
+        among participants a full-row stable sort keeps the same
+        index order on priority ties as the scalar path's
+        candidate-subset sort (candidates are index-ordered), so the
+        winner lists match element-for-element.
+        """
+        if len({len(c.priorities) for c in ctxs}) != 1:
+            return [s.select(c) for s, c in zip(strategies, ctxs)]
+        prios = np.stack([np.asarray(c.priorities, np.float64)
+                          for c in ctxs])
+        part = np.stack([np.asarray(c.participating, bool) for c in ctxs])
+        scores = np.where(part, -prios, np.inf)
+        order = np.argsort(scores, axis=1, kind="stable")
+        out = []
+        for e, ctx in enumerate(ctxs):
+            k = min(ctx.k_target, int(part[e].sum()))
+            out.append(SelectionResult(
+                winners=[int(u) for u in order[e, :k]]))
+        return out
 
 
 class _DistributedCSMA(Strategy):
@@ -110,6 +149,45 @@ class _DistributedCSMA(Strategy):
                                collisions=res.collisions,
                                elapsed_slots=res.elapsed_slots,
                                finish_slots=res.finish_slots)
+
+    @classmethod
+    def select_batch(cls, strategies, ctxs):
+        """All E lanes' contention in one numpy pass per medium event.
+
+        Per lane: the Eq. 3 CW vector and the R ~ U(0,1) draws come
+        from the lane's own ``_windows`` / context rng (same order as
+        ``select``), then ONE ``contend_batch`` call advances every
+        lane's medium together, redrawing collisions from each lane's
+        own persistent simulator rng — so lane e's winner sequence is
+        bit-identical to a sequential run of that lane (the contract
+        tests/test_sweep.py pins). Falls back to the per-lane loop
+        when the lanes' CSMA configs or user counts differ (a batch
+        shares one slot/airtime clock).
+        """
+        cfg = strategies[0]._sim.config
+        if (any(s._sim.config != cfg for s in strategies)
+                or len({len(c.priorities) for c in ctxs}) != 1):
+            return [s.select(c) for s, c in zip(strategies, ctxs)]
+        windows = np.stack([s._windows(c)
+                            for s, c in zip(strategies, ctxs)])
+        backoffs = np.stack(
+            [c.rng.uniform(0.0, 1.0, size=windows.shape[1])
+             for c in ctxs]) * windows
+        slot_s = cfg.slot_us * 1e-6
+        part = np.stack([np.asarray(c.participating, bool) for c in ctxs])
+        batch = strategies[0]._sim.contend_batch(
+            backoffs * slot_s, windows * slot_s,
+            k_target=np.array([c.k_target for c in ctxs], np.int64),
+            participating=part,
+            rngs=[s._sim._rng for s in strategies])
+        out = []
+        for e in range(len(ctxs)):
+            r = batch.round_result(e)
+            out.append(SelectionResult(winners=r.winners,
+                                       collisions=r.collisions,
+                                       elapsed_slots=r.elapsed_slots,
+                                       finish_slots=r.finish_slots))
+        return out
 
 
 @register_strategy("random-distributed")

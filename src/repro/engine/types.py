@@ -101,3 +101,43 @@ class FLHistory:
     uploads_total: int = 0
     contention_slots: int = 0                  # total airtime+backoff slots
     winners: List[List[int]] = field(default_factory=list)  # per round
+
+
+@dataclass
+class SweepResult:
+    """E per-cell histories out of one ``FLEngine.run_sweep`` call.
+
+    Sequence-like over the histories (iteration / len / indexing), with
+    the cells' specs and labels riding along so reporting code can
+    group results without re-deriving which lane was which.
+    ``final_globals`` is the (E, ...) stacked pytree of every lane's
+    final global model (device-resident); ``lane_params(e)`` slices one
+    lane out for eval / checkpointing.
+    """
+    histories: List[FLHistory]
+    specs: List[Any]                           # the cells' ExperimentSpecs
+    labels: Optional[List[str]] = None
+    overlap: bool = True
+    wall_s: float = 0.0
+    final_globals: Any = None                  # (E, ...) stacked params
+
+    def __len__(self):
+        return len(self.histories)
+
+    def __iter__(self):
+        return iter(self.histories)
+
+    def __getitem__(self, i):
+        return self.histories[i]
+
+    def by_label(self, label: str) -> FLHistory:
+        if self.labels is None:
+            raise KeyError("sweep has no labels")
+        return self.histories[self.labels.index(label)]
+
+    def lane_params(self, e: int):
+        """Lane e's final global params pytree."""
+        if self.final_globals is None:
+            raise ValueError("sweep carried no final params")
+        import jax
+        return jax.tree.map(lambda p: p[e], self.final_globals)

@@ -1,10 +1,13 @@
 """FL training driver — runs the paper's experiment (or the LLM variant)
-end-to-end on whatever devices exist.
+end-to-end on whatever devices exist, through the engine API.
 
 Examples:
   # the paper's setup: 10 users, 2/round, MLP on (synthetic) Fashion-MNIST
   PYTHONPATH=src python -m repro.launch.train --model mlp --dataset fashion \
       --strategy priority-distributed --rounds 100
+
+  # the same cell swept over 4 seeds as ONE stacked device program
+  PYTHONPATH=src python -m repro.launch.train --sweep-seeds 4 --rounds 100
 
   # federated finetune of a reduced assigned arch on synthetic tokens
   PYTHONPATH=src python -m repro.launch.train --arch hymba-1.5b --rounds 20
@@ -22,17 +25,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core import FLConfig, FLExperiment
-from repro.core.federated import make_accuracy_eval
-from repro.core.selection import STRATEGIES
 from repro.data import (make_classification_dataset, make_token_stream,
                         partition_iid, partition_noniid_shards)
+from repro.engine import (ExperimentSpec, FLEngine, PAPER_STRATEGIES,
+                          SweepSpec, available_strategies,
+                          build_host_engine, make_accuracy_eval)
 from repro.models.paper_models import get_paper_model
 from repro.models.model import init_params, compute_loss
 from repro.checkpoint import save_checkpoint
 
 
-def build_paper_experiment(args) -> FLExperiment:
+def _spec_from_args(args) -> ExperimentSpec:
+    return ExperimentSpec(
+        k_per_round=args.k, rounds=args.rounds, strategy=args.strategy,
+        cw_base=args.cw_base, use_counter=not args.no_counter,
+        counter_threshold=args.threshold, lr=args.lr,
+        batch_size=args.batch_size, seed=args.seed)
+
+
+def build_paper_engine(args) -> FLEngine:
     (xtr, ytr), (xte, yte) = make_classification_dataset(
         args.dataset, n_train=args.n_train, n_test=args.n_test,
         seed=args.seed)
@@ -51,15 +62,11 @@ def build_paper_experiment(args) -> FLExperiment:
 
     eval_fn = make_accuracy_eval(apply_fn, xte, yte)
     params = init_fn(jax.random.PRNGKey(args.seed))
-    cfg = FLConfig(
-        num_users=args.users, k_per_round=args.k, rounds=args.rounds,
-        lr=args.lr, batch_size=args.batch_size, strategy=args.strategy,
-        cw_base=args.cw_base, use_counter=not args.no_counter,
-        counter_threshold=args.threshold, seed=args.seed)
-    return FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+    return build_host_engine(_spec_from_args(args), params, loss_fn,
+                             user_data, eval_fn)
 
 
-def build_llm_experiment(args) -> FLExperiment:
+def build_llm_engine(args) -> FLEngine:
     cfg_model = get_config(args.arch).reduced()
     seq = args.llm_seq
     user_seqs = make_token_stream(
@@ -81,12 +88,8 @@ def build_llm_experiment(args) -> FLExperiment:
         return -float(eval_loss(params))  # "metric up" convention
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg_model)
-    cfg = FLConfig(
-        num_users=args.users, k_per_round=args.k, rounds=args.rounds,
-        lr=args.lr, batch_size=args.batch_size, strategy=args.strategy,
-        cw_base=args.cw_base, use_counter=not args.no_counter,
-        counter_threshold=args.threshold, seed=args.seed)
-    return FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
+    return build_host_engine(_spec_from_args(args), params, loss_fn,
+                             user_data, eval_fn)
 
 
 def main():
@@ -98,7 +101,7 @@ def main():
                     help="federated-finetune a reduced assigned arch "
                          "instead of the paper model")
     ap.add_argument("--strategy", default="priority-distributed",
-                    choices=STRATEGIES)
+                    choices=available_strategies() or PAPER_STRATEGIES)
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--users", type=int, default=10)
     ap.add_argument("--k", type=int, default=2)
@@ -113,15 +116,34 @@ def main():
     ap.add_argument("--llm-seq", type=int, default=128)
     ap.add_argument("--llm-seqs-per-user", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sweep-seeds", type=int, default=1,
+                    help="run this many seed-varied copies of the cell "
+                         "as ONE run_sweep device program")
     ap.add_argument("--out", default=None, help="history JSON path")
     ap.add_argument("--ckpt", default=None, help="final checkpoint path")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
     t0 = time.time()
-    exp = (build_llm_experiment(args) if args.arch
-           else build_paper_experiment(args))
-    hist = exp.run(verbose=args.verbose)
+    engine = (build_llm_engine(args) if args.arch
+              else build_paper_engine(args))
+    if args.sweep_seeds > 1:
+        sweep = SweepSpec.grid(
+            engine.spec, seed=range(args.seed,
+                                    args.seed + args.sweep_seeds))
+        result = engine.run_sweep(sweep, verbose=args.verbose)
+        hist = result.histories[0]       # lead cell drives the summary
+        final_params = result.lane_params(0)
+        extra = {
+            "sweep_cells": len(result),
+            "sweep_labels": result.labels,
+            "sweep_best_metric": [max(h.accuracy) if h.accuracy else None
+                                  for h in result],
+        }
+    else:
+        hist = engine.run(verbose=args.verbose)
+        final_params = engine.global_params
+        extra = {}
     dt = time.time() - t0
 
     summary = {
@@ -131,6 +153,7 @@ def main():
         "selections": hist.selections.tolist(),
         "uploads_total": hist.uploads_total,
         "wall_s": round(dt, 1),
+        **extra,
     }
     print(json.dumps(summary, indent=1))
     if args.out:
@@ -141,7 +164,7 @@ def main():
                        "eval_round": hist.eval_round,
                        "train_loss": hist.train_loss}, f, indent=1)
     if args.ckpt:
-        save_checkpoint(args.ckpt, exp.global_params)
+        save_checkpoint(args.ckpt, final_params)
 
 
 if __name__ == "__main__":

@@ -2,4 +2,5 @@ from repro.sharding.rules import (param_specs, batch_specs, cache_specs,
                                   to_shardings, batch_axes)
 from repro.sharding.cohort import (COHORT_AXIS, cohort_mesh,
                                    cohort_sharding, replicated_sharding,
-                                   shardable)
+                                   shardable, sweep_global_sharding,
+                                   sweep_sharding, sweep_shardable)

@@ -45,6 +45,42 @@ def replicated_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def sweep_sharding(mesh: Mesh, num_experiments: int,
+                   num_users: int) -> NamedSharding:
+    """Sharding for sweep-stacked ``(E, U, ...)`` leaves.
+
+    The sweep round step carries an ``E * U`` flattened cohort — E
+    experiment lanes x U users — as two leading axes. A 1-D mesh can
+    split only one of them, so the cohort axis lands on the experiment
+    dim when E divides it (the common case: sweeps are wide) and falls
+    back to the user dim otherwise. Either placement partitions the
+    flattened ``E * U`` cohort; each user's small model stays
+    replicated within its shard, exactly like :func:`cohort_sharding`.
+    """
+    axis = mesh.shape[COHORT_AXIS]
+    if num_experiments % axis == 0:
+        return NamedSharding(mesh, P(COHORT_AXIS))
+    return NamedSharding(mesh, P(None, COHORT_AXIS))
+
+
+def sweep_global_sharding(mesh: Mesh, num_experiments: int) -> NamedSharding:
+    """Sharding for per-lane ``(E, ...)`` leaves (the stacked globals):
+    split over the experiment dim when divisible, else replicate."""
+    if num_experiments % mesh.shape[COHORT_AXIS] == 0:
+        return NamedSharding(mesh, P(COHORT_AXIS))
+    return NamedSharding(mesh, P())
+
+
+def sweep_shardable(num_experiments: int, num_users: int,
+                    mesh: Optional[Mesh]) -> bool:
+    """True when the ``(E, U)`` sweep cohort can split over ``mesh`` on
+    at least one of its leading axes (GSPMD divisibility on E or U)."""
+    if mesh is None or COHORT_AXIS not in mesh.shape:
+        return False
+    axis = mesh.shape[COHORT_AXIS]
+    return (num_experiments % axis == 0) or (num_users % axis == 0)
+
+
 def shardable(num_users: int, mesh: Optional[Mesh]) -> bool:
     """True when the cohort axis can actually split over ``mesh``.
 

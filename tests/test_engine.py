@@ -1,19 +1,18 @@
-"""Engine API: strategy registry, FLEngine rounds, backend parity, and
-back-compat against the deprecated FLExperiment facade."""
-import warnings
-
+"""Engine API: strategy registry, FLEngine rounds, backend parity
+against an independent sequential reference transcription of the seed's
+round loop (the deprecated FLExperiment facade is gone)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.federated import FLConfig, FLExperiment, make_accuracy_eval
 from repro.data import make_classification_dataset, partition_noniid_shards
 from repro.engine import (ExperimentSpec, FLEngine, HostBackend,
                           PAPER_STRATEGIES, SelectionContext,
                           SelectionResult, Strategy, available_strategies,
                           build_host_engine, create_strategy,
-                          get_strategy_class, register_strategy)
+                          get_strategy_class, make_accuracy_eval,
+                          register_strategy)
 from repro.engine import registry as registry_mod
 from repro.models.paper_models import get_paper_model
 
@@ -216,30 +215,6 @@ def test_engine_matches_seed_sequential_reference(small_fl_setup,
     assert hist.winners == expected
 
 
-@pytest.mark.parametrize("strategy", PAPER_STRATEGIES)
-def test_flexperiment_matches_flengine_winners(small_fl_setup, strategy):
-    """Back-compat contract: the deprecated facade and the engine
-    produce the identical seeded per-round winner sequence."""
-    params, loss_fn, user_data, eval_fn = small_fl_setup
-    rounds, seed = 6, 1
-
-    spec = ExperimentSpec(rounds=rounds, strategy=strategy, seed=seed)
-    hist_engine = build_host_engine(spec, params, loss_fn, user_data,
-                                    eval_fn).run()
-
-    cfg = FLConfig(rounds=rounds, strategy=strategy, seed=seed,
-                   num_users=len(user_data))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        hist_legacy = FLExperiment(params, loss_fn, user_data, eval_fn,
-                                   cfg).run()
-
-    assert hist_engine.winners == hist_legacy.winners
-    assert hist_engine.uploads_total == hist_legacy.uploads_total
-    np.testing.assert_array_equal(hist_engine.selections,
-                                  hist_legacy.selections)
-
-
 def test_contention_stats_reach_history(small_fl_setup):
     """Satellite fix: CSMAResult.collisions/elapsed_slots used to be
     dropped on the floor — distributed runs must now account airtime."""
@@ -337,11 +312,11 @@ def test_selection_result_behaves_like_winner_list():
     assert bool(SelectionResult(winners=[])) is False
 
 
-def test_engine_importable_before_core():
-    """Regression: `import repro.engine` must work as the FIRST repro
-    import (the core package's deprecated shims import engine back, so
-    its init must stay lazy or the cycle re-enters a half-built
-    module)."""
+def test_engine_importable_before_core_and_shims_gone():
+    """`import repro.engine` must work as the FIRST repro import, and
+    the deprecated FLExperiment/make_strategy shims (whose one-more-
+    cycle grace period ended this PR) must be really gone from
+    repro.core."""
     import os
     import subprocess
     import sys
@@ -350,7 +325,9 @@ def test_engine_importable_before_core():
     out = subprocess.run(
         [sys.executable, "-c",
          "import repro.engine, repro.core; "
-         "print(repro.core.FLConfig().strategy)"],
+         "assert not hasattr(repro.core, 'FLExperiment'); "
+         "assert not hasattr(repro.core, 'make_strategy'); "
+         "print(repro.engine.ExperimentSpec().strategy)"],
         capture_output=True, text=True,
         env={**os.environ, "PYTHONPATH": os.path.abspath(src)})
     assert out.returncode == 0, out.stderr

@@ -3,8 +3,8 @@ statistically prioritizes high-priority users."""
 import numpy as np
 import pytest
 
-from repro.core.selection import (SelectionContext, make_strategy,
-                                  STRATEGIES)
+from repro.engine import (PAPER_STRATEGIES, SelectionContext,
+                          create_strategy)
 
 
 def _ctx(priorities, k=2, seed=0, part=None, cw_base=2048.0):
@@ -17,20 +17,20 @@ def _ctx(priorities, k=2, seed=0, part=None, cw_base=2048.0):
 
 
 def test_priority_centralized_picks_topk():
-    s = make_strategy("priority-centralized")
+    s = create_strategy("priority-centralized")
     winners = s.select(_ctx([1.0, 1.3, 1.1, 1.25], k=2))
     assert set(winners) == {1, 3}
 
 
 def test_priority_centralized_respects_mask():
-    s = make_strategy("priority-centralized")
+    s = create_strategy("priority-centralized")
     winners = s.select(_ctx([1.0, 1.3, 1.1, 1.25], k=2,
                             part=[True, False, True, True]))
     assert set(winners) == {3, 2}
 
 
 def test_random_centralized_uniformish():
-    s = make_strategy("random-centralized")
+    s = create_strategy("random-centralized")
     counts = np.zeros(4)
     for i in range(400):
         for w in s.select(_ctx([1.0] * 4, k=1, seed=i)):
@@ -38,8 +38,8 @@ def test_random_centralized_uniformish():
     assert counts.min() > 60  # ~100 each
 
 def test_all_strategies_return_k():
-    for name in STRATEGIES:
-        s = make_strategy(name, seed=0)
+    for name in PAPER_STRATEGIES:
+        s = create_strategy(name, seed=0)
         winners = s.select(_ctx([1.0, 1.1, 1.2, 1.05, 1.15], k=3, seed=1))
         assert len(winners) == 3, name
         assert len(set(winners)) == 3
@@ -50,7 +50,7 @@ def test_priority_distributed_prefers_high_priority():
     more often than low-priority ones (Eq. 3: W = N / priority)."""
     wins = np.zeros(3)
     for i in range(300):
-        s = make_strategy("priority-distributed", seed=i)
+        s = create_strategy("priority-distributed", seed=i)
         # user 2 has a much higher priority -> much smaller CW
         winners = s.select(_ctx([1.0, 1.0, 8.0], k=1, seed=i))
         for w in winners:
@@ -62,7 +62,7 @@ def test_priority_distributed_prefers_high_priority():
 def test_random_distributed_is_fairish():
     wins = np.zeros(4)
     for i in range(400):
-        s = make_strategy("random-distributed", seed=i)
+        s = create_strategy("random-distributed", seed=i)
         for w in s.select(_ctx([5.0, 1.0, 1.0, 1.0], k=1, seed=i)):
             wins[w] += 1
     # priorities must NOT matter for the random baseline

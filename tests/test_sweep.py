@@ -1,0 +1,335 @@
+"""Sweep-native engine API (DESIGN.md §5): run_sweep == sequential runs
+winner-for-winner, async-overlap bit-parity, batched selection parity,
+vectorized sweep counter parity, and the SweepSpec surface."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.counter import FairnessCounter, SweepFairnessCounter
+from repro.core.csma import CSMASimulator
+from repro.engine import (ExperimentSpec, PAPER_STRATEGIES, SelectionContext,
+                          Strategy, SweepSpec, build_host_engine,
+                          create_strategy, select_grouped,
+                          supports_batched_select)
+
+# ------------------------------------------------------------------ setup
+NUM_USERS, N_PER_USER, DIM, CLASSES = 8, 64, 16, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Rectangular cohort + linear softmax model (cheap rounds); label
+    skew separates Eq. 2 priorities so selection actually discriminates."""
+    rng = np.random.default_rng(7)
+    user_data = []
+    for u in range(NUM_USERS):
+        probs = np.ones(CLASSES) / CLASSES
+        probs[u % CLASSES] += 1.0
+        probs /= probs.sum()
+        user_data.append({
+            "x": rng.normal(size=(N_PER_USER, DIM)).astype(np.float32),
+            "y": rng.choice(CLASSES, N_PER_USER, p=probs),
+        })
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], CLASSES)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((DIM, CLASSES), jnp.float32),
+              "b": jnp.zeros((CLASSES,), jnp.float32)}
+    return params, loss_fn, user_data
+
+
+def _engine(setup, spec):
+    params, loss_fn, user_data = setup
+    return build_host_engine(spec, params, loss_fn, user_data)
+
+
+# ------------------------------------------- (a) sweep == sequential runs
+@pytest.mark.parametrize("strategy", PAPER_STRATEGIES)
+def test_run_sweep_matches_sequential_runs(setup, strategy):
+    """Acceptance pin: run_sweep over fixed per-cell seeds reproduces E
+    separate FLEngine.run calls winner-for-winner (plus matching
+    selections / uploads / contention accounting)."""
+    specs = [ExperimentSpec(rounds=5, strategy=strategy, seed=s,
+                            batch_size=32) for s in (1, 2, 5)]
+    seq = [_engine(setup, sp).run() for sp in specs]
+    res = _engine(setup, specs[0]).run_sweep(specs)
+    assert len(res) == len(specs)
+    for e, hist in enumerate(res):
+        assert hist.winners == seq[e].winners, f"lane {e} diverged"
+        np.testing.assert_array_equal(hist.selections, seq[e].selections)
+        assert hist.uploads_total == seq[e].uploads_total
+        assert hist.collisions == seq[e].collisions
+        assert hist.contention_slots == seq[e].contention_slots
+        if strategy not in ("random-centralized",):
+            # full-cohort strategies: identical training -> identical
+            # losses/priorities lane-for-lane (pre-select lanes train
+            # the full cohort inside a sweep, so only winners match)
+            np.testing.assert_allclose(hist.train_loss,
+                                       seq[e].train_loss, rtol=1e-6)
+            np.testing.assert_allclose(hist.priorities, seq[e].priorities,
+                                       rtol=1e-6)
+
+
+def test_mixed_strategy_sweep_matches_sequential(setup):
+    """One sweep carrying ALL FOUR paper strategies (fig2/fig3 shape):
+    grouped dispatch must keep every lane on its own stream."""
+    specs = [ExperimentSpec(rounds=4, strategy=s, seed=3)
+             for s in PAPER_STRATEGIES]
+    seq = [_engine(setup, sp).run() for sp in specs]
+    res = _engine(setup, specs[0]).run_sweep(specs)
+    for e, hist in enumerate(res):
+        assert hist.winners == seq[e].winners, specs[e].strategy
+
+
+def test_run_is_the_e1_special_case(setup):
+    """FLEngine.run and run_sweep([spec]) share the code path: same
+    winners, losses, priorities, final state."""
+    spec = ExperimentSpec(rounds=5, strategy="priority-distributed",
+                          seed=4)
+    h_run = _engine(setup, spec).run()
+    res = _engine(setup, spec).run_sweep([spec])
+    assert res.histories[0].winners == h_run.winners
+    assert res.histories[0].train_loss == h_run.train_loss
+    assert res.histories[0].priorities == h_run.priorities
+
+
+def test_sweep_cells_can_vary_selection_layer(setup):
+    """CW base, counter threshold, k and strategy options vary per cell
+    while lr/batch/epochs/rounds stay shared — the paper's sweep axes."""
+    base = ExperimentSpec(rounds=4, strategy="priority-distributed",
+                          seed=0)
+    sweep = SweepSpec.grid(base, cw_base=[512.0, 2048.0],
+                           counter_threshold=[0.16, 0.5])
+    res = _engine(setup, base).run_sweep(sweep)
+    assert len(res) == 4
+    assert res.labels[0] == "cw_base=512.0,counter_threshold=0.16"
+    for sp, hist in zip(sweep.specs, res):
+        seq = _engine(setup, sp).run()
+        assert hist.winners == seq.winners, sp
+
+
+# ------------------------------------------------ (b) overlap bit-parity
+def test_overlap_on_off_bit_parity(setup):
+    """The async pipeline only reorders host work relative to device
+    dispatch — every history field must match bit-for-bit."""
+    specs = [ExperimentSpec(rounds=6, strategy=s, seed=e)
+             for e, s in enumerate(PAPER_STRATEGIES)]
+    r_on = _engine(setup, specs[0]).run_sweep(specs, overlap=True)
+    r_off = _engine(setup, specs[0]).run_sweep(specs, overlap=False)
+    for a, b in zip(r_on, r_off):
+        assert a.winners == b.winners
+        assert a.train_loss == b.train_loss          # exact, not approx
+        assert a.priorities == b.priorities
+        assert a.collisions == b.collisions
+        assert a.contention_slots == b.contention_slots
+        np.testing.assert_array_equal(a.selections, b.selections)
+
+
+# ------------------------------------- (c) select_batch loop == vectorized
+def _ctxs(E, n, k=2, *, seed0=100, prio_seed=9):
+    prng = np.random.default_rng(prio_seed)
+    ctxs = []
+    for e in range(E):
+        prios = 1.0 + prng.random(n)
+        part = np.ones(n, bool)
+        part[prng.integers(0, n)] = False
+        ctxs.append(SelectionContext(
+            priorities=prios, participating=part, k_target=k,
+            rng=np.random.default_rng(seed0 + e), cw_base=1024.0,
+            counter_values=prng.random(n) / n))
+    return ctxs
+
+
+@pytest.mark.parametrize("name", ["priority-distributed",
+                                  "random-distributed",
+                                  "adaptive-biased",
+                                  "priority-centralized"])
+def test_select_batch_vectorized_matches_default_loop(name):
+    """The vectorized overrides must equal the base-class per-lane loop
+    result-for-result AND leave the lanes' rng streams in the same
+    state (so the next round still matches)."""
+    E, n = 6, 10
+    cls = type(create_strategy(name, seed=0))
+    assert supports_batched_select(cls)
+    strats_a = [create_strategy(name, seed=40 + e) for e in range(E)]
+    strats_b = [create_strategy(name, seed=40 + e) for e in range(E)]
+    for rnd in range(3):                       # streams persist across rounds
+        ctx_a = _ctxs(E, n, seed0=100 + 10 * rnd)
+        ctx_b = _ctxs(E, n, seed0=100 + 10 * rnd)
+        vec = cls.select_batch(strats_a, ctx_a)
+        loop = Strategy.select_batch(strats_b, ctx_b)
+        for e, (v, l) in enumerate(zip(vec, loop)):
+            assert v.winners == l.winners, (rnd, e)
+            assert v.collisions == l.collisions, (rnd, e)
+            assert v.elapsed_slots == l.elapsed_slots, (rnd, e)
+
+
+def test_select_grouped_mixes_strategy_classes():
+    """Grouped dispatch preserves lane order across class groups."""
+    names = ["priority-distributed", "priority-centralized",
+             "priority-distributed", "random-centralized"]
+    strats = [create_strategy(nm, seed=7 + i)
+              for i, nm in enumerate(names)]
+    ref = [create_strategy(nm, seed=7 + i)
+           for i, nm in enumerate(names)]
+    ctx_a, ctx_b = _ctxs(4, 8), _ctxs(4, 8)
+    got = select_grouped(strats, ctx_a)
+    want = [s.select(c) for s, c in zip(ref, ctx_b)]
+    for e in range(4):
+        assert got[e].winners == want[e].winners, names[e]
+
+
+def test_contend_batch_persistent_rngs_match_scalar_stream():
+    """rngs= hands contend_batch the lanes' PERSISTENT generators: two
+    successive batched rounds must equal two successive scalar contends
+    on one simulator (the stream carries over between rounds)."""
+    B, n = 4, 6
+    scalars = [CSMASimulator(seed=50 + b) for b in range(B)]
+    batch_sim = CSMASimulator(seed=0)
+    batch_rngs = [np.random.default_rng(50 + b) for b in range(B)]
+    meta = np.random.default_rng(3)
+    for rnd in range(3):
+        # tight identical backoffs force collisions -> rng consumption
+        backoffs = np.tile(meta.uniform(1e-4, 4e-4, n), (B, 1))
+        windows = np.full((B, n), 2e-3)
+        got = batch_sim.contend_batch(backoffs, windows, k_target=2,
+                                      rngs=batch_rngs)
+        for b in range(B):
+            want = scalars[b].contend(backoffs[b], windows[b], k_target=2)
+            r = got.round_result(b)
+            assert r.winners == want.winners, (rnd, b)
+            assert r.collisions == want.collisions, (rnd, b)
+
+
+def test_contend_batch_per_row_k_target():
+    rng = np.random.default_rng(0)
+    B, n = 3, 8
+    backoffs = rng.uniform(1e-4, 5e-3, (B, n))
+    windows = np.full((B, n), 5e-3)
+    ks = np.array([1, 2, 3])
+    res = CSMASimulator(seed=1).contend_batch(
+        backoffs, windows, k_target=ks, seeds=[10, 11, 12])
+    np.testing.assert_array_equal(res.n_delivered, ks)
+    for b in range(B):
+        scalar = CSMASimulator(seed=10 + b).contend(
+            backoffs[b], windows[b], k_target=int(ks[b]))
+        assert res.round_result(b).winners == scalar.winners
+
+
+# ------------------------------------------- vectorized fairness counter
+def test_sweep_counter_matches_per_lane_counters():
+    E, U, rounds = 5, 12, 40
+    thr = np.linspace(0.1, 0.5, E)
+    sweep = SweepFairnessCounter(E, U, thr)
+    lanes = [FairnessCounter(U, float(t)) for t in thr]
+    rng = np.random.default_rng(0)
+    for _ in range(rounds):
+        winners = []
+        for e in range(E):
+            k = int(rng.integers(0, 4))        # includes winnerless lanes
+            winners.append(list(rng.choice(U, size=k, replace=False)))
+        sweep.update(winners)
+        for e, w in enumerate(winners):
+            if w:
+                lanes[e].update(w, len(w))
+        vals = sweep.values()
+        masks = sweep.participating(vals)
+        for e in range(E):
+            np.testing.assert_allclose(vals[e], lanes[e].values())
+            np.testing.assert_array_equal(masks[e],
+                                          lanes[e].participating())
+
+
+# --------------------------------------------------- SweepSpec validation
+def test_sweep_spec_grid_and_validation():
+    base = ExperimentSpec(rounds=10)
+    sweep = SweepSpec.grid(base, strategy=["a", "b"], seed=[0, 1, 2])
+    assert len(sweep) == 6
+    assert sweep.labels[0] == "strategy=a,seed=0"
+    assert sweep.specs[1].seed == 1        # last axis fastest
+    with pytest.raises(ValueError, match="unknown ExperimentSpec"):
+        SweepSpec.grid(base, no_such_field=[1])
+    with pytest.raises(ValueError, match="disagree on shared field"):
+        SweepSpec(specs=[ExperimentSpec(rounds=5),
+                         ExperimentSpec(rounds=6)])
+    with pytest.raises(ValueError, match="at least one cell"):
+        SweepSpec(specs=[])
+
+
+def test_run_sweep_rejects_non_sweep_backend(setup):
+    params, loss_fn, user_data = setup
+    spec = ExperimentSpec(rounds=2)
+    engine = build_host_engine(spec, params, loss_fn, user_data,
+                               round_mode="stacked")
+    with pytest.raises(ValueError, match="sweep-capable"):
+        engine.run_sweep([spec])
+
+
+def test_sweep_result_surface(setup):
+    spec = ExperimentSpec(rounds=3, strategy="priority-distributed")
+    sweep = SweepSpec.grid(spec, seed=[0, 1])
+    res = _engine(setup, spec).run_sweep(sweep)
+    assert len(res) == 2 and list(res) == res.histories
+    assert res.by_label("seed=1") is res.histories[1]
+    assert res.wall_s > 0 and res.overlap
+
+
+def test_sweep_result_exposes_final_params(setup):
+    """Each lane's final global rides out on the result — and matches
+    the state a sequential run of that cell ends in."""
+    specs = [ExperimentSpec(rounds=4, strategy="priority-distributed",
+                            seed=s) for s in (0, 1)]
+    res = _engine(setup, specs[0]).run_sweep(specs)
+    for e, sp in enumerate(specs):
+        eng = _engine(setup, sp)
+        eng.run()
+        for a, b in zip(jax.tree.leaves(res.lane_params(e)),
+                        jax.tree.leaves(eng.global_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_run_then_run_round_continues_the_batch_streams(setup):
+    """After a delegated E=1 run(), the clients' rng streams must sit
+    where the per-round path would have left them, so continued
+    training matches one contiguous per-round run."""
+    from repro.engine import FLEngine, FLHistory, HostBackend
+    params, loss_fn, user_data = setup
+    spec = ExperimentSpec(rounds=3, strategy="priority-distributed",
+                          seed=6)
+
+    eng = _engine(setup, spec)
+    eng.run()                                      # delegated sweep path
+    cont = FLHistory(selections=np.zeros(len(user_data), np.int64))
+    eng.run_round(3, cont)                         # continue per-round
+
+    ref_backend = HostBackend(loss_fn, user_data, seed=6)
+    ref = FLEngine(spec, ref_backend, params)
+    ref_hist = FLHistory(selections=np.zeros(len(user_data), np.int64))
+    for t in range(4):                             # pure per-round run
+        ref.run_round(t, ref_hist)
+    assert cont.winners[0] == ref_hist.winners[3]
+
+
+def test_run_falls_back_when_backend_seed_mismatches(setup):
+    """run()'s E=1 sweep delegation re-derives batch streams from
+    spec.seed, so a backend seeded differently must take the per-round
+    path (whose streams live in the backend's clients)."""
+    from repro.engine import FLEngine, FLHistory, HostBackend
+    params, loss_fn, user_data = setup
+    spec = ExperimentSpec(rounds=3, strategy="priority-distributed",
+                          seed=2)
+    backend = HostBackend(loss_fn, user_data, seed=5)   # != spec.seed
+    h = FLEngine(spec, backend, params).run()
+
+    ref_backend = HostBackend(loss_fn, user_data, seed=5)
+    ref = FLEngine(spec, ref_backend, params)
+    hist = FLHistory(selections=np.zeros(len(user_data), np.int64))
+    for t in range(3):
+        ref.run_round(t, hist)
+    assert h.winners == hist.winners

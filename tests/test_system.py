@@ -4,9 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FLConfig, FLExperiment
-from repro.core.federated import make_accuracy_eval
-from repro.core.selection import STRATEGIES
+from repro.engine import (ExperimentSpec, PAPER_STRATEGIES,
+                          build_host_engine, make_accuracy_eval)
 from repro.data import make_classification_dataset, partition_noniid_shards
 from repro.models.paper_models import get_paper_model
 
@@ -31,12 +30,12 @@ def fl_setup():
     return params, loss_fn, user_data, eval_fn
 
 
-@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("strategy", PAPER_STRATEGIES)
 def test_all_strategies_run_and_learn(fl_setup, strategy):
     params, loss_fn, user_data, eval_fn = fl_setup
-    cfg = FLConfig(rounds=12, strategy=strategy, seed=1)
-    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
-    hist = exp.run()
+    spec = ExperimentSpec(rounds=12, strategy=strategy, seed=1)
+    hist = build_host_engine(spec, params, loss_fn, user_data,
+                             eval_fn).run()
     assert len(hist.accuracy) == 12
     assert hist.uploads_total > 0
     # learning happened: best accuracy beats the untrained model's
@@ -49,10 +48,10 @@ def test_counter_caps_selection_share(fl_setup):
     """The paper's fairness mechanism: with the counter ON, no user's
     selection share can stay above the threshold."""
     params, loss_fn, user_data, eval_fn = fl_setup
-    cfg = FLConfig(rounds=25, strategy="priority-centralized",
-                   use_counter=True, counter_threshold=0.16, seed=0)
-    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
-    hist = exp.run()
+    spec = ExperimentSpec(rounds=25, strategy="priority-centralized",
+                          use_counter=True, counter_threshold=0.16, seed=0)
+    hist = build_host_engine(spec, params, loss_fn, user_data,
+                             eval_fn).run()
     shares = hist.selections / max(1, hist.selections.sum())
     # one in-flight round of slack (k/total), as in test_counter.py
     assert shares.max() <= 0.16 + 2 / max(1, hist.uploads_total) + 1e-9
@@ -64,10 +63,10 @@ def test_priority_without_counter_concentrates(fl_setup):
     params, loss_fn, user_data, eval_fn = fl_setup
 
     def run(use_counter, seed=5):
-        cfg = FLConfig(rounds=25, strategy="priority-centralized",
-                       use_counter=use_counter, seed=seed)
-        exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
-        return exp.run().selections
+        spec = ExperimentSpec(rounds=25, strategy="priority-centralized",
+                              use_counter=use_counter, seed=seed)
+        return build_host_engine(spec, params, loss_fn, user_data,
+                                 eval_fn).run().selections
 
     sel_no = run(False)
     sel_yes = run(True)
@@ -78,10 +77,10 @@ def test_priority_without_counter_concentrates(fl_setup):
 
 def test_round_uploads_bounded_by_k(fl_setup):
     params, loss_fn, user_data, eval_fn = fl_setup
-    cfg = FLConfig(rounds=8, k_per_round=3,
-                   strategy="priority-distributed", seed=2)
-    exp = FLExperiment(params, loss_fn, user_data, eval_fn, cfg)
-    hist = exp.run()
+    spec = ExperimentSpec(rounds=8, k_per_round=3,
+                          strategy="priority-distributed", seed=2)
+    hist = build_host_engine(spec, params, loss_fn, user_data,
+                             eval_fn).run()
     assert hist.uploads_total <= 8 * 3
 
 
