@@ -1,10 +1,31 @@
-"""Contention-layer scaling: scalar ``contend`` loop vs vectorized
-``contend_batch`` over many independent rounds and large contender
-counts (the 1k-100k regime the ROADMAP targets). Reports per-round
-microseconds and the batch speedup."""
+"""Contention-layer scaling: numpy ``contend_batch`` (the host
+reference) vs the device-resident engine (``backend="device"``,
+DESIGN.md §6) over the 1e4–1e6-contender regimes the ROADMAP targets,
+plus the legacy scalar-vs-batch comparison for continuity.
+
+The headline regime is DENSE contention (CW ~ the contender count, so
+~1 expiry per slot): that is where the related-literature scenarios
+live and where the numpy loop's per-collided-row Python redraws give
+out. Device timings are steady-state (best of 2 after a warmup call
+that pays jit compile); numpy is timed once — it has no warmup to pay.
+Delivery counts are asserted equal between the engines before any
+speedup is reported (collision counts are distributional, so they are
+recorded, not asserted).
+
+Writes ``BENCH_contention.json`` at the repo root (CI uploads it).
+
+  PYTHONPATH=src python -m benchmarks.run csma                # full
+  BENCH_CSMA_SMOKE=1 ... python -m benchmarks.run csma        # CI smoke
+  python -m benchmarks.contention_bench --smoke               # ditto
+
+Smoke runs write ``BENCH_contention.smoke.json`` instead, so the
+checked-in full-grid artifact can't be clobbered under its own name.
+"""
 from __future__ import annotations
 
+import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -13,48 +34,132 @@ from repro.core.csma import CSMAConfig, CSMASimulator
 
 ROUNDS = int(os.environ.get("BENCH_CSMA_ROUNDS", "64"))
 SCALAR_CAP = int(os.environ.get("BENCH_CSMA_SCALAR_CAP", "2000"))
-MAX_N = int(os.environ.get("BENCH_CSMA_MAX_N", "10000"))
+MAX_N = int(os.environ.get("BENCH_CSMA_MAX_N", "1000000"))
+SMOKE = (os.environ.get("BENCH_CSMA_SMOKE") == "1"
+         or "--smoke" in sys.argv)
+
+#: (contenders, lanes) points for the numpy-vs-device section; 1e6
+#: runs fewer lanes to keep the numpy reference pass affordable.
+FULL_GRID = ((10_000, 64), (100_000, 64), (1_000_000, 8))
+SMOKE_GRID = ((2_000, 16),)
+K_TARGET = 8
+
+#: smoke runs write a separate file so CI's reduced grid can never
+#: clobber the checked-in full-grid numbers under the same name
+_JSON_PATH = os.path.join(
+    os.path.dirname(__file__), "..",
+    "BENCH_contention.smoke.json" if SMOKE else "BENCH_contention.json")
 
 
-def _inputs(n, rounds, seed):
+def _dense_inputs(n, lanes, seed):
+    """CW = n/2 slots => ~2 expiries/slot: the dense-contention
+    operating point (still conservative — the paper's FIXED cw_base of
+    2048 slots at 1e5 contenders would be ~50 expiries/slot)."""
     rng = np.random.default_rng(seed)
-    # CW scales with the population so slot occupancy (and hence the
-    # collision rate) stays in the operating regime instead of
-    # livelocking — a 2048-slot CW is sized for tens of users, not 1e5
-    cw = max(2048.0, 32.0 * n) * 20e-6
-    backoffs = rng.uniform(0.0, 1.0, (rounds, n)) * cw
+    cw = (n // 2) * 20e-6
+    backoffs = rng.uniform(0.0, 1.0, (lanes, n)) * cw
     windows = np.full(n, cw)
     return backoffs, windows
 
 
-def run():
-    lines = []
-    for n in (100, 1_000, 10_000, 100_000):
-        if n > MAX_N:
-            lines.append(f"csma/batch/{n},0,skipped_set_BENCH_CSMA_MAX_N")
-            continue
-        backoffs, windows = _inputs(n, ROUNDS, seed=n)
-        k = 8
+def _legacy_scalar_vs_batch(lines):
+    """PR-1 comparison: scalar ``contend`` loop vs ``contend_batch``."""
+    for n in (100, 1_000):
+        rng = np.random.default_rng(n)
+        cw = max(2048.0, 32.0 * n) * 20e-6
+        backoffs = rng.uniform(0.0, 1.0, (ROUNDS, n)) * cw
+        windows = np.full(n, cw)
         seeds = list(range(ROUNDS))
-
         t0 = time.time()
         batch = CSMASimulator(CSMAConfig(), seed=0).contend_batch(
-            backoffs, windows, k_target=k, seeds=seeds)
+            backoffs, windows, k_target=K_TARGET, seeds=seeds)
         wall_batch = time.time() - t0
-
         derived = (f"contenders={n};rounds={ROUNDS};"
                    f"collisions={int(batch.collisions.sum())}")
-        if n <= SCALAR_CAP:   # the scalar loop stops being fun beyond this
+        if n <= SCALAR_CAP:
             t0 = time.time()
             for b in range(ROUNDS):
                 sb = CSMASimulator(CSMAConfig(), seed=seeds[b]).contend(
-                    backoffs[b], windows, k_target=k)
+                    backoffs[b], windows, k_target=K_TARGET)
                 assert sb.winners == [int(u) for u in
                                       batch.winners[b][:len(sb.winners)]]
-            wall_scalar = time.time() - t0
-            derived += f";speedup_vs_scalar={wall_scalar / wall_batch:.1f}x"
+            derived += (f";speedup_vs_scalar="
+                        f"{(time.time() - t0) / wall_batch:.1f}x")
         lines.append(f"csma/batch/{n},"
                      f"{wall_batch / ROUNDS * 1e6:.0f},{derived}")
+
+
+def run():
+    import jax
+
+    lines = []
+    if not SMOKE:
+        _legacy_scalar_vs_batch(lines)
+
+    grid = SMOKE_GRID if SMOKE else FULL_GRID
+    report = {
+        "config": {"k_target": K_TARGET,
+                   "regime": "dense (CW = n/2 slots, ~2 expiries/slot)",
+                   "smoke": SMOKE,
+                   "grid": [[n, b] for n, b in grid]},
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "results": [],
+        "speedup_device_vs_numpy": {},
+        "delivery_parity": {},
+    }
+    for n, lanes in grid:
+        if n > MAX_N:
+            lines.append(f"csma/device/{n},0,skipped_set_BENCH_CSMA_MAX_N")
+            continue
+        backoffs, windows = _dense_inputs(n, lanes, seed=n)
+        cfg = CSMAConfig()
+
+        dev_sim = CSMASimulator(cfg, seed=0, backend="device")
+        t0 = time.time()
+        dev = dev_sim.contend_batch(backoffs, windows, k_target=K_TARGET)
+        first_s = time.time() - t0
+        dev_s = float("inf")
+        for _ in range(2):
+            t0 = time.time()
+            dev = dev_sim.contend_batch(backoffs, windows,
+                                        k_target=K_TARGET)
+            dev_s = min(dev_s, time.time() - t0)
+
+        t0 = time.time()
+        host = CSMASimulator(cfg, seed=0).contend_batch(
+            backoffs, windows, k_target=K_TARGET,
+            seeds=list(range(lanes)))
+        np_s = time.time() - t0
+
+        parity = bool((dev.n_delivered == host.n_delivered).all())
+        speedup = np_s / dev_s
+        report["results"].append({
+            "contenders": n, "lanes": lanes,
+            "numpy_s": round(np_s, 3),
+            "device_s": round(dev_s, 4),
+            "device_first_call_s": round(first_s, 3),
+            "numpy_rounds_per_sec": round(lanes / np_s, 2),
+            "device_rounds_per_sec": round(lanes / dev_s, 2),
+            "collisions_numpy": int(host.collisions.sum()),
+            "collisions_device": int(dev.collisions.sum()),
+        })
+        report["speedup_device_vs_numpy"][str(n)] = round(speedup, 2)
+        report["delivery_parity"][str(n)] = parity
+        lines.append(f"csma/numpy/{n},{np_s / lanes * 1e6:.0f},"
+                     f"rounds_per_sec={lanes / np_s:.2f}")
+        lines.append(f"csma/device/{n},{dev_s / lanes * 1e6:.0f},"
+                     f"rounds_per_sec={lanes / dev_s:.2f};"
+                     f"speedup_vs_numpy={speedup:.1f}x;"
+                     f"delivery_parity={parity}")
+
+    # write BEFORE asserting — a parity break must not discard numbers
+    with open(_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    lines.append(f"csma/json,0,wrote={os.path.abspath(_JSON_PATH)}")
+    bad = [n for n, ok in report["delivery_parity"].items() if not ok]
+    assert not bad, f"device vs numpy delivery counts diverged at n={bad}"
     return lines
 
 

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.priority import model_priority
+from repro.core.rngs import client_rng
 from repro.optim.sgd import sgd_update
 
 
@@ -69,7 +70,10 @@ class Client:
         self.batch_size = batch_size
         self.local_epochs = local_epochs
         self._trainer = make_local_trainer(loss_fn, lr)
-        self._rng = np.random.default_rng(seed + 1000 * uid)
+        # per-user stream spawned from the experiment seed (core.rngs):
+        # independent across users AND across experiment seeds, unlike
+        # the old `seed + 1000 * uid` rule
+        self._rng = client_rng(seed, uid)
 
     def train(self, global_params) -> Tuple:
         """Step 2: returns (local_params, mean_loss)."""

@@ -14,8 +14,20 @@ Models the 802.11-style medium the paper rides on:
   * the server closes the round after ``k_target`` deliveries (Step 5:
     the global-model broadcast doubles as the stop signal).
 
-This is physical-medium simulation, so it runs on host (numpy, seeded,
-deterministic) — see DESIGN.md §3. The learning-side math stays in JAX.
+The numpy paths (``contend`` / ``contend_batch``) are the seeded,
+bit-reproducible reference — see DESIGN.md §3.  For dense-contention
+sweeps (1e5+ contenders) ``CSMASimulator(backend="device")`` routes
+``contend_batch`` through the JAX/Pallas event-loop port in
+``repro.kernels.contention`` instead: same protocol, counter-based
+threefry collision redraws, validated *distributionally* against this
+reference (device threefry cannot replay numpy ``Generator`` streams —
+DESIGN.md §6).
+
+Horizon rule (both paths, both backends): an event — delivery or
+collision — only happens if its airtime completes by
+``max_sim_slots``; otherwise the round freezes at exactly the cap, so
+``elapsed_slots <= max_sim_slots`` always and no delivery can finish
+past the horizon.
 """
 from __future__ import annotations
 
@@ -68,12 +80,34 @@ class BatchCSMAResult:
 
 
 class CSMASimulator:
-    """Deterministic slotted CSMA/CA over one contention round."""
+    """Deterministic slotted CSMA/CA over one contention round.
+
+    ``backend="numpy"`` (default) is the bit-reproducible host
+    reference; ``backend="device"`` runs ``contend_batch`` as a jitted
+    JAX event loop (Pallas inner kernels on TPU) with counter-based
+    threefry redraws — deterministic for a given simulator seed and
+    call order, but a *different* stream family than numpy, so device
+    results are pinned distributionally, never draw-for-draw
+    (``seeds=``/``rngs=`` replay is a numpy-only contract).
+
+    ``seed`` may be an int or a ``np.random.SeedSequence`` (the engine
+    hands strategies a spawned child sequence — see ``core.rngs``).
+    """
+
+    BACKENDS = ("numpy", "device")
 
     def __init__(self, config: Optional[CSMAConfig] = None,
-                 seed: int = 0):
+                 seed: int = 0, backend: str = "numpy"):
+        if backend not in self.BACKENDS:
+            raise ValueError(f"unknown contention backend {backend!r}; "
+                             f"known: {self.BACKENDS}")
         self.config = config or CSMAConfig()
+        self.backend = backend
         self._rng = np.random.default_rng(seed)
+        if backend == "device":
+            from repro.core.rngs import entropy_u64
+            self._device_entropy = entropy_u64(seed)
+            self._device_calls = 0
 
     def contend(self, backoff_seconds: Sequence[float],
                 windows_seconds: Sequence[float],
@@ -86,6 +120,13 @@ class CSMASimulator:
         k_target: server closes the round after this many deliveries.
         participating: counter-refrain mask (Step 4); False = silent.
         """
+        if self.backend == "device":
+            batch = self.contend_batch(
+                np.asarray(backoff_seconds, np.float64)[None, :],
+                np.asarray(windows_seconds, np.float64), k_target,
+                participating=(None if participating is None else
+                               np.asarray(participating, bool)[None, :]))
+            return batch.round_result(0)
         cfg = self.config
         n = len(backoff_seconds)
         slot_s = cfg.slot_us * 1e-6
@@ -105,6 +146,11 @@ class CSMASimulator:
                and t < cfg.max_sim_slots):
             live = np.where(active)[0]
             step = int(counters[live].min())
+            if t + step + cfg.tx_slots > cfg.max_sim_slots:
+                # the event's airtime can't complete inside the horizon:
+                # freeze at exactly the cap (no delivery past it)
+                t = cfg.max_sim_slots
+                break
             t += step
             counters[live] -= step
             expiring = live[counters[live] == 0]
@@ -162,6 +208,8 @@ class CSMASimulator:
             winner-for-winner reproducible across successive batched
             rounds. This is how the sweep engine keeps each experiment
             lane's contention stream identical to a sequential run.
+            ``seeds``/``rngs`` are numpy-backend contracts: the device
+            backend raises on both (threefry cannot replay them).
         """
         cfg = self.config
         slot_s = cfg.slot_us * 1e-6
@@ -177,6 +225,21 @@ class CSMASimulator:
         else:
             active = np.broadcast_to(
                 np.asarray(participating, bool), (B, n)).copy()
+        if self.backend == "device":
+            if seeds is not None or rngs is not None:
+                raise ValueError(
+                    "seeds=/rngs= replay numpy Generator streams; the "
+                    "device backend draws counter-based threefry redraws "
+                    "instead (distributional parity only — DESIGN.md §6)")
+            from repro.kernels.contention import device_contend_batch
+            self._device_calls += 1
+            return device_contend_batch(
+                backoffs / slot_s, windows / slot_s, k_arr, active,
+                entropy=self._device_entropy,
+                call_index=self._device_calls - 1,
+                tx_slots=cfg.tx_slots,
+                max_backoff_doublings=cfg.max_backoff_doublings,
+                max_sim_slots=cfg.max_sim_slots)
         if rngs is not None:
             if seeds is not None:
                 raise ValueError("pass seeds or rngs, not both")
@@ -208,6 +271,14 @@ class CSMASimulator:
             # per-round idle countdown to the next expiry
             masked = np.where(live, counters, np.iinfo(np.int64).max)
             step = masked.min(axis=1)
+            step = np.where(running, step, 0)
+            # horizon clamp (scalar-path parity): rows whose event can't
+            # complete its airtime by the cap freeze at exactly the cap
+            overrun = running & (t + step + cfg.tx_slots
+                                 > cfg.max_sim_slots)
+            t = np.where(overrun, cfg.max_sim_slots, t)
+            running = running & ~overrun
+            live = live & running[:, None]
             step = np.where(running, step, 0)
             t += step
             counters = np.where(live, counters - step[:, None], counters)

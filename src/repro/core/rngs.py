@@ -1,0 +1,80 @@
+"""Independent RNG stream derivation for one experiment seed.
+
+One ``ExperimentSpec.seed`` has to drive several *statistically
+independent* random streams:
+
+  * the engine rng (Eq. 3 ``R ~ U(0,1)`` backoff draws, the
+    random-centralized pre-selection picks);
+  * the strategy / CSMA-simulator rng (collision redraws);
+  * each client's epoch-permutation stream (batch draws).
+
+The pre-fix code seeded the first two with the SAME value
+(``default_rng(spec.seed)`` twice), so the backoff draws and the
+collision redraws were the identical stream — every "independent"
+random quantity in a round was perfectly correlated.  Clients used the
+ad-hoc ``seed + 1000 * uid`` rule, which collides across experiments
+whose seeds differ by 1000.
+
+This module fixes both with numpy's ``SeedSequence`` spawn tree: every
+consumer derives its stream as a child of ``SeedSequence(seed)`` at a
+fixed, documented spawn path, which is the mechanism numpy provides for
+provably independent child streams.  The paths are part of the repo's
+reproducibility contract (winner-parity pins in tests/test_engine.py /
+tests/test_sweep.py are derived under these rules):
+
+    (STREAM_ENGINE,)        engine rng
+    (STREAM_STRATEGY,)      strategy / CSMASimulator rng
+    (STREAM_CLIENT, uid)    client ``uid``'s batch stream
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: spawn-path domains under one experiment seed (order is part of the
+#: reproducibility contract — never renumber).
+STREAM_ENGINE = 0
+STREAM_STRATEGY = 1
+STREAM_CLIENT = 2
+
+
+def child_seq(seed, *path: int) -> np.random.SeedSequence:
+    """The ``SeedSequence`` child of ``seed`` at spawn path ``path``.
+
+    ``seed`` may be an int or an existing ``SeedSequence`` (whose own
+    entropy/spawn_key are extended — deriving from a child composes).
+    """
+    if isinstance(seed, np.random.SeedSequence):
+        return np.random.SeedSequence(
+            entropy=seed.entropy,
+            spawn_key=tuple(seed.spawn_key) + tuple(path))
+    return np.random.SeedSequence(entropy=int(seed),
+                                  spawn_key=tuple(path))
+
+
+def engine_rng(seed) -> np.random.Generator:
+    """The engine's round rng (Eq. 3 backoff / centralized picks)."""
+    return np.random.default_rng(child_seq(seed, STREAM_ENGINE))
+
+
+def strategy_seed(seed) -> np.random.SeedSequence:
+    """Seed material for the strategy's CSMA simulator — independent of
+    the engine stream (``default_rng`` accepts it directly)."""
+    return child_seq(seed, STREAM_STRATEGY)
+
+
+def client_rng(seed, uid: int) -> np.random.Generator:
+    """Client ``uid``'s epoch-permutation stream.  Replaces the old
+    ``seed + 1000 * uid`` rule (which collided across nearby seeds);
+    used identically by ``Client`` and the sweep lanes so batched and
+    sequential runs stay draw-for-draw equal."""
+    return np.random.default_rng(child_seq(seed, STREAM_CLIENT, int(uid)))
+
+
+def entropy_u64(seed) -> int:
+    """A stable 64-bit integer distilled from ``seed`` (int or
+    SeedSequence) — for consumers that need a plain word, e.g. the
+    device contention engine's threefry base key."""
+    ss = seed if isinstance(seed, np.random.SeedSequence) else \
+        np.random.SeedSequence(entropy=int(seed))
+    lo, hi = ss.generate_state(2, np.uint32)
+    return int(hi) << 32 | int(lo)

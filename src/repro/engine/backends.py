@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core.client import Client, batch_epoch, sgd_epoch_scan
 from repro.core.priority import model_priority, stacked_model_priorities
+from repro.core.rngs import client_rng
 from repro.core.server import fedavg, fedavg_masked, winner_alphas
 from repro.engine.types import TrainResult
 from repro.sharding.cohort import (cohort_sharding, replicated_sharding,
@@ -501,7 +502,7 @@ class HostBackend(Backend):
         """Fresh device (glob, stack) + per-lane client rng streams.
 
         ``seeds[e]`` is lane e's experiment seed; user u's stream is
-        ``default_rng(seed + 1000 * u)`` — exactly the stream a
+        ``core.rngs.client_rng(seed, u)`` — exactly the stream a
         dedicated per-spec backend (``Client``'s seeding rule) would
         own, which is what makes sweep lanes batch-draw-identical to
         sequential runs."""
@@ -512,8 +513,8 @@ class HostBackend(Backend):
         E = len(seeds)
         bcast, _, _ = self._sweep_fns.get(E) or self._build_sweep_fns(E)
         glob, stack = bcast(init_params)
-        rngs = [[np.random.default_rng(int(s) + 1000 * u)
-                 for u in range(self.num_users)] for s in seeds]
+        rngs = [[client_rng(s, u) for u in range(self.num_users)]
+                for s in seeds]
         return SweepState(num_lanes=E, glob=glob, stack=stack, rngs=rngs)
 
     def sweep_batches(self, st: SweepState):

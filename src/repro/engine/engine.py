@@ -45,6 +45,7 @@ from typing import Callable, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.counter import FairnessCounter, SweepFairnessCounter
+from repro.core.rngs import engine_rng, strategy_seed
 from repro.core.server import winner_alphas
 from repro.engine.backends import Backend
 from repro.engine.registry import create_strategy, select_grouped
@@ -63,11 +64,16 @@ class _Lane:
     def __init__(self, spec: ExperimentSpec, num_users: int, *,
                  strategy=None, rng=None):
         self.spec = spec
+        # engine rng and strategy/simulator rng are INDEPENDENT spawn
+        # children of the spec seed (core.rngs) — seeding both with the
+        # raw seed used to hand Eq. 3 backoff draws and collision
+        # redraws the identical stream
         self.strategy = strategy if strategy is not None else \
             create_strategy(spec.strategy, csma_config=spec.csma,
-                            seed=spec.seed, **spec.strategy_options)
-        self.rng = rng if rng is not None else \
-            np.random.default_rng(spec.seed)
+                            seed=strategy_seed(spec.seed),
+                            contention_backend=spec.contention_backend,
+                            **spec.strategy_options)
+        self.rng = rng if rng is not None else engine_rng(spec.seed)
         self.history = FLHistory(
             selections=np.zeros(num_users, np.int64))
 
@@ -85,9 +91,11 @@ class FLEngine:
         self.counter = FairnessCounter(self.num_users,
                                        spec.counter_threshold)
         self.strategy = create_strategy(
-            spec.strategy, csma_config=spec.csma, seed=spec.seed,
+            spec.strategy, csma_config=spec.csma,
+            seed=strategy_seed(spec.seed),
+            contention_backend=spec.contention_backend,
             **spec.strategy_options)
-        self._rng = np.random.default_rng(spec.seed)
+        self._rng = engine_rng(spec.seed)
         self._init_params = init_params
         self.state = backend.init_state(init_params)
 

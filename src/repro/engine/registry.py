@@ -56,15 +56,19 @@ def get_strategy_class(name: str) -> Type:
             f"known: {available_strategies()}") from None
 
 
-def create_strategy(name: str, csma_config=None, seed: int = 0, **options):
+def create_strategy(name: str, csma_config=None, seed: int = 0,
+                    contention_backend: str = "numpy", **options):
     """Instantiate a registered strategy.
 
-    ``csma_config``/``seed`` configure the contention simulator of
-    distributed strategies (centralized ones ignore them); ``options``
-    are strategy-specific keyword arguments.
+    ``csma_config``/``seed``/``contention_backend`` configure the
+    contention simulator of distributed strategies (centralized ones
+    ignore them); ``seed`` may be an int or a ``np.random.SeedSequence``
+    (the engine spawns one per ``core.rngs``); ``options`` are
+    strategy-specific keyword arguments.
     """
     cls = get_strategy_class(name)
-    return cls(csma_config=csma_config, seed=seed, **options)
+    return cls(csma_config=csma_config, seed=seed,
+               contention_backend=contention_backend, **options)
 
 
 def supports_batched_select(cls: Type) -> bool:

@@ -36,6 +36,11 @@ class ExperimentSpec:
     use_counter: bool = True
     counter_threshold: float = 0.16
     csma: CSMAConfig = field(default_factory=CSMAConfig)
+    #: contention engine: "numpy" (bit-reproducible host reference) or
+    #: "device" (JAX/Pallas event loop; distributional parity —
+    #: DESIGN.md §6). Selection-layer field: sweep cells may mix them
+    #: (mixed groups fall back to per-lane contention).
+    contention_backend: str = "numpy"
     # local training (consumed by backend factories)
     lr: float = 1e-2
     batch_size: int = 32

@@ -32,6 +32,7 @@ by name:
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -45,6 +46,34 @@ PAPER_STRATEGIES = ("random-centralized", "random-distributed",
                     "priority-centralized", "priority-distributed")
 
 
+def sanitize_priorities(priorities) -> np.ndarray:
+    """NaN-priority hole fix: map NaN scores to 0.0 (with a warning).
+
+    A NaN priority used to poison selection two ways: in the batched
+    centralized top-K, ``np.where(part, -prios, np.inf)`` sorts a NaN
+    *behind* the +inf non-participants, so a refrained user could be
+    crowned; in the distributed path ``cw_base / priority`` turned the
+    NaN into a NaN contention window. Zero is the conservative reading
+    — a model whose Eq. 2 distance is undefined has shown no usable
+    progress, so it gets the lowest rank / the widest window.
+    """
+    p = np.asarray(priorities, np.float64)
+    nan = np.isnan(p)
+    if nan.any():
+        warnings.warn(
+            f"{int(nan.sum())} NaN priorities sanitized to 0.0 "
+            "(diverged local model?)", RuntimeWarning, stacklevel=2)
+        p = np.where(nan, 0.0, p)
+    return p
+
+
+def _assert_selected_participating(winners, participating, where: str):
+    """Selection invariant: a refrained (Step 4) user never uploads."""
+    bad = [int(u) for u in winners if not participating[int(u)]]
+    assert not bad, (f"{where}: selected non-participating users {bad} "
+                     f"(refrain mask violated)")
+
+
 class Strategy:
     """Base strategy: capability flags + the ``select`` contract."""
     name: str = "?"
@@ -53,8 +82,9 @@ class Strategy:
     trains_before_selection: bool = False
 
     def __init__(self, csma_config: Optional[CSMAConfig] = None,
-                 seed: int = 0):
-        del csma_config, seed  # centralized strategies need no medium
+                 seed: int = 0, contention_backend: str = "numpy"):
+        # centralized strategies need no medium
+        del csma_config, seed, contention_backend
 
     def select(self, ctx: SelectionContext) -> SelectionResult:
         raise NotImplementedError
@@ -94,16 +124,22 @@ class PriorityCentralized(Strategy):
     uses_priority = True
 
     def select(self, ctx):
+        prios = sanitize_priorities(ctx.priorities)
         cand = np.where(ctx.participating)[0]
         k = min(ctx.k_target, len(cand))
-        order = cand[np.argsort(-ctx.priorities[cand], kind="stable")]
-        return SelectionResult(winners=[int(u) for u in order[:k]])
+        order = cand[np.argsort(-prios[cand], kind="stable")]
+        winners = [int(u) for u in order[:k]]
+        _assert_selected_participating(winners, ctx.participating,
+                                       f"{self.name}.select")
+        return SelectionResult(winners=winners)
 
     @classmethod
     def select_batch(cls, strategies, ctxs):
         """One (E, U) stable argsort for all lanes.
 
-        Non-participants are scored +inf so they sort strictly last;
+        Non-participants are scored +inf so they sort strictly last
+        (priorities are NaN-sanitized first — an unsanitized NaN would
+        sort behind the +inf sentinels and crown a refrained user);
         among participants a full-row stable sort keeps the same
         index order on priority ties as the scalar path's
         candidate-subset sort (candidates are index-ordered), so the
@@ -111,7 +147,7 @@ class PriorityCentralized(Strategy):
         """
         if len({len(c.priorities) for c in ctxs}) != 1:
             return [s.select(c) for s, c in zip(strategies, ctxs)]
-        prios = np.stack([np.asarray(c.priorities, np.float64)
+        prios = np.stack([sanitize_priorities(c.priorities)
                           for c in ctxs])
         part = np.stack([np.asarray(c.participating, bool) for c in ctxs])
         scores = np.where(part, -prios, np.inf)
@@ -119,18 +155,27 @@ class PriorityCentralized(Strategy):
         out = []
         for e, ctx in enumerate(ctxs):
             k = min(ctx.k_target, int(part[e].sum()))
-            out.append(SelectionResult(
-                winners=[int(u) for u in order[e, :k]]))
+            winners = [int(u) for u in order[e, :k]]
+            _assert_selected_participating(
+                winners, part[e], f"{cls.name}.select_batch[lane {e}]")
+            out.append(SelectionResult(winners=winners))
         return out
 
 
 class _DistributedCSMA(Strategy):
-    """Shared CSMA plumbing: subclass supplies per-user CW sizes."""
+    """Shared CSMA plumbing: subclass supplies per-user CW sizes.
+
+    ``contention_backend`` picks the medium engine: ``"numpy"`` (the
+    bit-reproducible reference) or ``"device"`` (the JAX/Pallas event
+    loop in ``repro.kernels.contention``, distributionally validated —
+    for dense-contention sweeps where the host loop is the bottleneck).
+    """
     distributed = True
 
     def __init__(self, csma_config: Optional[CSMAConfig] = None,
-                 seed: int = 0):
-        self._sim = CSMASimulator(csma_config, seed=seed)
+                 seed: int = 0, contention_backend: str = "numpy"):
+        self._sim = CSMASimulator(csma_config, seed=seed,
+                                  backend=contention_backend)
 
     def _windows(self, ctx) -> np.ndarray:
         raise NotImplementedError
@@ -160,12 +205,17 @@ class _DistributedCSMA(Strategy):
         lane's medium together, redrawing collisions from each lane's
         own persistent simulator rng — so lane e's winner sequence is
         bit-identical to a sequential run of that lane (the contract
-        tests/test_sweep.py pins). Falls back to the per-lane loop
-        when the lanes' CSMA configs or user counts differ (a batch
-        shares one slot/airtime clock).
+        tests/test_sweep.py pins). Device-backed lanes route the whole
+        batch through ONE ``device_contend_batch`` program instead
+        (collision redraws from per-row threefry streams; parity is
+        distributional by contract). Falls back to the per-lane loop
+        when the lanes' CSMA configs, contention backends or user
+        counts differ (a batch shares one slot/airtime clock).
         """
-        cfg = strategies[0]._sim.config
-        if (any(s._sim.config != cfg for s in strategies)
+        lead = strategies[0]._sim
+        cfg = lead.config
+        if (any(s._sim.config != cfg or s._sim.backend != lead.backend
+                for s in strategies)
                 or len({len(c.priorities) for c in ctxs}) != 1):
             return [s.select(c) for s, c in zip(strategies, ctxs)]
         windows = np.stack([s._windows(c)
@@ -175,11 +225,15 @@ class _DistributedCSMA(Strategy):
              for c in ctxs]) * windows
         slot_s = cfg.slot_us * 1e-6
         part = np.stack([np.asarray(c.participating, bool) for c in ctxs])
-        batch = strategies[0]._sim.contend_batch(
+        # device lanes: one fused device program, redraw streams derived
+        # inside from the leader sim's (entropy, call) counter per row;
+        # numpy lanes: each row consumes its own persistent generator
+        rng_kw = ({} if lead.backend == "device"
+                  else {"rngs": [s._sim._rng for s in strategies]})
+        batch = lead.contend_batch(
             backoffs * slot_s, windows * slot_s,
             k_target=np.array([c.k_target for c in ctxs], np.int64),
-            participating=part,
-            rngs=[s._sim._rng for s in strategies])
+            participating=part, **rng_kw)
         out = []
         for e in range(len(ctxs)):
             r = batch.round_result(e)
@@ -204,7 +258,10 @@ class PriorityDistributed(_DistributedCSMA):
     uses_priority = True
 
     def _windows(self, ctx):
-        return ctx.cw_base / np.maximum(ctx.priorities, 1e-9)
+        # sanitize first: np.maximum(NaN, eps) propagates the NaN into
+        # the CW size (NaN backoffs -> quantization garbage)
+        prios = sanitize_priorities(ctx.priorities)
+        return ctx.cw_base / np.maximum(prios, 1e-9)
 
 
 @register_strategy("hetero-topk")
@@ -221,19 +278,22 @@ class HeterogeneityTopK(Strategy):
     uses_priority = True
 
     def __init__(self, csma_config=None, seed: int = 0,
-                 gamma: float = 1.0):
-        super().__init__(csma_config, seed)
+                 contention_backend: str = "numpy", gamma: float = 1.0):
+        super().__init__(csma_config, seed, contention_backend)
         self.gamma = float(gamma)
 
     def select(self, ctx):
         het = getattr(ctx, "heterogeneity", None)
-        scores = np.asarray(ctx.priorities, np.float64).copy()
+        scores = sanitize_priorities(ctx.priorities)
         if het is not None:
             scores = scores * (1.0 + self.gamma * np.asarray(het, np.float64))
         cand = np.where(ctx.participating)[0]
         k = min(ctx.k_target, len(cand))
         order = cand[np.argsort(-scores[cand], kind="stable")]
-        return SelectionResult(winners=[int(u) for u in order[:k]])
+        winners = [int(u) for u in order[:k]]
+        _assert_selected_participating(winners, ctx.participating,
+                                       f"{self.name}.select")
+        return SelectionResult(winners=winners)
 
 
 @register_strategy("adaptive-biased")
@@ -250,12 +310,13 @@ class AdaptiveBiasedCW(_DistributedCSMA):
     """
     uses_priority = True
 
-    def __init__(self, csma_config=None, seed: int = 0, eta: float = 4.0):
-        super().__init__(csma_config, seed)
+    def __init__(self, csma_config=None, seed: int = 0,
+                 contention_backend: str = "numpy", eta: float = 4.0):
+        super().__init__(csma_config, seed, contention_backend)
         self.eta = float(eta)
 
     def _windows(self, ctx):
-        prio = np.maximum(ctx.priorities, 1e-9)
+        prio = np.maximum(sanitize_priorities(ctx.priorities), 1e-9)
         shares = getattr(ctx, "counter_values", None)
         if shares is None:
             bias = np.ones_like(prio)

@@ -39,6 +39,11 @@ def _mode(use_kernel: bool, interpret):
     return False, False
 
 
+#: public alias — callers that resolve the dispatch OUTSIDE a jit (the
+#: device contention loop passes the flags in as static args) use this.
+kernel_mode = _mode
+
+
 def delta_norm(w_local, w_global, use_kernel=True, interpret=None):
     run, interp = _mode(use_kernel, interpret)
     if run:
@@ -58,3 +63,22 @@ def fused_sgd(param, grad, lr, use_kernel=True, interpret=None):
     if run:
         return fused_sgd_pallas(param, grad, lr, interpret=interp)
     return ref.fused_sgd_ref(param, grad, lr)
+
+
+def contention_event(counters, live, doublings, windows, rand,
+                     max_doublings, use_kernel=True, interpret=None):
+    """One batched CSMA medium event (see ``ref.contention_event_ref``).
+
+    Unlike the reductions above this is called from INSIDE a jitted
+    ``lax.while_loop`` (the device contention engine), so callers that
+    jit should resolve ``kernel_mode`` once outside the trace and pass
+    the flags through as static arguments.
+    """
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        from repro.kernels.contention import contention_event_pallas
+        return contention_event_pallas(counters, live, doublings,
+                                       windows, rand, max_doublings,
+                                       interpret=interp)
+    return ref.contention_event_ref(counters, live, doublings, windows,
+                                    rand, max_doublings)

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel in this package."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -31,3 +32,52 @@ def fused_sgd_ref(param, grad, lr):
     return (param.astype(jnp.float32)
             - jnp.asarray(lr, jnp.float32) * grad.astype(jnp.float32)
             ).astype(param.dtype)
+
+
+#: slot-count sentinel/clamp for the contention event op: above any
+#: sane ``max_sim_slots`` horizon, and small enough that
+#: ``t + step + tx_slots`` can never overflow int32 (2^29 + 2^29 + tx).
+CONTENTION_BIG = 1 << 29
+
+
+def contention_event_ref(counters, live, doublings, windows, rand,
+                         max_doublings: int):
+    """One slotted-CSMA medium event over B parallel rounds (the jnp
+    oracle of ``kernels.contention``'s Pallas passes).
+
+    counters:  (B, N) int32 backoff counters (slots)
+    live:      (B, N) bool — active AND still-running rows
+    doublings: (B, N) int32 binary-exponential-backoff exponents
+    windows:   (B, N) float32 CW sizes in slots
+    rand:      (B, N) float32 U(0,1) redraw material (threefry)
+
+    Returns ``(step, nexp, winner, new_counters, new_doublings,
+    new_active)``: per-row idle countdown to the next expiry, the
+    number of counters expiring in that slot, the delivering user
+    (min expiring index; N when none), and the post-event state —
+    single expiry delivers (winner deactivated), >=2 redraw from
+    doubled windows. Rows without live users return step=BIG, nexp=0.
+    """
+    counters = counters.astype(jnp.int32)
+    doublings = doublings.astype(jnp.int32)
+    big = jnp.int32(CONTENTION_BIG)
+    N = counters.shape[1]
+    masked = jnp.where(live, counters, big)
+    step = jnp.min(masked, axis=1)                         # (B,)
+    cnt2 = jnp.where(live, counters - step[:, None], counters)
+    exp = live & (cnt2 == 0)
+    nexp = jnp.sum(exp, axis=1).astype(jnp.int32)          # (B,)
+    idx = jax.lax.broadcasted_iota(jnp.int32, exp.shape, 1)
+    winner = jnp.min(jnp.where(exp, idx, jnp.int32(N)), axis=1)
+    deliver = nexp == 1
+    collide = nexp >= 2
+    new_active = live & ~(exp & deliver[:, None])
+    nd = jnp.minimum(doublings + 1, jnp.int32(max_doublings))
+    redraw = jnp.clip(
+        jnp.round(rand.astype(jnp.float32) * windows.astype(jnp.float32)
+                  * jnp.exp2(nd.astype(jnp.float32))),
+        1.0, jnp.float32(CONTENTION_BIG)).astype(jnp.int32)
+    coll_exp = exp & collide[:, None]
+    new_counters = jnp.where(coll_exp, redraw, cnt2)
+    new_doublings = jnp.where(coll_exp, nd, doublings)
+    return step, nexp, winner, new_counters, new_doublings, new_active

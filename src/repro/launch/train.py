@@ -40,7 +40,8 @@ def _spec_from_args(args) -> ExperimentSpec:
         k_per_round=args.k, rounds=args.rounds, strategy=args.strategy,
         cw_base=args.cw_base, use_counter=not args.no_counter,
         counter_threshold=args.threshold, lr=args.lr,
-        batch_size=args.batch_size, seed=args.seed)
+        batch_size=args.batch_size, seed=args.seed,
+        contention_backend=args.contention_backend)
 
 
 def build_paper_engine(args) -> FLEngine:
@@ -111,6 +112,10 @@ def main():
     ap.add_argument("--no-counter", action="store_true")
     ap.add_argument("--threshold", type=float, default=0.16)
     ap.add_argument("--cw-base", type=float, default=2048.0)
+    ap.add_argument("--contention-backend", default="numpy",
+                    choices=["numpy", "device"],
+                    help="CSMA engine: numpy reference or the "
+                         "device-resident JAX/Pallas port (DESIGN.md §6)")
     ap.add_argument("--n-train", type=int, default=6000)
     ap.add_argument("--n-test", type=int, default=1000)
     ap.add_argument("--llm-seq", type=int, default=128)

@@ -1,6 +1,24 @@
 import os
 import sys
 
+import pytest
+
 # src-layout import without install; tests must see ONE cpu device
 # (the 512-device XLA flag belongs to launch/dryrun.py exclusively).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavyweight scaling tests (1e5+ contenders); skipped "
+        "unless RUN_SLOW=1 to keep the ~5 min tier-1 budget")
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("RUN_SLOW") == "1":
+        return
+    skip = pytest.mark.skip(reason="slow: set RUN_SLOW=1 to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

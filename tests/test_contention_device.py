@@ -1,0 +1,398 @@
+"""Device-resident contention engine (DESIGN.md §6).
+
+Validation contract: the numpy event loop is the bit-reproducible
+reference; the device port must match it EXACTLY on protocol-determined
+quantities (collision-free rounds are rng-free, so winners / finish
+slots / airtime must be equal), and DISTRIBUTIONALLY wherever collision
+redraws enter (device threefry cannot replay numpy ``Generator``
+streams): winner-rank histograms, collision counts, airtime quantiles,
+plus a small-N exhaustive-seed agreement sweep. The Pallas kernel
+bodies are validated in interpret mode against the jnp oracle.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csma import CSMAConfig, CSMASimulator
+from repro.kernels import ref
+from repro.kernels.contention import contention_event_pallas
+
+SLOT_S = 20e-6
+
+
+def _sim(seed, backend, **cfg):
+    return CSMASimulator(CSMAConfig(**cfg), seed=seed, backend=backend)
+
+
+# ------------------------------------------------ kernel bodies (interpret)
+@pytest.mark.parametrize("shape", [(3, 7), (2, 300), (4, 2049)])
+def test_pallas_event_kernels_match_oracle(shape):
+    """The three Pallas passes (masked min / expiry scan / transition)
+    must equal the jnp oracle bit-for-bit, across N-block boundaries."""
+    B, N = shape
+    rng = np.random.default_rng(B * N)
+    counters = rng.integers(0, 50, (B, N)).astype(np.int32)
+    live = rng.random((B, N)) > 0.3
+    counters[0, : min(4, N)] = 5          # force an expiry tie
+    live[0, : min(4, N)] = True
+    dbl = rng.integers(0, 5, (B, N)).astype(np.int32)
+    win = rng.uniform(1.0, 1e4, (B, N)).astype(np.float32)
+    rand = rng.random((B, N)).astype(np.float32)
+    args = tuple(jnp.asarray(a) for a in
+                 (counters, live, dbl, win, rand))
+    want = ref.contention_event_ref(*args, 5)
+    got = contention_event_pallas(*args, 5, interpret=True)
+    names = ("step", "nexp", "winner", "counters", "doublings", "active")
+    for name, w, g in zip(names, want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
+                                      err_msg=name)
+
+
+def test_device_loop_runs_through_pallas_interpret():
+    """End-to-end device contention with the kernel path forced
+    (interpret mode) equals the oracle path exactly — the same
+    math, two dispatch routes."""
+    from repro.kernels.contention import device_contend_batch
+    rng = np.random.default_rng(5)
+    B, n = 3, 6
+    backoffs = np.tile(rng.uniform(5, 20, n), (B, 1))   # slots
+    windows = np.full((B, n), 500.0)
+    kw = dict(entropy=77, call_index=0, tx_slots=50,
+              max_backoff_doublings=5, max_sim_slots=2_000_000)
+    a = device_contend_batch(backoffs, windows, 3, None, **kw)
+    b = device_contend_batch(backoffs, windows, 3, None,
+                             interpret=True, **kw)
+    np.testing.assert_array_equal(a.winners, b.winners)
+    np.testing.assert_array_equal(a.finish_slots, b.finish_slots)
+    np.testing.assert_array_equal(a.collisions, b.collisions)
+    np.testing.assert_array_equal(a.elapsed_slots, b.elapsed_slots)
+
+
+# ------------------------------------------- exact protocol (rng-free part)
+def test_collision_free_rounds_match_numpy_exactly():
+    """Without collisions no rng is consumed, so the device engine must
+    reproduce the numpy reference winner-for-winner, slot-for-slot."""
+    rng = np.random.default_rng(0)
+    B, n, k = 4, 8, 3
+    backoffs = rng.uniform(1e-5, 5e-3, (B, n))
+    windows = rng.uniform(1e-4, 5e-3, (B, n))
+    part = rng.random((B, n)) > 0.3
+    dev = _sim(1, "device").contend_batch(
+        backoffs, windows, k_target=k, participating=part)
+    host = _sim(1, "numpy").contend_batch(
+        backoffs, windows, k_target=k, participating=part)
+    assert host.collisions.sum() == 0     # the premise of exactness
+    np.testing.assert_array_equal(dev.winners, host.winners)
+    np.testing.assert_array_equal(dev.finish_slots, host.finish_slots)
+    np.testing.assert_array_equal(dev.elapsed_slots, host.elapsed_slots)
+    np.testing.assert_array_equal(dev.n_delivered, host.n_delivered)
+
+
+def test_device_scalar_contend_routes_through_batch():
+    s = _sim(2, "device")
+    res = s.contend([0.01, 0.002, 0.03], [1.0] * 3, k_target=1)
+    assert res.winners == [1]
+    res2 = s.contend([0.001, 0.002, 0.003], [1.0] * 3, k_target=2,
+                     participating=[False, True, True])
+    assert set(res2.winners) == {1, 2}
+
+
+def test_device_deterministic_per_seed_and_call_order():
+    """Same sim seed + same call order => identical results; the
+    counter-based stream advances across calls."""
+    B, n = 6, 5
+    backoffs = np.full((B, n), 0.001)
+    windows = np.full((B, n), 0.01)
+    a1 = _sim(9, "device").contend_batch(backoffs, windows, k_target=n)
+    a2 = _sim(9, "device").contend_batch(backoffs, windows, k_target=n)
+    np.testing.assert_array_equal(a1.winners, a2.winners)
+    np.testing.assert_array_equal(a1.elapsed_slots, a2.elapsed_slots)
+    s = _sim(9, "device")
+    first = s.contend_batch(backoffs, windows, k_target=n)
+    second = s.contend_batch(backoffs, windows, k_target=n)
+    assert (first.winners != second.winners).any()  # stream advanced
+
+
+def test_device_rejects_numpy_stream_replay():
+    s = _sim(0, "device")
+    with pytest.raises(ValueError, match="threefry"):
+        s.contend_batch(np.ones((2, 3)), np.ones(3), 1, seeds=[1, 2])
+    with pytest.raises(ValueError, match="threefry"):
+        s.contend_batch(np.ones((2, 3)), np.ones(3), 1,
+                        rngs=[np.random.default_rng(0)] * 2)
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown contention backend"):
+        CSMASimulator(seed=0, backend="cuda")
+
+
+# ------------------------------------------------- candidate-pool validity
+def test_pool_retry_ladder_reaches_exactness():
+    """N identical backoffs with N far above the initial pool width
+    drain the candidate pool immediately (every event is an N-way
+    collision whose redraws leave the pool range) — the retry ladder
+    must still converge to the exact full-cohort loop and deliver."""
+    B, n, k = 2, 2000, 3
+    backoffs = np.full((B, n), 0.001)
+    windows = np.full((B, n), 50.0)        # seconds: huge CW, heavy tail
+    res = _sim(4, "device").contend_batch(backoffs, windows, k_target=k)
+    assert (res.n_delivered == k).all()
+    assert (res.collisions >= 1).all()
+    for b in range(B):
+        w = res.winners[b][: k]
+        assert len(set(w.tolist())) == k
+
+
+def test_pool_mode_invariants_large_n():
+    """Pool mode (N >> pool width): winners unique, participating,
+    exactly k, strictly increasing finish slots."""
+    rng = np.random.default_rng(3)
+    B, n, k = 8, 3000, 5
+    backoffs = rng.uniform(0, 1, (B, n)) * 0.02
+    windows = np.full(n, 0.02)
+    part = rng.random((B, n)) > 0.4
+    res = _sim(3, "device").contend_batch(
+        backoffs, windows, k_target=k, participating=part)
+    for b in range(B):
+        w = res.winners[b][res.winners[b] >= 0]
+        assert len(w) == len(set(w.tolist())) == k
+        assert part[b, w].all()
+        assert (np.diff(res.finish_slots[b][: k]) > 0).all()
+
+
+# --------------------------------------------------- max_sim_slots horizon
+def test_tiny_cap_freezes_at_horizon_both_backends():
+    """The max_sim_slots bugfix, pinned on both engines: an event whose
+    airtime cannot complete by the cap must not happen — the round
+    freezes at EXACTLY the cap and no delivery finishes past it."""
+    backoffs = [20e-6 * 3, 20e-6 * 10]     # expiries at slots 3 and 10
+    windows = [1.0, 1.0]
+    for backend in ("numpy", "device"):
+        # first delivery would finish at 53 > 40: nothing delivers
+        res = _sim(0, backend, tx_slots=50, max_sim_slots=40).contend(
+            backoffs, windows, k_target=2)
+        assert res.winners == [], backend
+        assert res.elapsed_slots == 40, backend
+        # first fits (finish 53 <= 60), second (finish 110) does not
+        res = _sim(0, backend, tx_slots=50, max_sim_slots=60).contend(
+            backoffs, windows, k_target=2)
+        assert res.winners == [0], backend
+        assert res.finish_slots == [53], backend
+        assert res.elapsed_slots == 60, backend
+
+
+def test_tiny_cap_batch_matches_scalar():
+    """Scalar<->batch cap parity on the numpy reference (mixed rows:
+    some capped, some complete)."""
+    cfg = dict(tx_slots=50, max_sim_slots=60)
+    backoffs = np.array([[20e-6 * 3, 20e-6 * 10],
+                         [20e-6 * 1, 20e-6 * 2],
+                         [20e-6 * 500, 20e-6 * 900]])
+    windows = np.full(2, 1.0)
+    batch = _sim(0, "numpy", **cfg).contend_batch(
+        backoffs, windows, k_target=2, seeds=[5, 6, 7])
+    for b in range(3):
+        scalar = _sim(5 + b, "numpy", **cfg).contend(
+            backoffs[b], windows, k_target=2)
+        got = batch.round_result(b)
+        assert got.winners == scalar.winners, b
+        assert got.finish_slots == scalar.finish_slots, b
+        assert got.elapsed_slots == scalar.elapsed_slots, b
+    assert batch.elapsed_slots.max() <= 60
+
+
+# ------------------------------------------------- distributional parity
+def _histogram(res_list, n):
+    h = np.zeros(n)
+    for w in res_list:
+        h[w] += 1
+    return h / max(h.sum(), 1)
+
+
+def test_winner_rank_distribution_matches_numpy():
+    """Matched CW vectors (Eq. 3 windows from a fixed priority spread):
+    the device engine must reproduce the numpy winner-rank histogram —
+    high-priority users win proportionally more on BOTH engines."""
+    n, rounds = 4, 600
+    prios = np.array([4.0, 2.0, 1.0, 0.5])
+    # CW base chosen so collisions actually happen (~7% of rounds):
+    # the redraw streams — the part threefry replaces — get exercised
+    windows = (64.0 / prios) * SLOT_S
+    hists, coll, elapsed = {}, {}, {}
+    for backend in ("numpy", "device"):
+        sim = _sim(11, backend)
+        draw = np.random.default_rng(42)    # shared backoff material
+        wins, c, e = [], 0, []
+        B = 50
+        for _ in range(rounds // B):
+            backoffs = draw.uniform(0, 1, (B, n)) * windows
+            res = sim.contend_batch(backoffs, windows, k_target=1)
+            wins.extend(int(w) for w in res.winners[:, 0] if w >= 0)
+            c += int(res.collisions.sum())
+            e.extend(res.elapsed_slots.tolist())
+        hists[backend] = _histogram(wins, n)
+        coll[backend] = c
+        elapsed[backend] = np.asarray(e)
+    tv = 0.5 * np.abs(hists["numpy"] - hists["device"]).sum()
+    assert tv < 0.08, (tv, hists)
+    # both engines must rank the users identically
+    assert (np.argsort(hists["numpy"]) == np.argsort(hists["device"])).all()
+    # collision volume in the same ballpark (binomial noise allowance)
+    hi = max(coll["numpy"], coll["device"], 1)
+    assert abs(coll["numpy"] - coll["device"]) / hi < 0.35, coll
+    # airtime quantiles within a tight band
+    for q in (0.25, 0.5, 0.9):
+        a = np.quantile(elapsed["numpy"], q)
+        b = np.quantile(elapsed["device"], q)
+        assert abs(a - b) <= 0.25 * max(a, b), (q, a, b)
+
+
+def test_small_n_exhaustive_seed_agreement():
+    """Exhaustive small-N sweep: over many simulator seeds on FORCED
+    collisions (identical backoffs), the per-seed outcome families
+    agree — both engines deliver everyone, and the aggregate winner
+    distribution is near-uniform with matching first-winner entropy."""
+    n, seeds = 3, 120
+    backoffs = np.full(n, 0.001)
+    windows = np.full(n, 0.01)
+    first = {"numpy": [], "device": []}
+    colls = {"numpy": [], "device": []}
+    for backend in first:
+        for s in range(seeds):
+            res = _sim(s, backend).contend(backoffs, windows, k_target=n)
+            assert sorted(res.winners) == list(range(n)), (backend, s)
+            first[backend].append(res.winners[0])
+            colls[backend].append(res.collisions)
+    for backend, h in ((b, _histogram(first[b], n)) for b in first):
+        assert h.min() > 0.15, (backend, h)      # no user starved
+    tv = 0.5 * np.abs(_histogram(first["numpy"], n)
+                      - _histogram(first["device"], n)).sum()
+    assert tv < 0.15, tv
+    m_np, m_dev = np.mean(colls["numpy"]), np.mean(colls["device"])
+    assert abs(m_np - m_dev) / max(m_np, m_dev) < 0.35, (m_np, m_dev)
+
+
+# ----------------------------------------------- engine-level device lanes
+def test_distributed_select_batch_routes_device_lanes():
+    """All-device lanes go through ONE device_contend_batch program;
+    winners obey the refrain mask and k_target, and the contention
+    stats land in the results."""
+    from repro.engine import SelectionContext, create_strategy
+    E, n = 4, 12
+    strats = [create_strategy("priority-distributed", seed=30 + e,
+                              contention_backend="device")
+              for e in range(E)]
+    prng = np.random.default_rng(8)
+    ctxs = []
+    for e in range(E):
+        part = np.ones(n, bool)
+        part[prng.integers(0, n)] = False
+        ctxs.append(SelectionContext(
+            priorities=1.0 + prng.random(n), participating=part,
+            k_target=2, rng=np.random.default_rng(100 + e),
+            cw_base=1024.0))
+    out = type(strats[0]).select_batch(strats, ctxs)
+    for e, sel in enumerate(out):
+        assert len(sel.winners) == 2
+        assert all(ctxs[e].participating[u] for u in sel.winners)
+        assert sel.elapsed_slots > 0
+
+
+def test_engine_run_with_device_contention(small_linear_setup):
+    params, loss_fn, user_data = small_linear_setup
+    from repro.engine import ExperimentSpec, build_host_engine
+    spec = ExperimentSpec(rounds=4, strategy="priority-distributed",
+                          seed=3, contention_backend="device")
+    hist = build_host_engine(spec, params, loss_fn, user_data).run()
+    assert hist.uploads_total > 0
+    assert hist.contention_slots > 0
+    assert all(len(w) <= spec.k_per_round for w in hist.winners)
+
+
+@pytest.fixture(scope="module")
+def small_linear_setup():
+    rng = np.random.default_rng(7)
+    user_data = []
+    for u in range(8):
+        probs = np.ones(4) / 4
+        probs[u % 4] += 1.0
+        probs /= probs.sum()
+        user_data.append({
+            "x": rng.normal(size=(64, 16)).astype(np.float32),
+            "y": rng.choice(4, 64, p=probs)})
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], 4)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((16, 4), jnp.float32),
+              "b": jnp.zeros((4,), jnp.float32)}
+    return params, loss_fn, user_data
+
+
+# --------------------------------------------------- property (hypothesis)
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # CI-only dep
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(2, 30), k=st.integers(1, 5),
+           seed=st.integers(0, 2 ** 30))
+    def test_numpy_and_device_agree_on_invariants(n, k, seed):
+        """Property: on ANY round the two engines agree on delivery
+        counts, winner-set membership under the participating mask,
+        and monotone airtime accounting."""
+        rng = np.random.default_rng(seed)
+        backoffs = rng.uniform(1e-5, 5e-3, n)
+        windows = rng.uniform(1e-4, 5e-3, n)
+        part = rng.random(n) > 0.3
+        if not part.any():
+            part[0] = True
+        res = {}
+        for backend in ("numpy", "device"):
+            r = _sim(seed, backend).contend(
+                backoffs, windows, k_target=k, participating=part)
+            assert len(r.winners) == len(set(r.winners))
+            assert all(part[w] for w in r.winners)
+            assert all(b > a for a, b in
+                       zip(r.finish_slots, r.finish_slots[1:]))
+            assert (r.finish_slots[-1] <= r.elapsed_slots
+                    if r.winners else r.elapsed_slots >= 0)
+            res[backend] = r
+        # delivery count is protocol-determined (enough contenders ->
+        # exactly k; fewer -> all of them), so it must match exactly
+        assert len(res["numpy"].winners) == len(res["device"].winners)
+        assert len(res["numpy"].winners) == min(k, int(part.sum()))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (CI-only dep)")
+    def test_numpy_and_device_agree_on_invariants():
+        pass
+
+
+@pytest.mark.slow
+def test_dense_1e5_contenders_device_matches_numpy_statistically():
+    """The ROADMAP scaling wall: 1e5 contenders, dense CW. Device and
+    numpy must agree on deliveries and land in the same collision /
+    airtime regime. Marked slow (RUN_SLOW=1) — minutes of numpy time."""
+    rng = np.random.default_rng(0)
+    B, n, k = 8, 100_000, 8
+    cw = n * SLOT_S
+    backoffs = rng.uniform(0, 1, (B, n)) * cw
+    windows = np.full(n, cw)
+    dev = _sim(0, "device").contend_batch(backoffs, windows, k_target=k)
+    host = _sim(0, "numpy").contend_batch(backoffs, windows, k_target=k,
+                                          seeds=list(range(B)))
+    np.testing.assert_array_equal(dev.n_delivered, host.n_delivered)
+    assert abs(int(dev.collisions.sum()) - int(host.collisions.sum())) \
+        <= max(20, int(0.5 * host.collisions.sum()))
+    a, b = dev.elapsed_slots.mean(), host.elapsed_slots.mean()
+    assert abs(a - b) <= 0.5 * max(a, b)

@@ -150,18 +150,22 @@ def _seed_reference_winners(init_params, loss_fn, user_data, *, rounds,
     """Faithful transcription of the pre-engine FLExperiment.run_round
     (sequential per-user training, direct rng.choice pre-selection for
     random-centralized, per-user jitted Eq. 2) — the independent oracle
-    the engine's orchestration is pinned against."""
+    the engine's orchestration is pinned against. Streams follow the
+    core.rngs spawn contract (engine / strategy / client children of
+    the experiment seed) — the correlated-stream bugfix made that
+    derivation part of the reproducibility surface."""
     from repro.core.client import Client
     from repro.core.counter import FairnessCounter
     from repro.core.priority import model_priority
+    from repro.core.rngs import engine_rng, strategy_seed
     from repro.core.server import fedavg
 
     n = len(user_data)
     clients = [Client(u, user_data[u], loss_fn, lr=1e-2, batch_size=32,
                       local_epochs=1, seed=seed) for u in range(n)]
     counter = FairnessCounter(n, threshold)
-    strat = create_strategy(strategy, seed=seed)
-    rng = np.random.default_rng(seed)
+    strat = create_strategy(strategy, seed=strategy_seed(seed))
+    rng = engine_rng(seed)
     prio_jit = jax.jit(model_priority)
     params = init_params
     winners_seq = []

@@ -59,6 +59,52 @@ def test_priority_distributed_prefers_high_priority():
     assert wins[2] > 3 * max(wins[0], wins[1]), wins
 
 
+# --------------------------------------------- NaN-priority hole (bugfix)
+def test_nan_priority_cannot_crown_refrained_user_batch():
+    """Regression: np.where(part, -prios, inf) sorted a NaN participant
+    BEHIND the +inf non-participants, so the batched top-K could select
+    a refrained user. NaN now sanitizes to 0 (lowest rank)."""
+    from repro.engine.strategies import PriorityCentralized
+    prios = np.array([1.0, np.nan, 2.0, 3.0])
+    part = np.array([True, True, True, False])   # user 3 refrains
+    ctxs = [_ctx(prios, k=3, part=part)]
+    strat = create_strategy("priority-centralized")
+    with pytest.warns(RuntimeWarning, match="NaN priorities"):
+        out = PriorityCentralized.select_batch([strat], ctxs)
+    # pre-fix winners were [2, 0, 3] — a refrained user in slot 3
+    assert out[0].winners == [2, 0, 1]
+    assert all(part[u] for u in out[0].winners)
+
+
+def test_nan_priority_ranks_last_scalar():
+    s = create_strategy("priority-centralized")
+    with pytest.warns(RuntimeWarning, match="NaN priorities"):
+        winners = s.select(_ctx([1.0, np.nan, 2.0], k=2)).winners
+    assert winners == [2, 0]        # NaN user outranked by everyone
+
+
+def test_nan_priority_does_not_poison_distributed_windows():
+    """Regression: cw_base / max(NaN, eps) propagated NaN into the CW
+    sizes; sanitized priorities give the NaN user the WIDEST window."""
+    for name in ("priority-distributed", "adaptive-biased"):
+        s = create_strategy(name, seed=0)
+        ctx = _ctx([1.0, np.nan, 2.0], k=1)
+        with pytest.warns(RuntimeWarning, match="NaN priorities"):
+            w = s._windows(ctx)
+        assert np.isfinite(w).all(), name
+        assert w[1] == w.max(), name
+        winners = s.select(_ctx([1.0, np.nan, 2.0], k=2))
+        assert len(winners) == 2 and np.isfinite(list(winners)).all()
+
+
+def test_nan_priority_hetero_topk_sanitized():
+    s = create_strategy("hetero-topk", gamma=1.0)
+    with pytest.warns(RuntimeWarning, match="NaN priorities"):
+        winners = s.select(_ctx([np.nan, 1.0, 2.0], k=2,
+                                part=[True, True, False])).winners
+    assert winners == [1, 0]
+
+
 def test_random_distributed_is_fairish():
     wins = np.zeros(4)
     for i in range(400):

@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""CI guard: the numpy reference path's winner-parity pins.
+
+Runs a fixed, fully deterministic FL scenario (small linear cohort, the
+four paper strategies, numpy contention backend) through the engine and
+compares the winner sequences against ``tests/winner_pins.json``. Every
+layer the reproducibility contract covers feeds into these sequences:
+the core.rngs stream derivation, the Eq. 3 backoff draws, the CSMA
+event loop, the refrain mask and the selection strategies.
+
+An intentional change to any of those (e.g. a new rng derivation rule)
+must regenerate the pins AND note the new pin hash in CHANGES.md — the
+check fails otherwise, so reference-stream changes can't slip through a
+PR silently:
+
+    PYTHONPATH=src python tools/check_winner_pins.py            # verify
+    PYTHONPATH=src python tools/check_winner_pins.py --update   # regen
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+PINS_PATH = os.path.join(REPO, "tests", "winner_pins.json")
+CHANGES_PATH = os.path.join(REPO, "CHANGES.md")
+
+ROUNDS = 4
+SEEDS = (0, 1)
+NUM_USERS = 8
+
+
+def _scenario_winners():
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.engine import (ExperimentSpec, PAPER_STRATEGIES,
+                              build_host_engine)
+
+    rng = np.random.default_rng(7)
+    user_data = []
+    for u in range(NUM_USERS):
+        probs = np.ones(4) / 4
+        probs[u % 4] += 1.0
+        probs /= probs.sum()
+        user_data.append({
+            "x": rng.normal(size=(64, 16)).astype(np.float32),
+            "y": rng.choice(4, 64, p=probs)})
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], 4)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((16, 4), jnp.float32),
+              "b": jnp.zeros((4,), jnp.float32)}
+    specs = [ExperimentSpec(rounds=ROUNDS, strategy=s, seed=seed)
+             for s in PAPER_STRATEGIES for seed in SEEDS]
+    engine = build_host_engine(specs[0], params, loss_fn, user_data)
+    result = engine.run_sweep(specs)
+    return {f"{sp.strategy}/seed{sp.seed}": h.winners
+            for sp, h in zip(specs, result.histories)}
+
+
+def _digest(winners: dict) -> str:
+    blob = json.dumps(winners, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+def main() -> int:
+    winners = _scenario_winners()
+    digest = _digest(winners)
+    if "--update" in sys.argv:
+        with open(PINS_PATH, "w") as f:
+            json.dump({"pin_hash": digest, "rounds": ROUNDS,
+                       "winners": winners}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"winner pins updated: pin_hash={digest}")
+        print("add this hash to the CHANGES.md entry for your PR "
+              "(the CI guard checks for it)")
+        return 0
+
+    if not os.path.exists(PINS_PATH):
+        print(f"FAIL: {PINS_PATH} missing — run with --update")
+        return 1
+    with open(PINS_PATH) as f:
+        pinned = json.load(f)
+    if pinned.get("winners") != winners:
+        print("FAIL: numpy reference winner sequences diverged from "
+              f"tests/winner_pins.json (pinned {pinned.get('pin_hash')}, "
+              f"got {digest}).")
+        print("If this change is intentional, regenerate with "
+              "tools/check_winner_pins.py --update and record the new "
+              "pin hash in CHANGES.md.")
+        return 1
+    with open(CHANGES_PATH) as f:
+        changes = f.read()
+    if pinned.get("pin_hash") not in changes:
+        print(f"FAIL: pin hash {pinned.get('pin_hash')} not mentioned in "
+              "CHANGES.md — reference-stream changes must be noted.")
+        return 1
+    print(f"OK: winner pins match (pin_hash={digest}) and are noted "
+          "in CHANGES.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
