@@ -1,10 +1,12 @@
 """Reproduce the paper's Fig. 2 / Fig. 3 strategy-comparison curves with
-ONE ``run_sweep`` call per figure.
+ONE ``run_sweep`` call per figure, plus the two channel-layer figures
+(DESIGN.md §7): final accuracy vs SNR (tx power) under PER-gated
+AirComp uploads, and convergence time vs uplink bandwidth.
 
-Each figure is a sweep: the four selection strategies x several seeds,
-stacked into a single device program — no per-strategy / per-seed
-boilerplate, no sequential engine loop. The per-strategy accuracy
-trajectories (averaged over seeds) print as small text curves.
+Each figure is a sweep: the cells (strategies x seeds, or channel
+operating points x seeds) stack into a single device program — no
+per-cell boilerplate, no sequential engine loop. Trajectories print as
+small text curves.
 
   PYTHONPATH=src python examples/paper_figures.py
   ROUNDS=150 SEEDS=3 PYTHONPATH=src python examples/paper_figures.py
@@ -20,8 +22,9 @@ import numpy as np
 
 from repro.data import (make_classification_dataset, partition_iid,
                         partition_noniid_shards)
-from repro.engine import (ExperimentSpec, PAPER_STRATEGIES, SweepSpec,
-                          build_host_engine, make_accuracy_eval)
+from repro.engine import (ChannelSpec, ExperimentSpec, PAPER_STRATEGIES,
+                          SweepSpec, build_host_engine,
+                          make_accuracy_eval)
 from repro.models.paper_models import get_paper_model
 
 ROUNDS = int(os.environ.get("ROUNDS", "60"))
@@ -75,9 +78,64 @@ def figure(name: str, iid: bool):
               f"  auc {mean.mean():.3f}")
 
 
+def figure_accuracy_vs_snr():
+    """Channel figure 1: final accuracy vs mean SNR (tx power axis),
+    PER-gated uploads + noisy AirComp merge — the wireless price of
+    each operating point."""
+    tx_axis = [5.0, 10.0, 15.0, 20.0, 25.0]
+    base = ExperimentSpec(rounds=ROUNDS, eval_every=2,
+                          merge_backend="aircomp")
+    sweep = SweepSpec.grid(
+        base,
+        channel=[ChannelSpec(tx_power_dbm=tx, aircomp_sigma=0.02)
+                 for tx in tx_axis],
+        seed=list(range(SEEDS)))
+    engine = build_engine(True, base)
+    result = engine.run_sweep(sweep)
+
+    print(f"\n== accuracy vs SNR ({len(sweep)} cells, one run_sweep, "
+          f"{result.wall_s:.1f}s) ==")
+    for i, tx in enumerate(tx_axis):
+        hists = result.histories[i * SEEDS:(i + 1) * SEEDS]
+        finals = [h.accuracy[-1] for h in hists]
+        fails = np.mean([h.upload_failures for h in hists])
+        totals = np.mean([h.uploads_total for h in hists])
+        print(f"  tx={tx:5.1f} dBm  final acc {np.mean(finals):.3f}  "
+              f"lost uploads {fails:.1f}/{totals:.0f}")
+
+
+def figure_time_vs_bandwidth():
+    """Channel figure 2: simulated wall-clock to a target accuracy vs
+    uplink bandwidth — more spectrum, shorter payload airtime, faster
+    convergence in SECONDS (round count barely moves)."""
+    bw_axis = [1e5, 3e5, 1e6, 3e6, 1e7]
+    base = ExperimentSpec(rounds=ROUNDS, eval_every=2)
+    sweep = SweepSpec.grid(
+        base,
+        channel=[ChannelSpec(bandwidth_hz=bw) for bw in bw_axis],
+        seed=list(range(SEEDS)))
+    engine = build_engine(True, base)
+    result = engine.run_sweep(sweep)
+
+    # target: 95% of the best final accuracy across cells
+    target = 0.95 * max(h.accuracy[-1] for h in result.histories)
+    print(f"\n== convergence time vs bandwidth (target acc "
+          f"{target:.3f}; {len(sweep)} cells, {result.wall_s:.1f}s) ==")
+    for i, bw in enumerate(bw_axis):
+        hists = result.histories[i * SEEDS:(i + 1) * SEEDS]
+        ttas = [h.time_to_accuracy(target) for h in hists]
+        hit = [t for t in ttas if t is not None]
+        tta = f"{np.mean(hit):9.2f}s" if hit else "   (never)"
+        total = np.mean([h.elapsed_seconds() for h in hists])
+        print(f"  B={bw:8.0f} Hz  time-to-acc {tta}  "
+              f"run total {total:8.2f}s")
+
+
 def main():
     figure("Fig. 2", iid=True)
     figure("Fig. 3", iid=False)
+    figure_accuracy_vs_snr()
+    figure_time_vs_bandwidth()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Wireless channel subsystem (DESIGN.md §7).
+
+Opt-in physical layer under the paper's MAC-layer contention: SNR /
+path-loss models per user, packet-error-gated uploads, airtime / energy
+accounting in seconds, and the AirComp over-the-air merge inputs.
+
+    from repro.channel import ChannelSpec, ChannelModel
+
+    spec = ExperimentSpec(channel=ChannelSpec(tx_power_dbm=10.0),
+                          merge_backend="aircomp")
+
+With ``ExperimentSpec.channel`` unset nothing here is imported at
+engine runtime and no channel rng stream exists — the no-channel path
+is bit-identical to the pre-channel reference (winner-pin guarded).
+"""
+from repro.channel.model import (ChannelModel, MergeContext,
+                                 packet_error_rate, path_loss_db,
+                                 shannon_rate_bps, snr_db, stack_snr,
+                                 upload_seconds)
+from repro.channel.spec import FADING_MODELS, PER_MODELS, ChannelSpec
+
+__all__ = [
+    "ChannelSpec", "ChannelModel", "MergeContext", "PER_MODELS",
+    "FADING_MODELS", "path_loss_db", "snr_db", "packet_error_rate",
+    "shannon_rate_bps", "upload_seconds", "stack_snr",
+]

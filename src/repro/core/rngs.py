@@ -25,6 +25,15 @@ tests/test_sweep.py are derived under these rules):
     (STREAM_ENGINE,)        engine rng
     (STREAM_STRATEGY,)      strategy / CSMASimulator rng
     (STREAM_CLIENT, uid)    client ``uid``'s batch stream
+    (STREAM_CHANNEL, 0)     channel layout (positions / shadowing)
+    (STREAM_CHANNEL, 1)     per-upload packet-error outcomes
+    (STREAM_CHANNEL, 2)     per-round block-fading draws
+    (STREAM_CHANNEL, 3)     AirComp receiver-noise key material
+
+The channel streams (PR 6) are spawn children like every other stream,
+so enabling a ``ChannelSpec`` consumes NO draw from the engine /
+strategy / client streams — that is what makes the channel subsystem
+provably opt-in (winners are bit-identical with the channel disabled).
 """
 from __future__ import annotations
 
@@ -35,6 +44,7 @@ import numpy as np
 STREAM_ENGINE = 0
 STREAM_STRATEGY = 1
 STREAM_CLIENT = 2
+STREAM_CHANNEL = 3
 
 
 def child_seq(seed, *path: int) -> np.random.SeedSequence:
@@ -68,6 +78,30 @@ def client_rng(seed, uid: int) -> np.random.Generator:
     used identically by ``Client`` and the sweep lanes so batched and
     sequential runs stay draw-for-draw equal."""
     return np.random.default_rng(child_seq(seed, STREAM_CLIENT, int(uid)))
+
+
+def channel_layout_rng(layout_seed) -> np.random.Generator:
+    """Geometry stream (user positions + static shadowing).  Keyed by
+    ``ChannelSpec.layout_seed``, NOT the experiment seed, so sweep cells
+    with different experiment seeds share one cell geometry (the figures
+    compare selection policies over the same radio environment)."""
+    return np.random.default_rng(child_seq(layout_seed, STREAM_CHANNEL, 0))
+
+
+def channel_outcome_rng(seed) -> np.random.Generator:
+    """Per-upload packet-error outcome stream of one experiment seed."""
+    return np.random.default_rng(child_seq(seed, STREAM_CHANNEL, 1))
+
+
+def channel_fading_rng(seed) -> np.random.Generator:
+    """Per-round block-fading stream of one experiment seed."""
+    return np.random.default_rng(child_seq(seed, STREAM_CHANNEL, 2))
+
+
+def channel_noise_entropy(seed) -> int:
+    """63-bit key material for the AirComp receiver-noise PRNG key
+    (masked so ``jax.random.PRNGKey`` accepts it as a plain int)."""
+    return entropy_u64(child_seq(seed, STREAM_CHANNEL, 3)) & (2**63 - 1)
 
 
 def entropy_u64(seed) -> int:

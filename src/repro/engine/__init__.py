@@ -18,6 +18,7 @@ contract in ``repro.engine.backends`` (plus the optional sweep contract
 HostBackend's fused path provides). DESIGN.md documents the
 architecture.
 """
+from repro.channel import ChannelModel, ChannelSpec, MergeContext
 from repro.engine.registry import (available_strategies, create_strategy,
                                    get_strategy_class, register_strategy,
                                    select_grouped, supports_batched_select)
@@ -32,6 +33,7 @@ from repro.engine.engine import FLEngine, build_host_engine
 from repro.engine.evals import make_accuracy_eval
 
 __all__ = [
+    "ChannelModel", "ChannelSpec", "MergeContext",
     "available_strategies", "create_strategy", "get_strategy_class",
     "register_strategy", "select_grouped", "supports_batched_select",
     "ExperimentSpec", "SweepSpec", "FLHistory", "SelectionContext",

@@ -61,6 +61,7 @@ from repro.core.priority import model_priority, stacked_model_priorities
 from repro.core.rngs import client_rng
 from repro.core.server import fedavg, fedavg_masked, winner_alphas
 from repro.engine.types import TrainResult
+from repro.kernels import ops as kops
 from repro.sharding.cohort import (cohort_sharding, replicated_sharding,
                                    shardable, sweep_global_sharding,
                                    sweep_sharding, sweep_shardable)
@@ -134,7 +135,12 @@ class Backend:
                     need_priority: bool) -> TrainResult:
         raise NotImplementedError
 
-    def merge(self, state, train_result: TrainResult, winners: List[int]):
+    def merge(self, state, train_result: TrainResult, winners: List[int],
+              merge_ctx=None):
+        """Eq. 1 over ``winners``. ``merge_ctx`` (a
+        ``repro.channel.MergeContext``) switches the digital FedAvg
+        reduction to the AirComp analog superposition — backends that
+        don't implement it must reject a non-None context."""
         raise NotImplementedError
 
     def global_params(self, state):
@@ -217,10 +223,12 @@ class HostBackend(Backend):
         self._xstack = None        # (U, n, ...) pre-stacked user data
         self._fused_round = None
         self._fused_merge_fn = None
+        self._fused_merge_air = None   # AirComp twin, built on first use
         self._bcast = None
         self._resident = None      # device-resident merged cohort stack
         self._resident_key = None  # the global-state object it mirrors
         self._sweep_fns = {}       # E -> jitted sweep (bcast, round, merge)
+        self._sweep_air_fns = {}   # E -> jitted AirComp sweep merge
 
     # ------------------------------------------------------------------
     def init_state(self, init_params):
@@ -323,6 +331,34 @@ class HostBackend(Backend):
                 (U, E * nb, bs) + leaf.shape[2:]),
             self._xstack)
 
+    def _build_fused_air(self):
+        """AirComp twin of ``fused_merge``: per-leaf noisy superposition
+        through ``kernels.ops.aircomp_combine`` (per-leaf receiver noise
+        from a fold_in of the round key), same donation / residency
+        contract as the digital merge. Built lazily — a fedavg-only run
+        never traces it, keeping the no-channel program untouched."""
+        uk = self._use_kernel
+
+        def fused_merge_air(trained, alphas, coeffs, sigma, key):
+            leaves, treedef = jax.tree.flatten(trained)
+            merged = []
+            for i, leaf in enumerate(leaves):
+                noise = sigma * jax.random.normal(
+                    jax.random.fold_in(key, i), leaf.shape[1:],
+                    jnp.float32)
+                merged.append(kops.aircomp_combine(
+                    leaf, alphas, coeffs, noise, use_kernel=uk))
+            new_glob = jax.tree.unflatten(treedef, merged)
+            new_stack = jax.tree.map(
+                lambda g, l: jnp.broadcast_to(g[None], l.shape),
+                new_glob, trained)
+            return new_glob, new_stack
+
+        # under a real multi-device mesh GSPMD propagates shardings from
+        # the (already sharded) trained stack; explicit specs are only
+        # load-bearing on the hot fedavg path
+        self._fused_merge_air = jax.jit(fused_merge_air, donate_argnums=0)
+
     def _train_round_fused(self, state, need_priority) -> TrainResult:
         if self._fused_round is None:
             self._build_fused()
@@ -394,14 +430,23 @@ class HostBackend(Backend):
             return jax.tree.map(lambda p: p[i], handle["stacked"])
         return handle[u]
 
-    def merge(self, state, train_result, winners):
+    def merge(self, state, train_result, winners, merge_ctx=None):
         handle = train_result.local_handle
         if isinstance(handle, dict) and "fused_stack" in handle:
             alphas = winner_alphas(
                 self.num_users, winners,
                 [self.clients[u].num_examples for u in winners])
-            new_glob, new_stack = self._fused_merge_fn(
-                handle["fused_stack"], jnp.asarray(alphas))
+            if merge_ctx is None:
+                new_glob, new_stack = self._fused_merge_fn(
+                    handle["fused_stack"], jnp.asarray(alphas))
+            else:
+                if self._fused_merge_air is None:
+                    self._build_fused_air()
+                new_glob, new_stack = self._fused_merge_air(
+                    handle["fused_stack"], jnp.asarray(alphas),
+                    jnp.asarray(merge_ctx.coeffs, jnp.float32),
+                    jnp.asarray(merge_ctx.noise_sigma, jnp.float32),
+                    merge_ctx.key)
             handle["fused_stack"] = None     # buffer donated into the stack
             self._resident = new_stack       # stays on device for round t+1
             self._resident_key = new_glob
@@ -413,7 +458,29 @@ class HostBackend(Backend):
         self._resident = self._resident_key = None
         models = [self._local(handle, u) for u in winners]
         sizes = [self.clients[u].num_examples for u in winners]
-        return fedavg(models, sizes)
+        if merge_ctx is None:
+            return fedavg(models, sizes)
+        return self._gather_merge_air(models, sizes, winners, merge_ctx)
+
+    def _gather_merge_air(self, models, sizes, winners, merge_ctx):
+        """AirComp over the gathered winner models (stacked / ragged
+        round paths) — rare, so per-call tracing is acceptable."""
+        w = np.asarray(sizes, np.float64)
+        alphas = jnp.asarray(w / w.sum(), jnp.float32)
+        coeffs = jnp.asarray(
+            np.asarray(merge_ctx.coeffs, np.float32)[
+                [int(u) for u in winners]])
+        stacked_tree = jax.tree.map(lambda *ls: jnp.stack(ls), *models)
+        leaves, treedef = jax.tree.flatten(stacked_tree)
+        merged = []
+        for i, leaf in enumerate(leaves):
+            noise = jnp.asarray(merge_ctx.noise_sigma, jnp.float32) * \
+                jax.random.normal(jax.random.fold_in(merge_ctx.key, i),
+                                  leaf.shape[1:], jnp.float32)
+            merged.append(kops.aircomp_combine(
+                leaf, alphas, coeffs, noise,
+                use_kernel=self._use_kernel))
+        return jax.tree.unflatten(treedef, merged)
 
     # -------------------------------------------------- sweep round path
     # E independent experiments as ONE device program (DESIGN.md §5):
@@ -553,13 +620,62 @@ class HostBackend(Backend):
                                 priorities=prios)
 
     def sweep_merge(self, st: SweepState, tr: SweepTrainResult,
-                    alphas: np.ndarray) -> None:
+                    alphas: np.ndarray, merge_ctx=None) -> None:
         """Dispatch the batched masked merge; the trained stack is
         donated in, and the merged (glob, stack) become the resident
-        device state for the next round."""
-        _, _, mrg = self._sweep_fns[st.num_lanes]
+        device state for the next round. ``merge_ctx`` is the sweep
+        MergeContext (stacked (E, U) coeffs / (E,) sigmas / (E, 2)
+        keys) routing every lane through the AirComp program."""
         trained, tr.trained = tr.trained, None
-        st.glob, st.stack = mrg(trained, jnp.asarray(alphas), st.glob)
+        if merge_ctx is None:
+            _, _, mrg = self._sweep_fns[st.num_lanes]
+            st.glob, st.stack = mrg(trained, jnp.asarray(alphas), st.glob)
+            return
+        mrg = (self._sweep_air_fns.get(st.num_lanes)
+               or self._build_sweep_air(st.num_lanes))
+        st.glob, st.stack = mrg(
+            trained, jnp.asarray(alphas),
+            jnp.asarray(merge_ctx.coeffs, jnp.float32),
+            jnp.asarray(merge_ctx.noise_sigma, jnp.float32),
+            merge_ctx.key, st.glob)
+
+    def _build_sweep_air(self, E: int):
+        """AirComp twin of the sweep merge: vmap the per-leaf noisy
+        superposition over the lane axis (per-lane power-control coeffs,
+        receiver sigma and noise key), with the same all-zero-alpha
+        keep-old-global guard and donation chain as the digital merge."""
+        U, uk = self.num_users, self._use_kernel
+        if (self._mesh is not None and sweep_shardable(E, U, self._mesh)):
+            uk = uk and self._mesh.size == 1
+
+        def one_lane(trained, alphas, coeffs, sigma, key):
+            leaves, treedef = jax.tree.flatten(trained)
+            merged = []
+            for i, leaf in enumerate(leaves):
+                noise = sigma * jax.random.normal(
+                    jax.random.fold_in(key, i), leaf.shape[1:],
+                    jnp.float32)
+                merged.append(kops.aircomp_combine(
+                    leaf, alphas, coeffs, noise, use_kernel=uk))
+            return jax.tree.unflatten(treedef, merged)
+
+        def sweep_merge_air(trained, alphas, coeffs, sigmas, keys,
+                            old_glob):
+            merged = jax.vmap(one_lane)(trained, alphas, coeffs,
+                                        sigmas, keys)
+            has = alphas.sum(axis=1) > 0                      # (E,)
+            glob = jax.tree.map(
+                lambda m, o: jnp.where(
+                    has.reshape((E,) + (1,) * (m.ndim - 1)), m, o),
+                merged, old_glob)
+            stack = jax.tree.map(
+                lambda g, tr: jnp.broadcast_to(g[:, None], tr.shape),
+                glob, trained)
+            return glob, stack
+
+        fn = jax.jit(sweep_merge_air, donate_argnums=(0, 5))
+        self._sweep_air_fns[E] = fn
+        return fn
 
     def sweep_global(self, st: SweepState, e: int):
         """Lane e's current global params (for eval / extraction)."""
@@ -639,7 +755,11 @@ class SiloBackend(Backend):
         return TrainResult(losses={u: float(loss_np[u]) for u in train_ids},
                            priorities=priorities, local_handle=local)
 
-    def merge(self, state, train_result, winners):
+    def merge(self, state, train_result, winners, merge_ctx=None):
+        if merge_ctx is not None:
+            raise ValueError(
+                "SiloBackend implements only the digital cross-pod "
+                "merge; merge_backend='aircomp' needs HostBackend")
         alphas = winner_alphas(self.num_users, winners,
                                [self.num_examples(u) for u in winners])
         return self._merge(state, train_result.local_handle,

@@ -44,8 +44,9 @@ from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.channel.model import ChannelModel, MergeContext
 from repro.core.counter import FairnessCounter, SweepFairnessCounter
-from repro.core.rngs import engine_rng, strategy_seed
+from repro.core.rngs import channel_noise_entropy, engine_rng, strategy_seed
 from repro.core.server import winner_alphas
 from repro.engine.backends import Backend
 from repro.engine.registry import create_strategy, select_grouped
@@ -55,14 +56,15 @@ from repro.engine.types import (FLHistory, SelectionContext, SweepResult)
 
 class _Lane:
     """Host-side state of ONE experiment cell inside a (possibly E=1)
-    sweep: spec, strategy instance, engine rng, history. The fairness
-    counter lives outside (one vectorized ``SweepFairnessCounter`` row
-    per lane) so Step 5 stays a single numpy update across lanes."""
+    sweep: spec, strategy instance, engine rng, channel model, history.
+    The fairness counter lives outside (one vectorized
+    ``SweepFairnessCounter`` row per lane) so Step 5 stays a single
+    numpy update across lanes."""
 
-    __slots__ = ("spec", "strategy", "rng", "history")
+    __slots__ = ("spec", "strategy", "rng", "channel", "history")
 
     def __init__(self, spec: ExperimentSpec, num_users: int, *,
-                 strategy=None, rng=None):
+                 strategy=None, rng=None, channel=None):
         self.spec = spec
         # engine rng and strategy/simulator rng are INDEPENDENT spawn
         # children of the spec seed (core.rngs) — seeding both with the
@@ -74,8 +76,38 @@ class _Lane:
                             contention_backend=spec.contention_backend,
                             **spec.strategy_options)
         self.rng = rng if rng is not None else engine_rng(spec.seed)
+        # channel streams are further spawn children of the spec seed,
+        # so building (or not building) the model never perturbs the
+        # engine / strategy / client streams above
+        self.channel = channel if channel is not None else (
+            ChannelModel(spec.channel, num_users, spec.seed)
+            if spec.channel is not None else None)
         self.history = FLHistory(
             selections=np.zeros(num_users, np.int64))
+
+
+def _gate_round(channel, attempted):
+    """PER-gate one lane's attempted uploads: (delivered, failures)."""
+    if channel is None or not attempted:
+        return list(attempted), 0
+    delivered = channel.gate(attempted)
+    return delivered, len(attempted) - len(delivered)
+
+
+def _record_time(history, spec, channel, elapsed_slots, attempted):
+    """Append the round's wall-clock / energy accounting: contention
+    slots at ``slot_duration_s`` plus, with a channel, the attempted
+    uploads' payload airtime and transmit energy."""
+    secs = elapsed_slots * spec.slot_seconds()
+    energy = 0.0
+    if channel is not None:
+        secs += channel.round_airtime_s(attempted)
+        energy = channel.round_energy_j(attempted)
+    history.round_seconds.append(secs)
+    history.cumulative_seconds.append(
+        (history.cumulative_seconds[-1] if history.cumulative_seconds
+         else 0.0) + secs)
+    history.round_energy_j.append(energy)
 
 
 class FLEngine:
@@ -96,6 +128,9 @@ class FLEngine:
             contention_backend=spec.contention_backend,
             **spec.strategy_options)
         self._rng = engine_rng(spec.seed)
+        self.channel = (ChannelModel(spec.channel, self.num_users,
+                                     spec.seed)
+                        if spec.channel is not None else None)
         self._init_params = init_params
         self.state = backend.init_state(init_params)
 
@@ -112,7 +147,28 @@ class FLEngine:
             cw_base=self.spec.cw_base,
             counter_values=shares,
             heterogeneity=self.backend.heterogeneity,
+            snr_db=(self.channel.snr_db if self.channel is not None
+                    else None),
             round_index=t)
+
+    @staticmethod
+    def _lane_merge_ctx(spec, channel, t: int, num_users: int):
+        """AirComp merge inputs for one lane's round-t merge, or None
+        for the digital ("fedavg") Eq. 1 — the None path is the
+        pre-channel program, untouched (bit-identity contract)."""
+        if spec.merge_backend != "aircomp":
+            return None
+        import jax
+        if channel is not None:
+            coeffs, sigma = channel.aircomp_coeffs()
+            entropy = channel.noise_entropy
+        else:
+            # channel-less aircomp lane: perfect superposition
+            coeffs = np.ones(num_users, np.float32)
+            sigma = 0.0
+            entropy = channel_noise_entropy(spec.seed)
+        key = jax.random.fold_in(jax.random.PRNGKey(entropy), t)
+        return MergeContext(coeffs=coeffs, noise_sigma=sigma, key=key)
 
     # ------------------------------------------------------------------
     def run_round(self, t: int, history: FLHistory) -> List[int]:
@@ -121,6 +177,8 @@ class FLEngine:
         ragged and partial-cohort rounds, and the sequential reference
         the sweep path is pinned against."""
         spec, strat = self.spec, self.strategy
+        if self.channel is not None:
+            self.channel.begin_round()     # block fading, pre-selection
         # upload shares: computed once, reused for the refrain mask AND
         # the SelectionContext (they used to be derived independently)
         shares = self.counter.values()
@@ -144,16 +202,29 @@ class FLEngine:
             sel = strat.select(self._context(
                 tr.priorities, participating, t, shares))
 
+        # contention winners are upload ATTEMPTS; the channel (when
+        # enabled) gates which of them actually reach the Eq. 1 merge.
+        # Counters / selections / uploads_total see the attempt (the
+        # airtime was spent either way); merge weights see deliveries.
         winners = [int(u) for u in sel.winners]
+        delivered, failures = _gate_round(self.channel, winners)
+        if delivered:
+            self.state = self.backend.merge(
+                self.state, tr, delivered,
+                merge_ctx=self._lane_merge_ctx(spec, self.channel, t,
+                                               self.num_users))
         if winners:
-            self.state = self.backend.merge(self.state, tr, winners)
             self.counter.update(winners, len(winners))
             history.uploads_total += len(winners)
             for u in winners:
                 history.selections[u] += 1
         history.winners.append(winners)
+        history.delivered.append(delivered)
+        history.upload_failures += failures
         history.collisions += sel.collisions
         history.contention_slots += sel.elapsed_slots
+        _record_time(history, spec, self.channel, sel.elapsed_slots,
+                     winners)
         if strat.uses_priority:
             # one vectorized conversion — per-element float() is O(U)
             # Python overhead at 1e4+ users
@@ -183,7 +254,7 @@ class FLEngine:
             # same device program shape, bound to THIS engine's
             # strategy/rng so repeated-attribute access stays coherent
             lane = _Lane(spec, self.num_users, strategy=self.strategy,
-                         rng=self._rng)
+                         rng=self._rng, channel=self.channel)
             result, st, counters = self._run_lanes(
                 [lane], init_state=self.state, overlap=True,
                 verbose=verbose)
@@ -254,6 +325,8 @@ class FLEngine:
         strategies, ctxs = [], []
         for e, lane in enumerate(lanes):
             spec, strat = lane.spec, lane.strategy
+            if lane.channel is not None:
+                lane.channel.begin_round()         # block fading
             mask = (masks[e] if spec.use_counter
                     else np.ones(U, bool))
             if not mask.any():                     # degenerate threshold
@@ -266,24 +339,55 @@ class FLEngine:
                 priorities=prios, participating=mask,
                 k_target=spec.k_per_round, rng=lane.rng,
                 cw_base=spec.cw_base, counter_values=shares[e],
-                heterogeneity=het, round_index=t))
+                heterogeneity=het,
+                snr_db=(lane.channel.snr_db if lane.channel is not None
+                        else None),
+                round_index=t))
         sels = select_grouped(strategies, ctxs)
         winners_all = [[int(u) for u in sel.winners] for sel in sels]
         return winners_all, sels
 
-    def _record_lane(self, lane, sel, winners, loss_row, prios_row):
+    def _record_lane(self, lane, sel, winners, delivered, failures,
+                     loss_row, prios_row):
         h = lane.history
         if winners:
             h.uploads_total += len(winners)
             for u in winners:
                 h.selections[u] += 1
         h.winners.append(winners)
+        h.delivered.append(delivered)
+        h.upload_failures += failures
         h.collisions += sel.collisions
         h.contention_slots += sel.elapsed_slots
+        _record_time(h, lane.spec, lane.channel, sel.elapsed_slots,
+                     winners)
         if (lane.strategy.uses_priority
                 and not lane.strategy.trains_before_selection):
             h.priorities.append(prios_row.tolist())
         h.train_loss.append(float(np.mean(loss_row)))
+
+    def _sweep_merge_ctx(self, lanes, t: int):
+        """Stacked (E, ...) AirComp merge inputs, or None for the
+        digital merge (``merge_backend`` is sweep-shared, so one check
+        of the lead lane decides for all)."""
+        if lanes[0].spec.merge_backend != "aircomp":
+            return None
+        import jax
+        import jax.numpy as jnp
+        U = self.num_users
+        coeffs = np.ones((len(lanes), U), np.float32)
+        sigmas = np.zeros(len(lanes), np.float32)
+        keys = []
+        for e, lane in enumerate(lanes):
+            if lane.channel is not None:
+                coeffs[e], sigmas[e] = lane.channel.aircomp_coeffs()
+                entropy = lane.channel.noise_entropy
+            else:
+                entropy = channel_noise_entropy(lane.spec.seed)
+            keys.append(jax.random.fold_in(
+                jax.random.PRNGKey(entropy), t))
+        return MergeContext(coeffs=coeffs, noise_sigma=sigmas,
+                            key=jnp.stack(keys))
 
     def _run_lanes(self, lanes, *, init_state, overlap, verbose,
                    labels=None):
@@ -322,13 +426,22 @@ class FLEngine:
             prios64 = np.asarray(tr.priorities, np.float64)  # (E, U) sync
             winners_all, sels = self._select_lanes(
                 lanes, counters, prios64, t)
+            # channel gate: merge weights are computed over the
+            # DELIVERED subset (renormalized Eq. 1 over survivors);
+            # counters and histories keep seeing the attempts
+            delivered_all, failures_all = [], []
+            for e, lane in enumerate(lanes):
+                d, f = _gate_round(lane.channel, winners_all[e])
+                delivered_all.append(d)
+                failures_all.append(f)
             alphas = np.zeros((E, U), np.float32)
-            for e, winners in enumerate(winners_all):
-                if winners:
+            for e, delivered in enumerate(delivered_all):
+                if delivered:
                     alphas[e] = winner_alphas(
-                        U, winners,
-                        [backend.num_examples(u) for u in winners])
-            backend.sweep_merge(st, tr, alphas)
+                        U, delivered,
+                        [backend.num_examples(u) for u in delivered])
+            backend.sweep_merge(st, tr, alphas,
+                                merge_ctx=self._sweep_merge_ctx(lanes, t))
             next_tr = None
             if not last:
                 if next_batched is None:
@@ -339,6 +452,7 @@ class FLEngine:
             losses64 = np.asarray(tr.losses, np.float64)
             for e, lane in enumerate(lanes):
                 self._record_lane(lane, sels[e], winners_all[e],
+                                  delivered_all[e], failures_all[e],
                                   losses64[e], prios64[e])
             if self.eval_fn is not None:
                 for e, lane in enumerate(lanes):

@@ -20,7 +20,11 @@ import itertools
 from dataclasses import dataclass, field, fields, replace
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.channel.spec import ChannelSpec
 from repro.core.csma import CSMAConfig
+
+#: Eq. 1 merge implementations the backends know how to build
+MERGE_BACKENDS = ("fedavg", "aircomp")
 
 
 @dataclass
@@ -41,17 +45,42 @@ class ExperimentSpec:
     #: DESIGN.md §6). Selection-layer field: sweep cells may mix them
     #: (mixed groups fall back to per-lane contention).
     contention_backend: str = "numpy"
+    # wireless channel layer (DESIGN.md §7) — None disables the whole
+    # subsystem (no channel rng streams exist; bit-identical to the
+    # pre-channel reference, winner-pin guarded)
+    channel: Optional[ChannelSpec] = None
+    #: Eq. 1 implementation: "fedavg" (digital, the reference) or
+    #: "aircomp" (analog over-the-air superposition; the channel spec
+    #: supplies power control + receiver noise). Sweep-shared: the E
+    #: lanes run through ONE jitted merge program.
+    merge_backend: str = "fedavg"
+    #: wall-clock seconds per contention slot for the history's
+    #: elapsed-time accounting; None = the CSMA config's slot time.
+    slot_duration_s: Optional[float] = None
     # local training (consumed by backend factories)
     lr: float = 1e-2
     batch_size: int = 32
     local_epochs: int = 1
     seed: int = 0
 
+    def __post_init__(self):
+        if self.merge_backend not in MERGE_BACKENDS:
+            raise ValueError(
+                f"unknown merge_backend {self.merge_backend!r}; "
+                f"known: {MERGE_BACKENDS}")
+
+    def slot_seconds(self) -> float:
+        """Wall-clock length of one contention slot."""
+        if self.slot_duration_s is not None:
+            return float(self.slot_duration_s)
+        return self.csma.slot_us * 1e-6
+
 
 #: ExperimentSpec fields that must agree across the cells of one sweep —
 #: ``rounds`` because the lanes advance in lockstep, the rest because
-#: they configure the ONE backend every lane shares.
-SWEEP_SHARED_FIELDS = ("rounds", "lr", "batch_size", "local_epochs")
+#: they configure the ONE backend / merge program every lane shares.
+SWEEP_SHARED_FIELDS = ("rounds", "lr", "batch_size", "local_epochs",
+                       "merge_backend")
 
 
 @dataclass

@@ -296,6 +296,43 @@ class HeterogeneityTopK(Strategy):
         return SelectionResult(winners=winners)
 
 
+@register_strategy("channel-distributed")
+class ChannelDistributed(_DistributedCSMA):
+    """Eq. 3 CW scheduling with the link quality folded into Eq. 2.
+
+    A user on a deep-faded link is a poor upload candidate even with a
+    large model-distance: its packet is likely lost (PER-gated merge)
+    and its airtime is long. Each user scales its own priority by a
+    normalized SNR-quality factor ``q = sigmoid((snr - thr) / width)``
+    raised to ``beta`` before applying Eq. 3 — W_k = N / (prio_k *
+    q_k^beta) — so good links contend harder. ``q`` is exactly the
+    channel layer's packet-delivery probability under the waterfall PER
+    model, i.e. the window shrinks with the link's delivery odds. Every
+    factor is locally measurable (own SNR, own model delta), so the
+    scheme stays distributed. Without a channel layer (``ctx.snr_db``
+    is None) this degrades to priority-distributed exactly.
+    """
+    uses_priority = True
+
+    def __init__(self, csma_config=None, seed: int = 0,
+                 contention_backend: str = "numpy", beta: float = 1.0,
+                 snr_threshold_db: float = 5.0, snr_width_db: float = 2.0):
+        super().__init__(csma_config, seed, contention_backend)
+        self.beta = float(beta)
+        self.snr_threshold_db = float(snr_threshold_db)
+        self.snr_width_db = float(snr_width_db)
+
+    def _windows(self, ctx):
+        prio = np.maximum(sanitize_priorities(ctx.priorities), 1e-9)
+        snr = getattr(ctx, "snr_db", None)
+        if snr is None:
+            return ctx.cw_base / prio
+        z = (np.asarray(snr, np.float64) - self.snr_threshold_db) \
+            / max(self.snr_width_db, 1e-9)
+        quality = 1.0 / (1.0 + np.exp(-np.clip(z, -60.0, 60.0)))
+        return ctx.cw_base / (prio * np.maximum(quality, 1e-9) ** self.beta)
+
+
 @register_strategy("adaptive-biased")
 class AdaptiveBiasedCW(_DistributedCSMA):
     """Distributed CW scheduling with an adaptive fairness bias.

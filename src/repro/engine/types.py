@@ -35,6 +35,8 @@ class SelectionContext:
     cw_base: float = 2048.0          # N in Eq. 3
     counter_values: Optional[np.ndarray] = None   # (K,) upload shares
     heterogeneity: Optional[np.ndarray] = None    # (K,) data-divergence in [0,1]
+    snr_db: Optional[np.ndarray] = None           # (K,) current-round SNR
+    #                                               (None = no channel layer)
     round_index: int = 0
 
 
@@ -91,7 +93,20 @@ class TrainResult:
 
 @dataclass
 class FLHistory:
-    """Round-by-round record of one engine run."""
+    """Round-by-round record of one engine run.
+
+    ``winners`` are the selection layer's outcomes (contention winners
+    = upload ATTEMPTS — what the fairness counters and ``selections``
+    histogram see); ``delivered`` the subset whose upload survived the
+    channel and entered the Eq. 1 merge. Without a channel layer the
+    two are identical and ``upload_failures`` stays 0.
+
+    Wall-clock accounting (the convergence-*time* figures):
+    ``round_seconds[t]`` = contention slots · ``slot_duration_s`` plus,
+    with a channel, the attempted uploads' payload airtime at each
+    user's Shannon rate; ``cumulative_seconds`` is its running sum and
+    ``round_energy_j`` the attempted uploads' transmit energy.
+    """
     accuracy: List[float] = field(default_factory=list)
     eval_round: List[int] = field(default_factory=list)
     train_loss: List[float] = field(default_factory=list)
@@ -101,6 +116,26 @@ class FLHistory:
     uploads_total: int = 0
     contention_slots: int = 0                  # total airtime+backoff slots
     winners: List[List[int]] = field(default_factory=list)  # per round
+    # channel layer (PR 6): delivery + wall-clock/energy accounting
+    delivered: List[List[int]] = field(default_factory=list)  # per round
+    upload_failures: int = 0                   # attempts lost to the channel
+    round_seconds: List[float] = field(default_factory=list)
+    cumulative_seconds: List[float] = field(default_factory=list)
+    round_energy_j: List[float] = field(default_factory=list)
+
+    def elapsed_seconds(self) -> float:
+        """Total simulated wall-clock of the run so far."""
+        return self.cumulative_seconds[-1] if self.cumulative_seconds \
+            else 0.0
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        """Simulated seconds until ``accuracy >= target`` was first
+        evaluated, or None if never reached — the convergence-time-vs-
+        bandwidth figure's y-axis."""
+        for acc, t in zip(self.accuracy, self.eval_round):
+            if acc >= target and t < len(self.cumulative_seconds):
+                return self.cumulative_seconds[t]
+        return None
 
 
 @dataclass

@@ -22,7 +22,10 @@ import os
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.kernels import ref
+from repro.kernels.aircomp import aircomp_pallas
 from repro.kernels.delta_norm import delta_norm_pallas
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.fused_sgd import fused_sgd_pallas
@@ -56,6 +59,39 @@ def fedavg_combine(stacked, alphas, use_kernel=True, interpret=None):
     if run:
         return fedavg_pallas(stacked, alphas, interpret=interp)
     return ref.fedavg_combine_ref(stacked, alphas)
+
+
+def aircomp_combine(stacked, alphas, coeffs=None, noise=0.0,
+                    use_kernel=True, interpret=None):
+    """AirComp analog over-the-air Eq. 1: noisy superposition of the
+    stacked locals under per-user power control.
+
+    stacked: (K, ...); alphas: (K,) Eq. 1 merge weights; coeffs: (K,)
+    misalignment coefficients in (0, 1] from the truncated channel
+    inversion (None = perfect inversion, all ones); noise: receiver
+    noise broadcastable to the output shape, already scaled to its
+    effective post-processing std (the caller generates it — keeping
+    the op pure lets the oracle/kernel parity tests pass exact noise
+    planes).
+
+    The receiver rescales by ``Σ alpha / Σ (alpha · coeff)`` so the
+    truncation's attenuation doesn't shrink the global model's Eq. 1
+    mass. With ``coeffs = None``/ones and ``noise = 0`` this recovers
+    ``fedavg_combine`` exactly (the scale is Σa/Σa = 1.0; property
+    test in tests/test_channel.py).
+    """
+    a = jnp.asarray(alphas, jnp.float32)
+    if coeffs is None:
+        w, scale = a, jnp.float32(1.0)
+    else:
+        w = a * jnp.asarray(coeffs, jnp.float32)
+        sa, sw = jnp.sum(a), jnp.sum(w)
+        scale = jnp.where(sw != 0.0, sa / jnp.where(sw != 0.0, sw, 1.0),
+                          jnp.float32(1.0))
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        return aircomp_pallas(stacked, w, noise, scale, interpret=interp)
+    return ref.aircomp_combine_ref(stacked, w, noise, scale)
 
 
 def fused_sgd(param, grad, lr, use_kernel=True, interpret=None):

@@ -27,6 +27,28 @@ def fedavg_combine_ref(stacked, alphas):
     return jnp.sum(terms, axis=0).astype(stacked.dtype)
 
 
+def aircomp_combine_ref(stacked, weights, noise, scale):
+    """AirComp analog over-the-air merge, jnp oracle.
+
+    stacked: (K, ...), weights: (K,) f32 effective receive weights
+    (alpha_k · misalignment c_k), noise: receiver noise broadcastable
+    to the output shape (already scaled to its post-processing std),
+    scale: scalar post-scaling (Σ alpha / Σ weight — restores the Eq. 1
+    mass the truncated power control attenuated).
+
+    Masked like ``fedavg_combine_ref``: a zero weight contributes EXACT
+    zero even for a non-finite row. With ``noise = 0`` and
+    ``weights = alphas`` (so ``scale = 1``) this is bit-for-bit
+    ``fedavg_combine_ref`` up to −0.0 → +0.0 (x + 0.0 and x · 1.0 are
+    exact in IEEE-754).
+    """
+    w = weights.astype(jnp.float32).reshape(
+        (-1,) + (1,) * (stacked.ndim - 1))
+    terms = jnp.where(w != 0.0, stacked.astype(jnp.float32) * w, 0.0)
+    acc = jnp.sum(terms, axis=0) + jnp.asarray(noise, jnp.float32)
+    return (acc * jnp.asarray(scale, jnp.float32)).astype(stacked.dtype)
+
+
 def fused_sgd_ref(param, grad, lr):
     """param - lr * grad, computed in f32, cast back."""
     return (param.astype(jnp.float32)

@@ -1,0 +1,455 @@
+"""Channel subsystem tests (DESIGN.md §7).
+
+Property tests use hypothesis when it is installed; otherwise each
+``@given`` falls back to a deterministic seeded sample sweep of the
+same strategy space, so the invariants stay exercised on minimal
+images (the CI container ships without hypothesis).
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _Ints:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class st:                                          # noqa: N801
+        integers = staticmethod(_Ints)
+        floats = staticmethod(
+            lambda min_value, max_value, **kw: _Floats(min_value,
+                                                       max_value))
+
+    def settings(**kw):
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", 20)
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            n = getattr(fn, "_max_examples", 20)
+
+            def wrapper():
+                rng = np.random.default_rng(hash(fn.__name__) % 2**32)
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strats.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+from repro.channel import (ChannelModel, ChannelSpec, MergeContext,
+                           packet_error_rate, path_loss_db,
+                           shannon_rate_bps)
+from repro.channel.model import snr_db as snr_db_law
+from repro.engine import ExperimentSpec, SweepSpec, build_host_engine
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- laws
+
+@settings(max_examples=25, deadline=None)
+@given(d1=st.floats(min_value=1.0, max_value=1e4,
+                    allow_nan=False, allow_infinity=False),
+       d2=st.floats(min_value=1.0, max_value=1e4,
+                    allow_nan=False, allow_infinity=False),
+       n=st.floats(min_value=2.0, max_value=6.0,
+                   allow_nan=False, allow_infinity=False))
+def test_path_loss_monotone_in_distance(d1, d2, n):
+    """Farther users lose strictly more power (same exponent)."""
+    spec = ChannelSpec(pl_exponent=n)
+    lo, hi = min(d1, d2), max(d1, d2)
+    pl_lo, pl_hi = path_loss_db(lo, spec), path_loss_db(hi, spec)
+    assert pl_hi >= pl_lo
+    if hi > lo * 1.001:
+        assert pl_hi > pl_lo
+
+
+@settings(max_examples=25, deadline=None)
+@given(s1=st.floats(min_value=-30.0, max_value=60.0,
+                    allow_nan=False, allow_infinity=False),
+       s2=st.floats(min_value=-30.0, max_value=60.0,
+                    allow_nan=False, allow_infinity=False),
+       thr=st.floats(min_value=-5.0, max_value=20.0,
+                     allow_nan=False, allow_infinity=False))
+def test_per_monotone_in_snr(s1, s2, thr):
+    """Better links never have a higher packet-error rate."""
+    spec = ChannelSpec(per_snr_threshold_db=thr)
+    lo, hi = min(s1, s2), max(s1, s2)
+    p_lo = packet_error_rate(lo, spec)
+    p_hi = packet_error_rate(hi, spec)
+    assert 0.0 <= p_hi <= p_lo <= 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(s1=st.floats(min_value=-30.0, max_value=60.0,
+                    allow_nan=False, allow_infinity=False),
+       s2=st.floats(min_value=-30.0, max_value=60.0,
+                    allow_nan=False, allow_infinity=False))
+def test_shannon_rate_monotone_in_snr(s1, s2):
+    spec = ChannelSpec()
+    lo, hi = min(s1, s2), max(s1, s2)
+    assert shannon_rate_bps(hi, spec) >= shannon_rate_bps(lo, spec) > 0
+
+
+def test_per_off_is_exact_zero():
+    spec = ChannelSpec(per_model="off")
+    assert (packet_error_rate(np.linspace(-50, 50, 101), spec) == 0).all()
+
+
+def test_snr_law_is_link_budget():
+    spec = ChannelSpec()
+    assert np.isclose(
+        snr_db_law(100.0, spec),
+        spec.tx_power_dbm - 100.0 - spec.noise_power_dbm)
+
+
+# ---------------------------------------------------- ChannelModel state
+
+def test_model_geometry_deterministic_and_bounded():
+    spec = ChannelSpec()
+    a = ChannelModel(spec, 64, seed=0)
+    b = ChannelModel(spec, 64, seed=1)   # different EXPERIMENT seed
+    # geometry rides layout_seed, shared across experiment seeds
+    np.testing.assert_array_equal(a.distances_m, b.distances_m)
+    np.testing.assert_array_equal(a.path_loss_db, b.path_loss_db)
+    assert (a.distances_m >= spec.min_distance_m - 1e-9).all()
+    assert (a.distances_m <= spec.cell_radius_m + 1e-9).all()
+    # a different layout is a different cell
+    c = ChannelModel(ChannelSpec(layout_seed=7), 64, seed=0)
+    assert not np.array_equal(a.distances_m, c.distances_m)
+
+
+def test_gate_delivered_subset_and_stream_position():
+    spec = ChannelSpec(per_snr_threshold_db=30.0)  # lossy cell
+    m = ChannelModel(spec, 32, seed=3)
+    attempted = list(range(10))
+    delivered = m.gate(attempted)
+    assert set(delivered) <= set(attempted)
+    assert delivered == [u for u in attempted if u in delivered]  # order
+    # same seed -> same outcomes
+    m2 = ChannelModel(spec, 32, seed=3)
+    assert m2.gate(attempted) == delivered
+    # stream-position invariance: PER=off consumes the same draw count,
+    # so the NEXT round's outcomes line up draw-for-draw
+    lossy = ChannelModel(spec, 32, seed=5)
+    clean = ChannelModel(ChannelSpec(per_model="off",
+                                     per_snr_threshold_db=30.0),
+                         32, seed=5)
+    lossy.gate(attempted)
+    assert clean.gate(attempted) == attempted      # delivers everything
+    r2 = list(range(10, 20))
+    # swap the clean model's spec for the lossy law: round-2 outcomes
+    # must match the lossy model's round 2 exactly (same stream position)
+    clean.spec = spec
+    assert clean.gate(r2) == lossy.gate(r2)
+
+
+def test_gate_empty_and_airtime_energy():
+    m = ChannelModel(ChannelSpec(), 8, seed=0)
+    assert m.gate([]) == []
+    assert m.round_airtime_s([]) == 0.0
+    air = m.round_airtime_s([0, 1, 2])
+    assert air > 0
+    assert np.isclose(m.round_energy_j([0, 1, 2]),
+                      m.spec.tx_power_w * air)
+
+
+def test_rayleigh_fading_changes_snr_per_round():
+    m = ChannelModel(ChannelSpec(fading="rayleigh"), 16, seed=0)
+    m.begin_round()
+    s1 = m.snr_db.copy()
+    m.begin_round()
+    s2 = m.snr_db.copy()
+    assert not np.array_equal(s1, s2)
+    static = ChannelModel(ChannelSpec(), 16, seed=0)
+    static.begin_round()
+    t1 = static.snr_db.copy()
+    static.begin_round()
+    np.testing.assert_array_equal(t1, static.snr_db)
+
+
+def test_aircomp_coeffs_identity_without_noise():
+    m = ChannelModel(ChannelSpec(), 16, seed=0)
+    coeffs, sigma = m.aircomp_coeffs()
+    assert coeffs.shape == (16,) and coeffs.dtype == np.float32
+    assert (coeffs <= 1.0 + 1e-6).all() and (coeffs > 0).all()
+    # floor = gnorm.min() -> everyone inverts fully: coeffs exactly 1
+    np.testing.assert_array_equal(coeffs, np.ones(16, np.float32))
+    assert sigma == 0.0
+    # a real truncation floor attenuates the weakest links only
+    m2 = ChannelModel(ChannelSpec(aircomp_gain_floor=0.5,
+                                  aircomp_sigma=0.1), 16, seed=0)
+    c2, s2 = m2.aircomp_coeffs()
+    assert (c2 < 1.0).any() and (c2 == 1.0).any()
+    assert np.isclose(s2, 0.1 / np.sqrt(0.5))
+
+
+# ------------------------------------------------------- aircomp kernel
+
+AIR_SHAPES = [(8,), (127,), (200, 7), (3, 5, 7), (4096,)]
+
+
+@pytest.mark.parametrize("shape", AIR_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_aircomp_kernel_matches_ref(shape, dtype):
+    k = 5
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (k,) + shape).astype(dtype)
+    a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(12), (k,)))
+    c = jax.random.uniform(jax.random.PRNGKey(13), (k,), minval=0.3)
+    noise = 0.05 * jax.random.normal(jax.random.PRNGKey(14), shape)
+    out_k = np.asarray(ops.aircomp_combine(x, a, c, noise,
+                                           interpret=True), np.float32)
+    w = np.asarray(a, np.float32) * np.asarray(c, np.float32)
+    scale = float(np.sum(np.asarray(a, np.float32)) / w.sum())
+    out_r = np.asarray(ref.aircomp_combine_ref(x, w, noise, scale),
+                       np.float32)
+    atol = 1e-6 if dtype == "float32" else 0.02
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=atol)
+
+
+@pytest.mark.parametrize("shape", AIR_SHAPES)
+def test_aircomp_zero_noise_unit_coeffs_is_fedavg(shape):
+    """The ISSUE's recovery pin: noise -> 0 and coeffs -> 1 make the
+    analog merge EXACTLY the digital ``fedavg_combine`` (same masked
+    multiply-accumulate, scale identically 1.0)."""
+    k = 4
+    x = jax.random.normal(jax.random.PRNGKey(21), (k,) + shape)
+    a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(22), (k,)))
+    air = np.asarray(ops.aircomp_combine(
+        x, a, jnp.ones((k,)), 0.0, interpret=True))
+    fed = np.asarray(ops.fedavg_combine(x, a, interpret=True))
+    np.testing.assert_array_equal(air, fed)
+    # masked rows stay excluded, like fedavg
+    a0 = jnp.asarray(np.where(np.arange(k) == 2, 0.0, np.asarray(a)))
+    air0 = np.asarray(ops.aircomp_combine(
+        x, a0, jnp.ones((k,)), 0.0, interpret=True))
+    fed0 = np.asarray(ops.fedavg_combine(x, a0, interpret=True))
+    np.testing.assert_array_equal(air0, fed0)
+
+
+def test_aircomp_coeffs_none_skips_power_control():
+    x = jax.random.normal(jax.random.PRNGKey(31), (3, 64))
+    a = jnp.asarray([0.2, 0.3, 0.5])
+    out = np.asarray(ops.aircomp_combine(x, a, None, 0.0, interpret=True))
+    fed = np.asarray(ops.fedavg_combine(x, a, interpret=True))
+    np.testing.assert_array_equal(out, fed)
+
+
+def test_aircomp_scale_restores_mass():
+    """Attenuated coeffs + post-scale: averaging identical models is
+    EXACTLY the model again (Σα / Σ(α·c) renormalization)."""
+    k, n = 4, 256
+    model = jax.random.normal(jax.random.PRNGKey(41), (n,))
+    x = jnp.broadcast_to(model[None], (k, n))
+    a = jnp.full((k,), 0.25)
+    c = jnp.asarray([1.0, 0.7, 0.5, 1.0])
+    out = np.asarray(ops.aircomp_combine(x, a, c, 0.0, interpret=True))
+    np.testing.assert_allclose(out, np.asarray(model), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_aircomp_vmappable():
+    E, k, n = 3, 4, 128
+    x = jax.random.normal(jax.random.PRNGKey(51), (E, k, n))
+    a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(52), (E, k)),
+                       axis=-1)
+    c = jnp.ones((E, k))
+    noise = jnp.zeros((E, n))
+    out = jax.vmap(lambda xx, aa, cc, nn: ops.aircomp_combine(
+        xx, aa, cc, nn, use_kernel=False))(x, a, c, noise)
+    for e in range(E):
+        np.testing.assert_allclose(
+            np.asarray(out[e]),
+            np.asarray(ops.fedavg_combine(x[e], a[e], use_kernel=False)),
+            rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------- engine integration
+
+U, N, D = 8, 32, 4
+
+
+def _problem():
+    rng = np.random.default_rng(0)
+    data = [{"x": rng.normal(size=(N, D)).astype(np.float32),
+             "y": rng.integers(0, 10, size=(N,))} for _ in range(U)]
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"].astype(jnp.float32)) ** 2)
+
+    init = {"w": jnp.zeros(D), "b": jnp.zeros(())}
+    return data, loss_fn, init
+
+
+def _run(spec):
+    data, loss_fn, init = _problem()
+    eng = build_host_engine(spec, init, loss_fn, data)
+    return eng.run(), eng
+
+
+BASE = dict(rounds=4, k_per_round=2, batch_size=8, seed=0)
+
+
+def test_channel_off_bit_identical_to_no_channel():
+    """The winner-pin contract: ChannelSpec(per_model='off') + fedavg is
+    the pre-channel program — winners, delivered, merged params all
+    bit-equal."""
+    h0, e0 = _run(ExperimentSpec(**BASE))
+    h1, e1 = _run(ExperimentSpec(channel=ChannelSpec(per_model="off"),
+                                 **BASE))
+    assert h1.winners == h0.winners
+    assert h1.delivered == h1.winners and h1.upload_failures == 0
+    for a, b in zip(jax.tree.leaves(e0.global_params),
+                    jax.tree.leaves(e1.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the channel still meters airtime even when it drops nothing
+    assert all(s > r for s, r in zip(h1.round_seconds, h0.round_seconds))
+
+
+def test_gated_merge_winners_superset_of_delivered():
+    spec = ExperimentSpec(
+        channel=ChannelSpec(per_snr_threshold_db=60.0), **BASE)
+    h, _ = _run(spec)
+    assert all(set(d) <= set(w)
+               for d, w in zip(h.delivered, h.winners))
+    assert h.upload_failures == sum(
+        len(w) - len(d) for w, d in zip(h.winners, h.delivered))
+    # counters / histograms metered the ATTEMPTS
+    assert h.uploads_total == sum(len(w) for w in h.winners)
+    assert h.selections.sum() == h.uploads_total
+    # an all-failure cell still selects the reference winner sequence
+    h0, _ = _run(ExperimentSpec(**BASE, rounds=4) if False
+                 else ExperimentSpec(**BASE))
+    assert h.winners[:4] == h0.winners
+
+
+def test_time_accounting_monotone_and_knob():
+    h, _ = _run(ExperimentSpec(channel=ChannelSpec(), **BASE))
+    assert len(h.round_seconds) == 4 == len(h.cumulative_seconds)
+    np.testing.assert_allclose(np.diff(h.cumulative_seconds),
+                               h.round_seconds[1:])
+    assert h.elapsed_seconds() == h.cumulative_seconds[-1]
+    assert all(e > 0 for e in h.round_energy_j)
+    # slot_duration_s scales the contention term only
+    h2, _ = _run(ExperimentSpec(channel=ChannelSpec(),
+                                slot_duration_s=1.0, **BASE))
+    assert h2.elapsed_seconds() > h.elapsed_seconds()
+
+
+def test_aircomp_noiseless_equals_fedavg_run():
+    h0, e0 = _run(ExperimentSpec(**BASE))
+    h1, e1 = _run(ExperimentSpec(merge_backend="aircomp", **BASE))
+    assert h1.winners == h0.winners
+    for a, b in zip(jax.tree.leaves(e0.global_params),
+                    jax.tree.leaves(e1.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_aircomp_noisy_deterministic_and_distinct():
+    spec = ExperimentSpec(
+        merge_backend="aircomp",
+        channel=ChannelSpec(per_model="off", aircomp_sigma=0.05),
+        **BASE)
+    _, ea = _run(spec)
+    _, eb = _run(spec)
+    for a, b in zip(jax.tree.leaves(ea.global_params),
+                    jax.tree.leaves(eb.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _, e0 = _run(ExperimentSpec(**BASE))
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(ea.global_params),
+                        jax.tree.leaves(e0.global_params)))
+
+
+def test_sweep_channel_matches_sequential():
+    """Sweep lanes with channel + aircomp are bit-faithful to
+    sequential runs of the same specs."""
+    data, loss_fn, init = _problem()
+    spec = ExperimentSpec(
+        merge_backend="aircomp",
+        channel=ChannelSpec(per_snr_threshold_db=20.0,
+                            aircomp_sigma=0.01),
+        **BASE)
+    sweep = SweepSpec.grid(spec, seed=range(3))
+    eng = build_host_engine(spec, init, loss_fn, data)
+    res = eng.run_sweep(sweep)
+    for e, cell in enumerate(sweep.specs):
+        h_seq, e_seq = _run(cell)
+        assert res[e].winners == h_seq.winners
+        assert res[e].delivered == h_seq.delivered
+        np.testing.assert_allclose(res[e].round_seconds,
+                                   h_seq.round_seconds)
+        for a, b in zip(jax.tree.leaves(res.lane_params(e)),
+                        jax.tree.leaves(e_seq.global_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_silo_backend_rejects_aircomp():
+    from repro.engine.backends import SiloBackend
+
+    class _Dummy(SiloBackend):
+        def __init__(self):     # skip silo construction
+            self.num_users = 2
+
+    with pytest.raises(ValueError, match="aircomp"):
+        _Dummy().merge(None, None, [0], merge_ctx=object())
+
+
+# ------------------------------------------- channel-aware CW strategy
+
+def test_channel_distributed_degrades_without_channel():
+    h_cd, _ = _run(ExperimentSpec(strategy="channel-distributed",
+                                  **BASE))
+    h_pd, _ = _run(ExperimentSpec(strategy="priority-distributed",
+                                  **BASE))
+    assert h_cd.winners == h_pd.winners
+
+
+def test_channel_distributed_windows_favor_good_links():
+    from repro.engine import SelectionContext, create_strategy
+    strat = create_strategy("channel-distributed", seed=0)
+    prios = np.ones(4)
+    ctx = SelectionContext(
+        priorities=prios, participating=np.ones(4, bool), k_target=2,
+        rng=np.random.default_rng(0),
+        snr_db=np.array([20.0, 5.0, -10.0, 5.0]))
+    w = strat._windows(ctx)
+    assert w[0] < w[1] and w[1] < w[2]     # better SNR -> smaller CW
+    assert np.isclose(w[1], w[3])
+    # beta sharpens the shaping
+    sharp = create_strategy("channel-distributed", seed=0, beta=3.0)
+    w3 = sharp._windows(ctx)
+    assert w3[2] / w3[0] > w[2] / w[0]
+
+
+def test_channel_distributed_end_to_end_with_channel():
+    spec = ExperimentSpec(strategy="channel-distributed",
+                          channel=ChannelSpec(fading="rayleigh"),
+                          **BASE)
+    h, _ = _run(spec)
+    assert len(h.winners) == 4
+    assert all(len(w) <= 2 for w in h.winners)

@@ -62,8 +62,36 @@ def _scenario_winners():
              for s in PAPER_STRATEGIES for seed in SEEDS]
     engine = build_host_engine(specs[0], params, loss_fn, user_data)
     result = engine.run_sweep(specs)
-    return {f"{sp.strategy}/seed{sp.seed}": h.winners
-            for sp, h in zip(specs, result.histories)}
+    winners = {f"{sp.strategy}/seed{sp.seed}": h.winners
+               for sp, h in zip(specs, result.histories)}
+
+    # channel-off twins (PR 6): ChannelSpec(per_model="off") with the
+    # default merge_backend must be the pre-channel program EXACTLY —
+    # same winners AND bit-equal merged globals. The twin sequences are
+    # pinned under .../channel-off so a regression in the opt-in design
+    # (e.g. the channel consuming a shared stream) can't slip through.
+    from repro.channel import ChannelSpec
+    off = [ExperimentSpec(rounds=ROUNDS, strategy=sp.strategy,
+                          seed=sp.seed,
+                          channel=ChannelSpec(per_model="off"))
+           for sp in specs]
+    engine_off = build_host_engine(off[0], params, loss_fn, user_data)
+    result_off = engine_off.run_sweep(off)
+    for e, sp in enumerate(specs):
+        key = f"{sp.strategy}/seed{sp.seed}"
+        winners[f"{key}/channel-off"] = result_off.histories[e].winners
+        if result_off.histories[e].winners != winners[key]:
+            raise SystemExit(
+                f"FAIL: channel-off lane {key} diverged from the "
+                "no-channel reference winners — the channel layer is "
+                "no longer bit-transparent when disabled")
+        for a, b in zip(jax.tree.leaves(result.lane_params(e)),
+                        jax.tree.leaves(result_off.lane_params(e))):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise SystemExit(
+                    f"FAIL: channel-off lane {key} merged globals are "
+                    "not bit-equal to the no-channel reference")
+    return winners
 
 
 def _digest(winners: dict) -> str:
