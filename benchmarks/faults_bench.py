@@ -1,0 +1,211 @@
+"""Fault-tolerance layer benchmark (DESIGN.md §8): the cost of the
+fault subsystem on the sweep engine, along three rungs:
+
+  * ``faults=None`` — the pre-PR-7 program (baseline);
+  * inert ``FaultSpec()`` — subsystem enabled but no fault ever fires;
+    the acceptance bar is <= 5% overhead over baseline (the guarded
+    merge twin + host bookkeeping must be near-free when idle);
+  * active faults — crashes, stragglers, corruption, outages and HARQ
+    retries all firing (informational: the price of a fault storm).
+
+Also times the ``robust_combine`` kernel against the plain
+``fedavg_combine`` it extends, and one checkpointed run to price the
+per-round snapshot.
+
+Writes ``BENCH_faults.json`` at the repo root (CI uploads it).
+
+  PYTHONPATH=src python -m benchmarks.run faults             # full
+  BENCH_FAULTS_SMOKE=1 ... python -m benchmarks.run faults   # CI smoke
+  python -m benchmarks.faults_bench --smoke                  # ditto
+
+Smoke runs write ``BENCH_faults.smoke.json`` instead, so the checked-in
+full artifact can't be clobbered under its own name. The 5% bar is
+asserted only on full runs — CI smoke boxes are too noisy to gate on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+SMOKE = (os.environ.get("BENCH_FAULTS_SMOKE") == "1"
+         or "--smoke" in sys.argv)
+ROUNDS = int(os.environ.get("BENCH_FAULTS_ROUNDS", "4" if SMOKE else "12"))
+LANES = 2 if SMOKE else 8
+REPS = 1 if SMOKE else 3
+
+_JSON_PATH = os.path.join(
+    os.path.dirname(__file__), "..",
+    "BENCH_faults.smoke.json" if SMOKE else "BENCH_faults.json")
+
+
+def _make_problem(num_users, n=64, d=16):
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    data = [{"x": rng.normal(size=(n, d)).astype(np.float32),
+             "y": rng.integers(0, 4, size=(n,))} for _ in range(num_users)]
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], 4)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((d, 4), jnp.float32),
+              "b": jnp.zeros((4,), jnp.float32)}
+    return data, loss_fn, params
+
+
+def _sweep_wall(faults, data, loss_fn, params, ckpt_dir=None):
+    """Best-of-REPS steady-state wall for one E-lane sweep under a
+    fault config: one warmup sweep pays the jit compiles (including the
+    fault-twin merge program), then the engine is reused so the number
+    prices the per-round cost, not tracing."""
+    from repro.channel import ChannelSpec
+    from repro.checkpoint import checkpoint_path
+    from repro.engine import ExperimentSpec, SweepSpec, build_host_engine
+
+    specs = [ExperimentSpec(
+        rounds=ROUNDS, k_per_round=4, batch_size=16, seed=s,
+        faults=faults, channel=ChannelSpec(per_model="waterfall"))
+        for s in range(LANES)]
+    sw = SweepSpec(specs=specs)
+    eng = build_host_engine(specs[0], params, loss_fn, data)
+    eng.run_sweep(sw)                               # warmup (compiles)
+    kw = ({"checkpoint_dir": ckpt_dir, "checkpoint_every": 1}
+          if ckpt_dir else {})
+    best, hist = float("inf"), None
+    for _ in range(REPS):
+        if ckpt_dir:                  # a stale ckpt would short-circuit
+            path = checkpoint_path(ckpt_dir)
+            if os.path.exists(path):
+                os.remove(path)
+        t0 = time.time()
+        res = eng.run_sweep(sw, **kw)
+        best = min(best, time.time() - t0)
+        hist = res.histories[0]
+    return best, hist
+
+
+def _kernel_section(report, lines):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    U, P = (100, 10_000) if SMOKE else (1_000, 100_000)
+    key = jax.random.PRNGKey(U)
+    stacked = jax.random.normal(key, (U, P), jnp.float32)
+    glob = jax.random.normal(jax.random.fold_in(key, 1), (P,), jnp.float32)
+    alphas = jnp.full((U,), 1.0 / U, jnp.float32)
+    scales = jnp.ones((U,), jnp.float32)
+
+    fed = jax.jit(lambda s, a: ops.fedavg_combine(s, a))
+    rob = jax.jit(lambda s, a, c, g: ops.robust_combine(s, a, c, g))
+
+    def best_of(fn, *args):
+        jax.block_until_ready(fn(*args))
+        b = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args))
+            b = min(b, time.time() - t0)
+        return b
+
+    fed_s = best_of(fed, stacked, alphas)
+    rob_s = best_of(rob, stacked, alphas, scales, glob)
+    ratio = rob_s / fed_s
+    report["kernel"] = {
+        "num_users": U, "params": P,
+        "fedavg_us": round(fed_s * 1e6, 1),
+        "robust_us": round(rob_s * 1e6, 1),
+        "robust_over_fedavg": round(ratio, 3),
+    }
+    lines.append(f"faults/kernel/fedavg/U{U}_P{P},{fed_s * 1e6:.1f},"
+                 "baseline")
+    lines.append(f"faults/kernel/robust/U{U}_P{P},{rob_s * 1e6:.1f},"
+                 f"ratio_vs_fedavg={ratio:.2f}x")
+
+
+def run():
+    import tempfile
+
+    import jax
+    from repro.faults import FaultSpec
+
+    lines = []
+    report = {
+        "config": {"smoke": SMOKE, "rounds": ROUNDS, "lanes": LANES},
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "e2e": {},
+    }
+    _kernel_section(report, lines)
+
+    U = 16 if SMOKE else 32
+    data, loss_fn, params = _make_problem(U)
+
+    base_s, _ = _sweep_wall(None, data, loss_fn, params)
+    inert_s, h_inert = _sweep_wall(FaultSpec(), data, loss_fn, params)
+    active = FaultSpec(crash_prob=0.1, straggle_prob=0.2,
+                       corrupt_prob=0.1, outage_prob=0.1,
+                       max_retries=2, clip_norm=2.0)
+    active_s, h_act = _sweep_wall(active, data, loss_fn, params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt_s, _ = _sweep_wall(FaultSpec(), data, loss_fn, params,
+                                ckpt_dir=d)
+
+    overhead = inert_s / base_s - 1.0
+    report["e2e"] = {
+        "lanes": LANES, "rounds": ROUNDS, "num_users": U,
+        "faults_none_s": round(base_s, 4),
+        "faults_inert_s": round(inert_s, 4),
+        "inert_overhead_pct": round(overhead * 100, 2),
+        "faults_active_s": round(active_s, 4),
+        "checkpointed_s": round(ckpt_s, 4),
+        "ckpt_per_round_ms": round(
+            (ckpt_s - inert_s) / ROUNDS * 1e3, 3),
+        "active_counters": {
+            "retries": h_act.retries,
+            "dropped_clients": h_act.dropped_clients,
+            "quarantined_updates": h_act.quarantined_updates,
+            "stale_merges": h_act.stale_merges,
+        },
+    }
+    lines.append(f"faults/e2e/none,{base_s / ROUNDS * 1e6:.0f},baseline;"
+                 f"lanes={LANES}")
+    lines.append(f"faults/e2e/inert,{inert_s / ROUNDS * 1e6:.0f},"
+                 f"overhead={overhead * 100:.1f}%")
+    lines.append(f"faults/e2e/active,{active_s / ROUNDS * 1e6:.0f},"
+                 f"retries={h_act.retries};"
+                 f"dropped={h_act.dropped_clients};"
+                 f"quarantined={h_act.quarantined_updates};"
+                 f"stale={h_act.stale_merges}")
+    lines.append(f"faults/e2e/checkpointed,{ckpt_s / ROUNDS * 1e6:.0f},"
+                 f"ckpt_per_round_ms="
+                 f"{report['e2e']['ckpt_per_round_ms']}")
+
+    # inert lanes must report zero fault activity — a non-zero counter
+    # here means the inert spec is firing faults
+    ctr = (h_inert.retries, h_inert.dropped_clients,
+           h_inert.quarantined_updates, h_inert.stale_merges)
+    assert ctr == (0, 0, 0, 0), f"inert FaultSpec fired faults: {ctr}"
+
+    # write BEFORE asserting — an overhead break must not discard numbers
+    with open(_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    lines.append(f"faults/json,0,wrote={os.path.abspath(_JSON_PATH)}")
+    if not SMOKE:
+        assert overhead <= 0.05, (
+            f"inert FaultSpec costs {overhead * 100:.1f}% over "
+            "faults=None (acceptance bar: 5%)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print("\n".join(run()))

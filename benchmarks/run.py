@@ -11,10 +11,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (channel_bench, contention_bench, fig2_iid,
-                        fig3_noniid, fig4_fairness, fig5_counter_acc,
-                        fig6_cw_size, roofline, kernel_bench, round_bench,
-                        sweep_bench)
+from benchmarks import (channel_bench, contention_bench, faults_bench,
+                        fig2_iid, fig3_noniid, fig4_fairness,
+                        fig5_counter_acc, fig6_cw_size, roofline,
+                        kernel_bench, round_bench, sweep_bench)
 
 SUITES = {
     "fig2": fig2_iid.run,
@@ -24,6 +24,7 @@ SUITES = {
     "fig6": fig6_cw_size.run,
     "csma": contention_bench.run,
     "channel": channel_bench.run,
+    "faults": faults_bench.run,
     "round": round_bench.run,
     "sweep": sweep_bench.run,
     "kernels": kernel_bench.run,

@@ -106,6 +106,26 @@ class ChannelModel:
         self._fading_gain_db = np.zeros(num_users)
         self.noise_entropy = channel_noise_entropy(seed)
 
+    # ---- checkpoint state (fault layer, DESIGN.md §8) ----------------
+    def state_dict(self) -> dict:
+        """Per-round mutable state: the outcome/fading stream positions
+        and the current fading gains. Geometry is spec-derived
+        (rebuilt identically on resume) and not stored."""
+        import copy
+        return {
+            "outcome": copy.deepcopy(self._outcome_rng.bit_generator.state),
+            "fading": (copy.deepcopy(self._fading_rng.bit_generator.state)
+                       if self._fading_rng is not None else None),
+            "fading_gain_db": self._fading_gain_db.copy(),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self._outcome_rng.bit_generator.state = state["outcome"]
+        if self._fading_rng is not None and state["fading"] is not None:
+            self._fading_rng.bit_generator.state = state["fading"]
+        self._fading_gain_db = np.asarray(state["fading_gain_db"],
+                                          np.float64).copy()
+
     # ---- per-round state ---------------------------------------------
     def begin_round(self) -> None:
         """Advance per-round channel state (block fading)."""

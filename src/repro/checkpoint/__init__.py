@@ -1,1 +1,3 @@
 from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint
+from repro.checkpoint.fl_state import (checkpoint_path, load_fl_checkpoint,
+                                       run_fingerprint, save_fl_checkpoint)

@@ -49,6 +49,10 @@ class FairnessCounter:
         return {"uploads": self.uploads.copy(),
                 "total_merged": self.total_merged}
 
+    def load_state_dict(self, state) -> None:
+        self.uploads[:] = np.asarray(state["uploads"], np.int64)
+        self.total_merged = int(state["total_merged"])
+
 
 class SweepFairnessCounter:
     """E independent fairness counters advanced with vectorized updates.
@@ -106,3 +110,11 @@ class SweepFairnessCounter:
     def lane_state(self, e: int):
         return {"uploads": self.uploads[e].copy(),
                 "total_merged": int(self.total_merged[e])}
+
+    def state_dict(self):
+        return {"uploads": self.uploads.copy(),
+                "total_merged": self.total_merged.copy()}
+
+    def load_state_dict(self, state) -> None:
+        self.uploads[:] = np.asarray(state["uploads"], np.int64)
+        self.total_merged[:] = np.asarray(state["total_merged"], np.int64)

@@ -109,6 +109,22 @@ class CSMASimulator:
             self._device_entropy = entropy_u64(seed)
             self._device_calls = 0
 
+    # ---- checkpoint state (fault layer, DESIGN.md §8) ----------------
+    def state_dict(self) -> dict:
+        """Stream position of the collision-redraw rng (+ the device
+        backend's threefry call counter) — everything a resumed run
+        needs to replay the remaining contention draws bit-identically."""
+        import copy
+        state = {"rng": copy.deepcopy(self._rng.bit_generator.state)}
+        if self.backend == "device":
+            state["device_calls"] = self._device_calls
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        self._rng.bit_generator.state = state["rng"]
+        if self.backend == "device" and "device_calls" in state:
+            self._device_calls = int(state["device_calls"])
+
     def contend(self, backoff_seconds: Sequence[float],
                 windows_seconds: Sequence[float],
                 k_target: int,

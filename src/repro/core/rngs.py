@@ -29,11 +29,19 @@ tests/test_sweep.py are derived under these rules):
     (STREAM_CHANNEL, 1)     per-upload packet-error outcomes
     (STREAM_CHANNEL, 2)     per-round block-fading draws
     (STREAM_CHANNEL, 3)     AirComp receiver-noise key material
+    (STREAM_FAULTS, 0)      client crash outcomes
+    (STREAM_FAULTS, 1)      straggler (stale-upload) outcomes
+    (STREAM_FAULTS, 2)      update-corruption outcomes
+    (STREAM_FAULTS, 3)      channel burst-outage process
+    (STREAM_FAULTS, 4)      HARQ retransmission backoff + outcome draws
 
 The channel streams (PR 6) are spawn children like every other stream,
 so enabling a ``ChannelSpec`` consumes NO draw from the engine /
 strategy / client streams — that is what makes the channel subsystem
 provably opt-in (winners are bit-identical with the channel disabled).
+The fault streams (PR 7) extend the same contract to the
+fault-injection layer: enabling a ``FaultSpec`` never perturbs the
+engine / strategy / client / channel draws.
 """
 from __future__ import annotations
 
@@ -45,6 +53,7 @@ STREAM_ENGINE = 0
 STREAM_STRATEGY = 1
 STREAM_CLIENT = 2
 STREAM_CHANNEL = 3
+STREAM_FAULTS = 4
 
 
 def child_seq(seed, *path: int) -> np.random.SeedSequence:
@@ -102,6 +111,31 @@ def channel_noise_entropy(seed) -> int:
     """63-bit key material for the AirComp receiver-noise PRNG key
     (masked so ``jax.random.PRNGKey`` accepts it as a plain int)."""
     return entropy_u64(child_seq(seed, STREAM_CHANNEL, 3)) & (2**63 - 1)
+
+
+def fault_crash_rng(seed) -> np.random.Generator:
+    """Client crash/dropout outcome stream of one experiment seed."""
+    return np.random.default_rng(child_seq(seed, STREAM_FAULTS, 0))
+
+
+def fault_straggle_rng(seed) -> np.random.Generator:
+    """Straggler (delayed / stale upload) outcome stream."""
+    return np.random.default_rng(child_seq(seed, STREAM_FAULTS, 1))
+
+
+def fault_corrupt_rng(seed) -> np.random.Generator:
+    """Local-delta corruption (NaN / Inf / scale blow-up) stream."""
+    return np.random.default_rng(child_seq(seed, STREAM_FAULTS, 2))
+
+
+def fault_outage_rng(seed) -> np.random.Generator:
+    """Channel burst-outage process stream (one uniform per round)."""
+    return np.random.default_rng(child_seq(seed, STREAM_FAULTS, 3))
+
+
+def fault_retry_rng(seed) -> np.random.Generator:
+    """HARQ retransmission stream (backoff + outcome draws)."""
+    return np.random.default_rng(child_seq(seed, STREAM_FAULTS, 4))
 
 
 def entropy_u64(seed) -> int:

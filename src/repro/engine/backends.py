@@ -56,11 +56,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.fl_state import generator_state, restore_generator
 from repro.core.client import Client, batch_epoch, sgd_epoch_scan
 from repro.core.priority import model_priority, stacked_model_priorities
 from repro.core.rngs import client_rng
 from repro.core.server import fedavg, fedavg_masked, winner_alphas
 from repro.engine.types import TrainResult
+from repro.faults.robust import robust_merge
 from repro.kernels import ops as kops
 from repro.sharding.cohort import (cohort_sharding, replicated_sharding,
                                    shardable, sweep_global_sharding,
@@ -136,11 +138,14 @@ class Backend:
         raise NotImplementedError
 
     def merge(self, state, train_result: TrainResult, winners: List[int],
-              merge_ctx=None):
+              merge_ctx=None, fault_ctx=None):
         """Eq. 1 over ``winners``. ``merge_ctx`` (a
         ``repro.channel.MergeContext``) switches the digital FedAvg
-        reduction to the AirComp analog superposition — backends that
-        don't implement it must reject a non-None context."""
+        reduction to the AirComp analog superposition; ``fault_ctx`` (a
+        ``repro.faults.FaultMergeContext``) routes it through the
+        robust guard pass (quarantine / clip / stale groups) instead —
+        backends that don't implement a context must reject it non-None.
+        The two contexts are mutually exclusive (spec-validated)."""
         raise NotImplementedError
 
     def global_params(self, state):
@@ -148,6 +153,19 @@ class Backend:
 
     def num_examples(self, u: int) -> int:
         raise NotImplementedError
+
+    # ---- checkpoint hooks (fault layer, DESIGN.md §8) ----------------
+    def client_stream_states(self):
+        """Per-client rng snapshots for checkpoint/resume, or None when
+        the backend owns no client streams (SiloBackend's batches are a
+        pure function of the round index)."""
+        return None
+
+    def restore_client_streams(self, states) -> None:
+        if states is None:
+            return
+        raise NotImplementedError(
+            f"{type(self).__name__} has no client streams to restore")
 
     # ---- sweep contract (optional; HostBackend's fused path implements
     # it, everything else reports unsupported and the engine refuses) --
@@ -229,6 +247,12 @@ class HostBackend(Backend):
         self._resident_key = None  # the global-state object it mirrors
         self._sweep_fns = {}       # E -> jitted sweep (bcast, round, merge)
         self._sweep_air_fns = {}   # E -> jitted AirComp sweep merge
+        # robust-guard merge twins (fault layer), keyed by the static
+        # program shape: (stale count, quarantine, clip_norm) and the
+        # sweep variant with a leading E — lazy, so a faults-off run
+        # never traces them
+        self._fused_fault_fns = {}
+        self._sweep_fault_fns = {}
 
     # ------------------------------------------------------------------
     def init_state(self, init_params):
@@ -430,9 +454,26 @@ class HostBackend(Backend):
             return jax.tree.map(lambda p: p[i], handle["stacked"])
         return handle[u]
 
-    def merge(self, state, train_result, winners, merge_ctx=None):
+    def extract_local(self, train_result, u):
+        """User u's trained params as freshly materialized arrays, safe
+        to hold across the merge (which donates the fused / stacked
+        handle buffers) — the fault layer's stale-upload capture."""
         handle = train_result.local_handle
         if isinstance(handle, dict) and "fused_stack" in handle:
+            return jax.tree.map(lambda p: p[u], handle["fused_stack"])
+        return self._local(handle, u)
+
+    def merge(self, state, train_result, winners, merge_ctx=None,
+              fault_ctx=None):
+        handle = train_result.local_handle
+        if isinstance(handle, dict) and "fused_stack" in handle:
+            if fault_ctx is not None:
+                new_glob, new_stack = self._merge_fused_faults(
+                    state, handle, fault_ctx)
+                handle["fused_stack"] = None  # donated into the stack
+                self._resident = new_stack
+                self._resident_key = new_glob
+                return new_glob
             alphas = winner_alphas(
                 self.num_users, winners,
                 [self.clients[u].num_examples for u in winners])
@@ -456,11 +497,79 @@ class HostBackend(Backend):
         # cohort-sized pytree can't stay pinned on device across a run
         # that switched to partial-cohort rounds
         self._resident = self._resident_key = None
+        if fault_ctx is not None:
+            return self._gather_merge_faults(state, handle, winners,
+                                             fault_ctx)
         models = [self._local(handle, u) for u in winners]
         sizes = [self.clients[u].num_examples for u in winners]
         if merge_ctx is None:
             return fedavg(models, sizes)
         return self._gather_merge_air(models, sizes, winners, merge_ctx)
+
+    # ----------------------------------------- robust merge twins (§8)
+    def _build_fused_fault(self, key):
+        """Robust-guard twin of ``fused_merge``: the same donated,
+        device-resident merge step routed through ``robust_merge``.
+        The old global is an extra input (delta-space guard reference)
+        and is NOT donated — on round 0 it may still be the caller's
+        init_params."""
+        M, quarantine, clip = key
+        uk = self._use_kernel
+
+        def fused_fault(trained, weights, corrupt, old_glob, *stale_args):
+            stale, stale_w = stale_args if M else (None, None)
+            glob, nq = robust_merge(trained, weights, corrupt, old_glob,
+                                    stale, stale_w, quarantine=quarantine,
+                                    clip_norm=clip, use_kernel=uk)
+            stack = jax.tree.map(
+                lambda g, l: jnp.broadcast_to(g[None], l.shape),
+                glob, trained)
+            return glob, stack, nq
+
+        fn = jax.jit(fused_fault, donate_argnums=0)
+        self._fused_fault_fns[key] = fn
+        return fn
+
+    def _merge_fused_faults(self, state, handle, ctx):
+        key = (len(ctx.stale), bool(ctx.quarantine), float(ctx.clip_norm))
+        fn = self._fused_fault_fns.get(key) or self._build_fused_fault(key)
+        args = [handle["fused_stack"],
+                jnp.asarray(ctx.weights, jnp.float32),
+                jnp.asarray(ctx.corrupt, jnp.float32), state]
+        if ctx.stale:
+            args.append(jax.tree.map(
+                lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
+                *[p for p, _ in ctx.stale]))
+            args.append(jnp.asarray([w for _, w in ctx.stale],
+                                    jnp.float32))
+        new_glob, new_stack, nq = fn(*args)
+        ctx.n_quarantined = int(nq)
+        return new_glob, new_stack
+
+    def _gather_merge_faults(self, state, handle, winners, ctx):
+        """Eager robust merge over the gathered candidates (stacked /
+        ragged handles); also covers the stale-only round, where there
+        are no fresh winners at all."""
+        trained = weights = corrupt = None
+        if winners:
+            models = [self._local(handle, u) for u in winners]
+            trained = jax.tree.map(lambda *ls: jnp.stack(ls), *models)
+            idx = [int(u) for u in winners]
+            weights = np.asarray(ctx.weights, np.float32)[idx]
+            corrupt = np.asarray(ctx.corrupt, np.float32)[idx]
+        stale = stale_w = None
+        if ctx.stale:
+            stale = jax.tree.map(
+                lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
+                *[p for p, _ in ctx.stale])
+            stale_w = np.asarray([w for _, w in ctx.stale], np.float32)
+        glob, nq = robust_merge(trained, weights, corrupt, state,
+                                stale, stale_w,
+                                quarantine=ctx.quarantine,
+                                clip_norm=ctx.clip_norm,
+                                use_kernel=self._use_kernel)
+        ctx.n_quarantined = int(nq)
+        return glob
 
     def _gather_merge_air(self, models, sizes, winners, merge_ctx):
         """AirComp over the gathered winner models (stacked / ragged
@@ -677,6 +786,109 @@ class HostBackend(Backend):
         self._sweep_air_fns[E] = fn
         return fn
 
+    def sweep_extract(self, tr: SweepTrainResult, e: int, u: int):
+        """Lane e / user u's trained row as freshly materialized arrays
+        (the trained stack is donated into the merge) — the sweep twin
+        of ``extract_local`` for stale-upload capture."""
+        return jax.tree.map(lambda p: p[e, u], tr.trained)
+
+    def _build_sweep_fault(self, key):
+        """Robust-guard twin of the sweep merge: ``robust_merge``
+        vmapped over the lane axis, same donation chain and the same
+        keep-old-global guard (a lane with zero surviving mass —
+        winnerless, all-quarantined, or λ=0 stale-only — keeps its
+        global, per-lane)."""
+        E, M, quarantine, clip = key
+        U, uk = self.num_users, self._use_kernel
+        if self._mesh is not None and sweep_shardable(E, U, self._mesh):
+            uk = uk and self._mesh.size == 1
+
+        def one_lane(tr_e, w_e, c_e, g_e, *stale_e):
+            stale, stale_w = stale_e if M else (None, None)
+            return robust_merge(tr_e, w_e, c_e, g_e, stale, stale_w,
+                                quarantine=quarantine, clip_norm=clip,
+                                use_kernel=uk)
+
+        def sweep_fault(trained, weights, corrupt, old_glob, *stale_args):
+            glob, nq = jax.vmap(one_lane)(trained, weights, corrupt,
+                                          old_glob, *stale_args)
+            stack = jax.tree.map(
+                lambda g, t: jnp.broadcast_to(g[:, None], t.shape),
+                glob, trained)
+            return glob, stack, nq
+
+        fn = jax.jit(sweep_fault, donate_argnums=(0, 3))
+        self._sweep_fault_fns[key] = fn
+        return fn
+
+    def sweep_merge_faults(self, st: SweepState, tr: SweepTrainResult,
+                           weights: np.ndarray, corrupt: np.ndarray,
+                           stale_stack=None, stale_weights=None, *,
+                           quarantine: bool = True,
+                           clip_norm: float = 0.0) -> np.ndarray:
+        """Dispatch the robust-guard sweep merge.
+
+        ``weights`` / ``corrupt``: (E, U) f32 host arrays (joint
+        fresh-mass weights from ``fault_alphas`` and per-user corruption
+        factors); ``stale_stack``: (E, M, ...) stacked stale-update
+        pytree, rows beyond a lane's stale count zero-padded and riding
+        with zero weight in ``stale_weights`` (E, M). Returns the (E,)
+        per-lane quarantine counts."""
+        trained, tr.trained = tr.trained, None
+        M = (0 if stale_weights is None
+             else int(np.shape(stale_weights)[1]))
+        key = (st.num_lanes, M, bool(quarantine), float(clip_norm))
+        fn = self._sweep_fault_fns.get(key) or self._build_sweep_fault(key)
+        args = [trained, jnp.asarray(weights, jnp.float32),
+                jnp.asarray(corrupt, jnp.float32), st.glob]
+        if M:
+            args += [stale_stack,
+                     jnp.asarray(stale_weights, jnp.float32)]
+        st.glob, st.stack, nq = fn(*args)
+        return np.asarray(nq)
+
+    # ---------------------------------------- checkpoint hooks (§8)
+    def client_stream_states(self):
+        return [generator_state(c._rng) for c in self.clients]
+
+    def restore_client_streams(self, states) -> None:
+        if states is None:
+            return
+        for c, s in zip(self.clients, states):
+            restore_generator(c._rng, s)
+
+    def sweep_stream_states(self, st: SweepState):
+        """Per-lane / per-user batch-stream snapshots. The engine takes
+        this BEFORE drawing the next round's batches, so a resumed run
+        replays the exact permutations the uninterrupted run drew."""
+        return [[generator_state(g) for g in lane] for lane in st.rngs]
+
+    def sweep_restore(self, glob, stream_states,
+                      seeds: Sequence[int]) -> SweepState:
+        """Rebuild a ``SweepState`` from checkpoint payload: ``glob``
+        the host copy of the (E, ...) stacked lane globals,
+        ``stream_states`` the matching ``sweep_stream_states``
+        snapshot, ``seeds`` the lane seeds (stream identity only — the
+        restored positions override the origin)."""
+        if not self.sweep_capable():
+            raise ValueError(
+                "sweep needs round_mode='fused' and a rectangular "
+                "cohort (equal per-user example counts)")
+        E = len(seeds)
+        self._sweep_fns.get(E) or self._build_sweep_fns(E)
+        g = jax.tree.map(jnp.asarray, glob)
+        # rebuild the cohort stack exactly as a post-merge round leaves
+        # it: every user row = the lane's global
+        stack = jax.tree.map(
+            lambda p: jnp.broadcast_to(
+                p[:, None], (E, self.num_users) + p.shape[1:]), g)
+        rngs = [[client_rng(s, u) for u in range(self.num_users)]
+                for s in seeds]
+        for lane_rngs, lane_states in zip(rngs, stream_states):
+            for gen, gs in zip(lane_rngs, lane_states):
+                restore_generator(gen, gs)
+        return SweepState(num_lanes=E, glob=g, stack=stack, rngs=rngs)
+
     def sweep_global(self, st: SweepState, e: int):
         """Lane e's current global params (for eval / extraction)."""
         return jax.tree.map(lambda p: p[e], st.glob)
@@ -755,11 +967,16 @@ class SiloBackend(Backend):
         return TrainResult(losses={u: float(loss_np[u]) for u in train_ids},
                            priorities=priorities, local_handle=local)
 
-    def merge(self, state, train_result, winners, merge_ctx=None):
+    def merge(self, state, train_result, winners, merge_ctx=None,
+              fault_ctx=None):
         if merge_ctx is not None:
             raise ValueError(
                 "SiloBackend implements only the digital cross-pod "
                 "merge; merge_backend='aircomp' needs HostBackend")
+        if fault_ctx is not None:
+            raise ValueError(
+                "SiloBackend implements no robust merge guard; "
+                "FaultSpec merge guards need HostBackend")
         alphas = winner_alphas(self.num_users, winners,
                                [self.num_examples(u) for u in winners])
         return self._merge(state, train_result.local_handle,

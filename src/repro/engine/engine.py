@@ -45,6 +45,9 @@ from typing import Callable, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.channel.model import ChannelModel, MergeContext
+from repro.checkpoint.fl_state import (generator_state, load_fl_checkpoint,
+                                       restore_generator, run_fingerprint,
+                                       save_fl_checkpoint)
 from repro.core.counter import FairnessCounter, SweepFairnessCounter
 from repro.core.rngs import channel_noise_entropy, engine_rng, strategy_seed
 from repro.core.server import winner_alphas
@@ -52,6 +55,8 @@ from repro.engine.backends import Backend
 from repro.engine.registry import create_strategy, select_grouped
 from repro.engine.spec import ExperimentSpec, SweepSpec
 from repro.engine.types import (FLHistory, SelectionContext, SweepResult)
+from repro.faults.injectors import FaultInjector
+from repro.faults.robust import FaultMergeContext, fault_alphas
 
 
 class _Lane:
@@ -61,10 +66,10 @@ class _Lane:
     ``SweepFairnessCounter`` row per lane) so Step 5 stays a single
     numpy update across lanes."""
 
-    __slots__ = ("spec", "strategy", "rng", "channel", "history")
+    __slots__ = ("spec", "strategy", "rng", "channel", "faults", "history")
 
     def __init__(self, spec: ExperimentSpec, num_users: int, *,
-                 strategy=None, rng=None, channel=None):
+                 strategy=None, rng=None, channel=None, faults=None):
         self.spec = spec
         # engine rng and strategy/simulator rng are INDEPENDENT spawn
         # children of the spec seed (core.rngs) — seeding both with the
@@ -82,6 +87,13 @@ class _Lane:
         self.channel = channel if channel is not None else (
             ChannelModel(spec.channel, num_users, spec.seed)
             if spec.channel is not None else None)
+        # fault streams are stream-4 spawn children of the spec seed —
+        # same opt-in rule as the channel: building the injector never
+        # perturbs the streams above
+        self.faults = faults if faults is not None else (
+            FaultInjector(spec.faults, spec.seed, cw_base=spec.cw_base,
+                          tx_slots=spec.csma.tx_slots)
+            if spec.faults is not None else None)
         self.history = FLHistory(
             selections=np.zeros(num_users, np.int64))
 
@@ -94,15 +106,22 @@ def _gate_round(channel, attempted):
     return delivered, len(attempted) - len(delivered)
 
 
-def _record_time(history, spec, channel, elapsed_slots, attempted):
+def _record_time(history, spec, channel, elapsed_slots, attempted,
+                 retry_slots: int = 0, retry_uploads=()):
     """Append the round's wall-clock / energy accounting: contention
     slots at ``slot_duration_s`` plus, with a channel, the attempted
-    uploads' payload airtime and transmit energy."""
-    secs = elapsed_slots * spec.slot_seconds()
+    uploads' payload airtime and transmit energy. HARQ retransmissions
+    charge their backoff + tx slots (``retry_slots``) and, per retry
+    attempt, another payload airtime / energy unit (``retry_uploads``,
+    one uid per attempt) — a lost retry still spent the air."""
+    secs = (elapsed_slots + retry_slots) * spec.slot_seconds()
     energy = 0.0
     if channel is not None:
         secs += channel.round_airtime_s(attempted)
         energy = channel.round_energy_j(attempted)
+        if len(retry_uploads):
+            secs += channel.round_airtime_s(retry_uploads)
+            energy += channel.round_energy_j(retry_uploads)
     history.round_seconds.append(secs)
     history.cumulative_seconds.append(
         (history.cumulative_seconds[-1] if history.cumulative_seconds
@@ -131,6 +150,10 @@ class FLEngine:
         self.channel = (ChannelModel(spec.channel, self.num_users,
                                      spec.seed)
                         if spec.channel is not None else None)
+        self.faults = (FaultInjector(spec.faults, spec.seed,
+                                     cw_base=spec.cw_base,
+                                     tx_slots=spec.csma.tx_slots)
+                       if spec.faults is not None else None)
         self._init_params = init_params
         self.state = backend.init_state(init_params)
 
@@ -170,6 +193,26 @@ class FLEngine:
         key = jax.random.fold_in(jax.random.PRNGKey(entropy), t)
         return MergeContext(coeffs=coeffs, noise_sigma=sigma, key=key)
 
+    def _lane_fault_ctx(self, spec, rf, stale_in, merged_now):
+        """Robust-merge inputs for one lane's round, or None when the
+        merge program stays the plain Eq. 1 (faults off, or
+        failure-only fault modes that never alter the merge math)."""
+        fs = spec.faults
+        if fs is None or not fs.merge_guarded:
+            return None
+        weights, stale_w = fault_alphas(
+            self.num_users, merged_now,
+            [self.backend.num_examples(u) for u in merged_now],
+            [n for _, _, n in stale_in], fs.staleness_discount)
+        corrupt = np.ones(self.num_users, np.float32)
+        for u, fac in rf.corrupt.items():
+            corrupt[int(u)] = fac
+        stale = [(p, float(w))
+                 for (_, p, _), w in zip(stale_in, stale_w)]
+        return FaultMergeContext(weights=weights, corrupt=corrupt,
+                                 quarantine=fs.quarantine,
+                                 clip_norm=fs.clip_norm, stale=stale)
+
     # ------------------------------------------------------------------
     def run_round(self, t: int, history: FLHistory) -> List[int]:
         """One single-experiment round through the per-lane backend
@@ -206,13 +249,37 @@ class FLEngine:
         # enabled) gates which of them actually reach the Eq. 1 merge.
         # Counters / selections / uploads_total see the attempt (the
         # airtime was spent either way); merge weights see deliveries.
+        # With faults on, the injector post-processes the gate's output:
+        # ``delivered`` then records the post-fault/post-retry arrivals
+        # and ``upload_failures`` the losses that survived every retry.
         winners = [int(u) for u in sel.winners]
+        faults = self.faults
+        if faults is not None:
+            faults.begin_round()            # burst-outage process
         delivered, failures = _gate_round(self.channel, winners)
-        if delivered:
+        rf, stale_in, merged_now = None, [], delivered
+        if faults is not None:
+            rf = faults.process_uploads(
+                winners, delivered,
+                self.channel.per if self.channel is not None else None)
+            delivered, failures = rf.arrived, len(rf.failed)
+            merged_now = rf.merged_now
+            stale_in = faults.pop_stale()
+            # capture this round's stragglers BEFORE the merge donates
+            # the trained handle
+            for u in rf.stragglers:
+                faults.push_stale(u, self.backend.extract_local(tr, u),
+                                  self.backend.num_examples(u))
+        if merged_now or stale_in:
+            fault_ctx = self._lane_fault_ctx(spec, rf, stale_in,
+                                             merged_now)
             self.state = self.backend.merge(
-                self.state, tr, delivered,
+                self.state, tr, merged_now,
                 merge_ctx=self._lane_merge_ctx(spec, self.channel, t,
-                                               self.num_users))
+                                               self.num_users),
+                fault_ctx=fault_ctx)
+            if fault_ctx is not None:
+                history.quarantined_updates += int(fault_ctx.n_quarantined)
         if winners:
             self.counter.update(winners, len(winners))
             history.uploads_total += len(winners)
@@ -222,9 +289,16 @@ class FLEngine:
         history.delivered.append(delivered)
         history.upload_failures += failures
         history.collisions += sel.collisions
-        history.contention_slots += sel.elapsed_slots
+        retry_slots = rf.retry_slots if rf is not None else 0
+        history.contention_slots += sel.elapsed_slots + retry_slots
+        if rf is not None:
+            history.retries += rf.retries
+            history.dropped_clients += len(rf.crashed)
+            history.stale_merges += len(stale_in)
         _record_time(history, spec, self.channel, sel.elapsed_slots,
-                     winners)
+                     winners, retry_slots=retry_slots,
+                     retry_uploads=(rf.retry_uploads if rf is not None
+                                    else ()))
         if strat.uses_priority:
             # one vectorized conversion — per-element float() is O(U)
             # Python overhead at 1e4+ users
@@ -238,7 +312,14 @@ class FLEngine:
         return winners
 
     # ------------------------------------------------------------------
-    def run(self, verbose: bool = False) -> FLHistory:
+    def run(self, verbose: bool = False, *,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 0) -> FLHistory:
+        """Run the spec's rounds. With ``checkpoint_dir`` set, the run
+        persists its full host+device state every ``checkpoint_every``
+        rounds (atomic file, DESIGN.md §8) and — when the directory
+        already holds a checkpoint for THIS spec — resumes from it,
+        bit-identically to the uninterrupted run."""
         spec = self.spec
         # The E=1 sweep delegation re-derives the per-user batch streams
         # from spec.seed, so it is only bit-faithful to the per-round
@@ -254,10 +335,12 @@ class FLEngine:
             # same device program shape, bound to THIS engine's
             # strategy/rng so repeated-attribute access stays coherent
             lane = _Lane(spec, self.num_users, strategy=self.strategy,
-                         rng=self._rng, channel=self.channel)
+                         rng=self._rng, channel=self.channel,
+                         faults=self.faults)
             result, st, counters = self._run_lanes(
                 [lane], init_state=self.state, overlap=True,
-                verbose=verbose)
+                verbose=verbose, checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every)
             self.state = self.backend.sweep_global(st, 0)
             self.counter.uploads[:] = counters.uploads[0]
             self.counter.total_merged = int(counters.total_merged[0])
@@ -271,7 +354,13 @@ class FLEngine:
         # partial-cohort (trains_before_selection) rounds
         history = FLHistory(
             selections=np.zeros(self.num_users, np.int64))
-        for t in range(spec.rounds):
+        start = 0
+        fp = run_fingerprint([spec], self.num_users)
+        if checkpoint_dir is not None:
+            payload = load_fl_checkpoint(checkpoint_dir)
+            if payload is not None:
+                history, start = self._load_run_payload(payload, fp)
+        for t in range(start, spec.rounds):
             self.run_round(t, history)
             if self.eval_fn is not None and (
                     t % spec.eval_every == 0 or t == spec.rounds - 1):
@@ -283,12 +372,61 @@ class FLEngine:
                           f"acc {acc:.4f}"
                           + (f" loss {history.train_loss[-1]:.4f}"
                              if history.train_loss else ""))
+            if (checkpoint_dir is not None and checkpoint_every > 0
+                    and (t + 1) % checkpoint_every == 0
+                    and t + 1 < spec.rounds):
+                save_fl_checkpoint(checkpoint_dir,
+                                   self._run_payload(fp, t, history))
         return history
+
+    # ------------------------------------------- checkpoint plumbing
+    def _run_payload(self, fp, t, history):
+        import jax
+        return {
+            "kind": "run", "fingerprint": fp, "round": t,
+            "state": jax.device_get(self.state),
+            "history": history,
+            "engine_rng": generator_state(self._rng),
+            "strategy": (self.strategy._sim.state_dict()
+                         if hasattr(self.strategy, "_sim") else None),
+            "channel": (self.channel.state_dict()
+                        if self.channel is not None else None),
+            "faults": (self.faults.state_dict()
+                       if self.faults is not None else None),
+            "counter": self.counter.state_dict(),
+            "client_streams": self.backend.client_stream_states(),
+        }
+
+    def _load_run_payload(self, payload, fp):
+        import jax
+        import jax.numpy as jnp
+        if payload["fingerprint"] != fp:
+            raise ValueError(
+                "checkpoint was written by a different experiment "
+                "configuration; refusing to resume (point checkpoint_dir "
+                "at a fresh directory or match the original spec)")
+        if payload["kind"] != "run":
+            raise ValueError(
+                "checkpoint was written by the sweep path; resume it "
+                "through the same sweep-capable configuration")
+        self.state = jax.tree.map(jnp.asarray, payload["state"])
+        restore_generator(self._rng, payload["engine_rng"])
+        if payload["strategy"] is not None:
+            self.strategy._sim.load_state_dict(payload["strategy"])
+        if self.channel is not None and payload["channel"] is not None:
+            self.channel.load_state_dict(payload["channel"])
+        if self.faults is not None and payload["faults"] is not None:
+            self.faults.load_state_dict(payload["faults"])
+        self.counter.load_state_dict(payload["counter"])
+        self.backend.restore_client_streams(payload["client_streams"])
+        return payload["history"], payload["round"] + 1
 
     # ------------------------------------------------------- sweep path
     def run_sweep(self, sweep: Union[SweepSpec, Sequence[ExperimentSpec]],
                   *, overlap: Optional[bool] = None,
-                  verbose: bool = False) -> SweepResult:
+                  verbose: bool = False,
+                  checkpoint_dir: Optional[str] = None,
+                  checkpoint_every: int = 0) -> SweepResult:
         """Run E experiment cells as ONE stacked device program.
 
         ``sweep``: a ``SweepSpec`` or a plain sequence of
@@ -297,6 +435,9 @@ class FLEngine:
         like E fresh sequential ``run`` calls. ``overlap`` overrides the
         sweep's async-pipeline flag (results are bit-identical either
         way; off is only useful for debugging and the pipeline bench).
+        ``checkpoint_dir`` / ``checkpoint_every`` persist + resume the
+        whole sweep (every lane's host state and the stacked device
+        globals) exactly like ``run``'s flags.
         """
         if not isinstance(sweep, SweepSpec):
             sweep = SweepSpec(specs=list(sweep))
@@ -310,7 +451,9 @@ class FLEngine:
         lanes = [_Lane(spec, self.num_users) for spec in sweep.specs]
         result, _, _ = self._run_lanes(
             lanes, init_state=self._init_params, overlap=overlap,
-            verbose=verbose, labels=sweep.labels)
+            verbose=verbose, labels=sweep.labels,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every)
         return result
 
     # ------------------------------------------------------------------
@@ -348,7 +491,7 @@ class FLEngine:
         return winners_all, sels
 
     def _record_lane(self, lane, sel, winners, delivered, failures,
-                     loss_row, prios_row):
+                     loss_row, prios_row, rf=None):
         h = lane.history
         if winners:
             h.uploads_total += len(winners)
@@ -358,9 +501,15 @@ class FLEngine:
         h.delivered.append(delivered)
         h.upload_failures += failures
         h.collisions += sel.collisions
-        h.contention_slots += sel.elapsed_slots
+        retry_slots = rf.retry_slots if rf is not None else 0
+        h.contention_slots += sel.elapsed_slots + retry_slots
+        if rf is not None:
+            h.retries += rf.retries
+            h.dropped_clients += len(rf.crashed)
         _record_time(h, lane.spec, lane.channel, sel.elapsed_slots,
-                     winners)
+                     winners, retry_slots=retry_slots,
+                     retry_uploads=(rf.retry_uploads if rf is not None
+                                    else ()))
         if (lane.strategy.uses_priority
                 and not lane.strategy.trains_before_selection):
             h.priorities.append(prios_row.tolist())
@@ -389,8 +538,98 @@ class FLEngine:
         return MergeContext(coeffs=coeffs, noise_sigma=sigmas,
                             key=jnp.stack(keys))
 
+    def _sweep_merge_faults(self, lanes, st, tr, rfs, stales, fs, t):
+        """Assemble the (E, U) joint fresh-weight / corruption matrices
+        and the zero-padded (E, M, ...) stale stack, then dispatch the
+        robust sweep merge. Returns the (E,) per-lane quarantine
+        counts. ``t`` is unused by the math but kept for symmetry with
+        ``_sweep_merge_ctx`` call sites."""
+        del t
+        import jax
+        import jax.numpy as jnp
+        backend, U, E = self.backend, self.num_users, len(lanes)
+        weights = np.zeros((E, U), np.float32)
+        corrupt = np.ones((E, U), np.float32)
+        M = max(len(s) for s in stales)
+        stale_w = np.zeros((E, M), np.float32) if M else None
+        for e, (rf, stale_in) in enumerate(zip(rfs, stales)):
+            w, sw = fault_alphas(
+                U, rf.merged_now,
+                [backend.num_examples(u) for u in rf.merged_now],
+                [n for _, _, n in stale_in], fs.staleness_discount)
+            weights[e] = w
+            if len(sw):
+                stale_w[e, :len(sw)] = sw
+            for u, fac in rf.corrupt.items():
+                corrupt[e, int(u)] = fac
+        stale_stack = None
+        if M:
+            # pad rows are zeros_like of a real stale update; they ride
+            # with zero weight, so the masked reduction drops them
+            template = None
+            for stale_in in stales:
+                if stale_in:
+                    template = jax.tree.map(
+                        lambda p: jnp.zeros_like(jnp.asarray(p)),
+                        stale_in[0][1])
+                    break
+            per_lane = []
+            for stale_in in stales:
+                rows = [p for _, p, _ in stale_in]
+                rows += [template] * (M - len(rows))
+                per_lane.append(jax.tree.map(
+                    lambda *ls: jnp.stack([jnp.asarray(x) for x in ls]),
+                    *rows))
+            stale_stack = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                       *per_lane)
+        return backend.sweep_merge_faults(
+            st, tr, weights, corrupt, stale_stack, stale_w,
+            quarantine=fs.quarantine, clip_norm=fs.clip_norm)
+
+    def _sweep_payload(self, fp, t, st, stream_snap, counters, lanes):
+        import jax
+        return {
+            "kind": "sweep", "fingerprint": fp, "round": t,
+            "glob": jax.device_get(st.glob),
+            "client_streams": stream_snap,
+            "counters": counters.state_dict(),
+            "lanes": [{
+                "history": lane.history,
+                "engine_rng": generator_state(lane.rng),
+                "strategy": (lane.strategy._sim.state_dict()
+                             if hasattr(lane.strategy, "_sim") else None),
+                "channel": (lane.channel.state_dict()
+                            if lane.channel is not None else None),
+                "faults": (lane.faults.state_dict()
+                           if lane.faults is not None else None),
+            } for lane in lanes],
+        }
+
+    @staticmethod
+    def _load_sweep_payload(payload, fp, lanes, counters):
+        if payload["fingerprint"] != fp:
+            raise ValueError(
+                "checkpoint was written by a different sweep "
+                "configuration; refusing to resume (point checkpoint_dir "
+                "at a fresh directory or match the original specs)")
+        if payload["kind"] != "sweep":
+            raise ValueError(
+                "checkpoint was written by the per-round path; resume "
+                "it through the same non-sweep configuration")
+        counters.load_state_dict(payload["counters"])
+        for lane, lst in zip(lanes, payload["lanes"]):
+            lane.history = lst["history"]
+            restore_generator(lane.rng, lst["engine_rng"])
+            if lst["strategy"] is not None:
+                lane.strategy._sim.load_state_dict(lst["strategy"])
+            if lane.channel is not None and lst["channel"] is not None:
+                lane.channel.load_state_dict(lst["channel"])
+            if lane.faults is not None and lst["faults"] is not None:
+                lane.faults.load_state_dict(lst["faults"])
+        return payload["round"] + 1
+
     def _run_lanes(self, lanes, *, init_state, overlap, verbose,
-                   labels=None):
+                   labels=None, checkpoint_dir=None, checkpoint_every=0):
         """The sweep round loop: one batched device program, one batched
         host selection layer, async host/device overlap.
 
@@ -410,14 +649,34 @@ class FLEngine:
         backend, U, E = self.backend, self.num_users, len(lanes)
         rounds = lanes[0].spec.rounds
         need_prio = any(l.strategy.uses_priority for l in lanes)
+        lead_faults = lanes[0].spec.faults       # sweep-shared field
         counters = SweepFairnessCounter(
             E, U, np.array([l.spec.counter_threshold for l in lanes]))
+        fp = run_fingerprint([l.spec for l in lanes], U)
+        seeds = [l.spec.seed for l in lanes]
         t0 = time.time()
-        st = backend.sweep_init(init_state,
-                                [l.spec.seed for l in lanes])
+        start, st = 0, None
+        if checkpoint_dir is not None:
+            payload = load_fl_checkpoint(checkpoint_dir)
+            if payload is not None:
+                start = self._load_sweep_payload(payload, fp, lanes,
+                                                 counters)
+                st = backend.sweep_restore(payload["glob"],
+                                           payload["client_streams"],
+                                           seeds)
+        if st is None:
+            st = backend.sweep_init(init_state, seeds)
         tr = backend.sweep_train(st, backend.sweep_batches(st), need_prio)
-        for t in range(rounds):
+        for t in range(start, rounds):
             last = t + 1 >= rounds
+            want_ckpt = (checkpoint_dir is not None
+                         and checkpoint_every > 0
+                         and (t + 1) % checkpoint_every == 0 and not last)
+            # the client-stream snapshot must precede ANY round-t+1
+            # batch draw (overlapped or not): a resumed run re-draws
+            # round t+1 from exactly this position
+            stream_snap = (backend.sweep_stream_states(st) if want_ckpt
+                           else None)
             next_batched = None
             if overlap and not last:
                 # host: round t+1's epoch permutations, drawn while the
@@ -426,22 +685,48 @@ class FLEngine:
             prios64 = np.asarray(tr.priorities, np.float64)  # (E, U) sync
             winners_all, sels = self._select_lanes(
                 lanes, counters, prios64, t)
-            # channel gate: merge weights are computed over the
-            # DELIVERED subset (renormalized Eq. 1 over survivors);
-            # counters and histories keep seeing the attempts
-            delivered_all, failures_all = [], []
+            # channel gate + fault pipeline: merge weights are computed
+            # over the post-fault merge candidates (renormalized Eq. 1
+            # over survivors); counters and histories keep seeing the
+            # attempts. Stragglers' rows are captured BEFORE the merge
+            # donates the trained stack.
+            delivered_all, failures_all, rfs, stales = [], [], [], []
             for e, lane in enumerate(lanes):
+                if lane.faults is not None:
+                    lane.faults.begin_round()
                 d, f = _gate_round(lane.channel, winners_all[e])
+                rf, stale_in = None, []
+                if lane.faults is not None:
+                    rf = lane.faults.process_uploads(
+                        winners_all[e], d,
+                        lane.channel.per if lane.channel is not None
+                        else None)
+                    d, f = rf.arrived, len(rf.failed)
+                    stale_in = lane.faults.pop_stale()
+                    for u in rf.stragglers:
+                        lane.faults.push_stale(
+                            u, backend.sweep_extract(tr, e, u),
+                            backend.num_examples(u))
                 delivered_all.append(d)
                 failures_all.append(f)
-            alphas = np.zeros((E, U), np.float32)
-            for e, delivered in enumerate(delivered_all):
-                if delivered:
-                    alphas[e] = winner_alphas(
-                        U, delivered,
-                        [backend.num_examples(u) for u in delivered])
-            backend.sweep_merge(st, tr, alphas,
-                                merge_ctx=self._sweep_merge_ctx(lanes, t))
+                rfs.append(rf)
+                stales.append(stale_in)
+            nq = None
+            if lead_faults is not None and lead_faults.merge_guarded:
+                nq = self._sweep_merge_faults(lanes, st, tr, rfs,
+                                              stales, lead_faults, t)
+            else:
+                merged_all = [rf.merged_now if rf is not None else d
+                              for rf, d in zip(rfs, delivered_all)]
+                alphas = np.zeros((E, U), np.float32)
+                for e, merged in enumerate(merged_all):
+                    if merged:
+                        alphas[e] = winner_alphas(
+                            U, merged,
+                            [backend.num_examples(u) for u in merged])
+                backend.sweep_merge(
+                    st, tr, alphas,
+                    merge_ctx=self._sweep_merge_ctx(lanes, t))
             next_tr = None
             if not last:
                 if next_batched is None:
@@ -451,9 +736,13 @@ class FLEngine:
             counters.update(winners_all)
             losses64 = np.asarray(tr.losses, np.float64)
             for e, lane in enumerate(lanes):
+                if rfs[e] is not None:
+                    lane.history.stale_merges += len(stales[e])
+                if nq is not None:
+                    lane.history.quarantined_updates += int(nq[e])
                 self._record_lane(lane, sels[e], winners_all[e],
                                   delivered_all[e], failures_all[e],
-                                  losses64[e], prios64[e])
+                                  losses64[e], prios64[e], rf=rfs[e])
             if self.eval_fn is not None:
                 for e, lane in enumerate(lanes):
                     spec = lane.spec
@@ -467,6 +756,11 @@ class FLEngine:
                                    else f"{spec.strategy}/{e}")
                             print(f"[{tag}] round {t:4d} acc {acc:.4f}"
                                   f" loss {lane.history.train_loss[-1]:.4f}")
+            if want_ckpt:
+                save_fl_checkpoint(
+                    checkpoint_dir,
+                    self._sweep_payload(fp, t, st, stream_snap,
+                                        counters, lanes))
             tr = next_tr
         result = SweepResult(
             histories=[l.history for l in lanes],

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from repro.channel.spec import ChannelSpec
 from repro.core.csma import CSMAConfig
+from repro.faults.spec import FaultSpec
 
 #: Eq. 1 merge implementations the backends know how to build
 MERGE_BACKENDS = ("fedavg", "aircomp")
@@ -57,6 +58,11 @@ class ExperimentSpec:
     #: wall-clock seconds per contention slot for the history's
     #: elapsed-time accounting; None = the CSMA config's slot time.
     slot_duration_s: Optional[float] = None
+    # fault-tolerance layer (DESIGN.md §8) — None disables the whole
+    # subsystem (no fault rng streams exist; bit-identical to the
+    # pre-fault reference, winner-pin guarded). Sweep-shared: the E
+    # lanes route through ONE jitted (plain or robust) merge program.
+    faults: Optional[FaultSpec] = None
     # local training (consumed by backend factories)
     lr: float = 1e-2
     batch_size: int = 32
@@ -68,6 +74,14 @@ class ExperimentSpec:
             raise ValueError(
                 f"unknown merge_backend {self.merge_backend!r}; "
                 f"known: {MERGE_BACKENDS}")
+        if (self.faults is not None and self.faults.merge_guarded
+                and self.merge_backend == "aircomp"):
+            raise ValueError(
+                "the robust merge guard (quarantine / clip_norm / "
+                "corrupt_prob / straggle_prob) is digital-only: the "
+                "analog AirComp superposition cannot inspect or mask "
+                "individual updates mid-air; use merge_backend='fedavg' "
+                "or restrict faults to crash/outage/retry modes")
 
     def slot_seconds(self) -> float:
         """Wall-clock length of one contention slot."""
@@ -80,7 +94,7 @@ class ExperimentSpec:
 #: ``rounds`` because the lanes advance in lockstep, the rest because
 #: they configure the ONE backend / merge program every lane shares.
 SWEEP_SHARED_FIELDS = ("rounds", "lr", "batch_size", "local_epochs",
-                       "merge_backend")
+                       "merge_backend", "faults")
 
 
 @dataclass
@@ -105,8 +119,9 @@ class SweepSpec:
             if len(vals) > 1:
                 raise ValueError(
                     f"sweep cells disagree on shared field {f!r}: "
-                    f"{sorted(vals)} — the lanes run in lockstep over "
-                    f"one backend, so {SWEEP_SHARED_FIELDS} must match")
+                    f"{sorted(vals, key=repr)} — the lanes run in "
+                    f"lockstep over one backend, so "
+                    f"{SWEEP_SHARED_FIELDS} must match")
         if self.labels is not None and len(self.labels) != len(self.specs):
             raise ValueError(
                 f"{len(self.labels)} labels for {len(self.specs)} cells")

@@ -122,6 +122,14 @@ class FLHistory:
     round_seconds: List[float] = field(default_factory=list)
     cumulative_seconds: List[float] = field(default_factory=list)
     round_energy_j: List[float] = field(default_factory=list)
+    # fault layer (PR 7, DESIGN.md §8): with faults enabled,
+    # ``delivered`` records the post-fault arrivals (crash/outage losses
+    # removed, HARQ recoveries added) and ``upload_failures`` the
+    # attempts still lost AFTER the retry budget
+    retries: int = 0                           # HARQ retransmission attempts
+    dropped_clients: int = 0                   # winners lost to crashes
+    quarantined_updates: int = 0               # masked by the robust merge
+    stale_merges: int = 0                      # λ-discounted late merges
 
     def elapsed_seconds(self) -> float:
         """Total simulated wall-clock of the run so far."""

@@ -1,0 +1,9 @@
+"""Fault-tolerance layer (DESIGN.md §8): failure injection, HARQ
+retransmission, robust merge guards. ``ExperimentSpec.faults = None``
+keeps the whole subsystem off and bit-transparent."""
+from repro.faults.injectors import FaultInjector, RoundFaults
+from repro.faults.robust import fault_alphas, robust_merge
+from repro.faults.spec import CORRUPT_MODES, FaultSpec
+
+__all__ = ["CORRUPT_MODES", "FaultInjector", "FaultSpec", "RoundFaults",
+           "fault_alphas", "robust_merge"]

@@ -1,0 +1,171 @@
+"""Robust Eq. 1 merge — the fault layer's guard pass (DESIGN.md §8).
+
+One function, ``robust_merge``, shared by every merge path that the
+fault layer touches: the single-lane fused twin (jitted), the sweep
+twin (vmapped over the lane axis), and the gather-path merge (eager).
+It extends the plain masked FedAvg with three moves:
+
+  1. per-row corruption factors ``c_k`` and delta-norm clip scales are
+     folded into one shrink factor ``s_k``, applied in delta space:
+     ``row' = g + s_k · (row − g)`` (``kernels/ops.robust_combine``;
+     ``s_k == 1`` is an exact bit-level passthrough);
+  2. quarantine: rows whose (scaled) delta normsq is non-finite are
+     masked out of the weight vector, and the surviving mass is
+     renormalized by ``f = Σw_requested / Σw_surviving`` — exactly 1.0
+     when nothing was quarantined (x/x is exact in IEEE-754), so a
+     clean round is bit-identical to the plain merge;
+  3. the PR 6 zero-alpha-row guard extends to the all-quarantined
+     case: when NO mass survives (winnerless round, every update
+     quarantined, or λ = 0 stale-only), the old global is kept.
+
+Bit-transparency contract: with clean rows, all-ones scales and no
+stale group, the per-leaf reduction is the *identical expression* to
+``fedavg_combine`` (same masked where-sum), times an exact 1.0 — the
+faults-off winner-pin twins in tools/check_winner_pins.py ride on this.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+@dataclass
+class FaultMergeContext:
+    """Per-merge robust-guard inputs the engine hands the backend
+    (the fault twin of ``repro.channel.MergeContext``).
+
+    ``weights``: dense (U,) f32 fresh merge weights from
+    ``fault_alphas`` (zero at non-candidates); ``corrupt``: (U,) f32
+    per-user delta corruption factors (1 = clean); ``stale``: last
+    round's buffered stragglers as ``(params pytree, f32 weight)``
+    pairs. ``quarantine``/``clip_norm`` select the traced program
+    (static per spec). After the merge the backend writes
+    ``n_quarantined`` back for the engine's history accounting.
+    """
+    weights: np.ndarray
+    corrupt: np.ndarray
+    quarantine: bool
+    clip_norm: float
+    stale: List[Tuple[Any, float]] = field(default_factory=list)
+    n_quarantined: int = 0
+
+
+def row_delta_normsq(stack, glob, use_kernel: bool = True):
+    """(K,) f32 ``Σ_leaves ||row_k − g||²`` over a stacked pytree —
+    the same per-leaf ``kernels/ops.delta_norm`` reduction Eq. 2
+    priorities use, vmapped over the row axis."""
+    def one(row):
+        tot = jnp.float32(0.0)
+        for rl, gl in zip(jax.tree.leaves(row), jax.tree.leaves(glob)):
+            d2, _ = kops.delta_norm(rl, gl, use_kernel=use_kernel)
+            tot = tot + d2
+        return tot
+    return jax.vmap(one)(stack)
+
+
+def robust_merge(trained, weights, corrupt, glob, stale=None,
+                 stale_weights=None, *, quarantine: bool = True,
+                 clip_norm: float = 0.0, use_kernel: bool = True):
+    """Guarded Eq. 1 over a fresh group and an optional stale group.
+
+    trained: (K, ...) stacked pytree of fresh merge candidates, or None
+      (stale-only merge); ``weights``: (K,) f32 merge weights already
+      normalized on host over the JOINT fresh+stale mass (zero rows are
+      non-candidates); ``corrupt``: (K,) f32 per-row delta corruption
+      factors (1 = clean) or None; ``glob``: the old global pytree;
+      ``stale``/``stale_weights``: (M, ...) stacked stale updates and
+      their λ-discounted normalized weights. ``quarantine``/``clip_norm``
+      are static per spec (they select the traced program).
+
+    Returns ``(new_glob, n_quarantined)`` — the int32 count of
+    positive-weight rows masked by the quarantine.
+    """
+    groups = []
+    if trained is not None:
+        groups.append((trained, jnp.asarray(weights, jnp.float32),
+                       None if corrupt is None
+                       else jnp.asarray(corrupt, jnp.float32)))
+    if stale is not None:
+        groups.append((stale, jnp.asarray(stale_weights, jnp.float32),
+                       None))
+    if not groups:
+        raise ValueError("robust_merge needs at least one group")
+
+    z_req = jnp.float32(0.0)
+    z_eff = jnp.float32(0.0)
+    n_quar = jnp.int32(0)
+    prepared = []          # (stack, eff_weights, row_scales)
+    for stack, w, c in groups:
+        nf = row_delta_normsq(stack, glob, use_kernel)
+        if c is not None:
+            nf = nf * (c * c)
+        if clip_norm > 0:
+            clip = jnp.float32(clip_norm)
+            # NaN/Inf normsq rows compare False -> scale 1; quarantine
+            # (not clipping) is what removes them
+            s_clip = jnp.where(nf > clip * clip,
+                               clip / jnp.sqrt(nf), jnp.float32(1.0))
+        else:
+            s_clip = jnp.ones_like(nf)
+        scale = s_clip if c is None else c * s_clip
+        if quarantine:
+            finite = jnp.isfinite(nf)
+            eff = jnp.where(finite, w, jnp.float32(0.0))
+            n_quar = n_quar + jnp.sum(
+                (w > 0) & ~finite).astype(jnp.int32)
+        else:
+            eff = w
+        z_req = z_req + jnp.sum(w)
+        z_eff = z_eff + jnp.sum(eff)
+        prepared.append((stack, eff, scale))
+
+    has = z_eff > 0.0
+    # exact 1.0 when nothing was quarantined: z_req and z_eff are then
+    # the same f32 sum of the same values, and x/x == 1.0 in IEEE-754
+    f = jnp.where(has, z_req / jnp.where(has, z_eff, jnp.float32(1.0)),
+                  jnp.float32(1.0))
+
+    def merge_leaf(g, *stack_leaves):
+        acc = None
+        for (_, eff, scale), leaf in zip(prepared, stack_leaves):
+            term = kops.robust_combine(leaf, eff, scale, g,
+                                       use_kernel=use_kernel)
+            acc = term if acc is None else acc + term
+        return jnp.where(has, f * acc, g).astype(g.dtype)
+
+    new_glob = jax.tree.map(merge_leaf, glob,
+                            *[p[0] for p in prepared])
+    return new_glob, n_quar
+
+
+def fault_alphas(num_users: int, merged_now, sizes, stale_sizes,
+                 staleness_discount: float):
+    """Host-side joint Eq. 1 weights over fresh + stale candidates.
+
+    Fresh candidate k contributes mass ``|D_k|``, stale candidate m
+    mass ``λ · |D_m|``; both are normalized over the joint total in
+    float64 and cast to f32 — with no stale entries this is EXACTLY
+    ``core.server.winner_alphas`` (same math, bit-transparency
+    contract). λ only discounts stale updates *relative to* fresh
+    ones: a stale-only round still merges at full mass (its shares
+    normalize to 1), unless λ = 0 which drops stale updates entirely.
+
+    Returns ``(dense (num_users,) f32 fresh weights, (M,) f32 stale
+    weights)``.
+    """
+    fresh = np.asarray([float(s) for s in sizes], np.float64)
+    stale = staleness_discount * np.asarray(
+        [float(s) for s in stale_sizes], np.float64)
+    z = fresh.sum() + stale.sum()
+    raw = np.zeros(num_users, np.float32)
+    if z <= 0:
+        return raw, np.zeros(len(stale), np.float32)
+    if len(merged_now):
+        raw[[int(u) for u in merged_now]] = (fresh / z).astype(np.float32)
+    return raw, (stale / z).astype(np.float32)

@@ -29,6 +29,7 @@ from repro.kernels.aircomp import aircomp_pallas
 from repro.kernels.delta_norm import delta_norm_pallas
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.fused_sgd import fused_sgd_pallas
+from repro.kernels.robust import robust_pallas
 
 
 def _mode(use_kernel: bool, interpret):
@@ -92,6 +93,31 @@ def aircomp_combine(stacked, alphas, coeffs=None, noise=0.0,
     if run:
         return aircomp_pallas(stacked, w, noise, scale, interpret=interp)
     return ref.aircomp_combine_ref(stacked, w, noise, scale)
+
+
+def robust_combine(stacked, weights, scales, global_ref,
+                   use_kernel=True, interpret=None):
+    """Robust Eq. 1: per-row delta shrink against the old global, then
+    the masked weighted sum (the fault layer's guarded merge,
+    DESIGN.md §8).
+
+    stacked: (K, ...); weights: (K,) f32 merge weights (zero = masked
+    row, contributes EXACT zero even when non-finite); scales: (K,) f32
+    per-row shrink factors applied in delta space — row' = g + s_k ·
+    (row − g) — folding the delta-norm clip and the injected
+    corruption factor into one multiply; global_ref: the old global
+    (stacked.shape[1:]).
+
+    With ``scales ≡ 1`` every row takes a bit-level passthrough branch
+    and this is bit-for-bit ``fedavg_combine`` (the faults-off
+    transparency contract; parity-tested in tests/test_faults.py).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(scales, jnp.float32)
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        return robust_pallas(stacked, w, s, global_ref, interpret=interp)
+    return ref.robust_combine_ref(stacked, w, s, global_ref)
 
 
 def fused_sgd(param, grad, lr, use_kernel=True, interpret=None):

@@ -49,6 +49,32 @@ def aircomp_combine_ref(stacked, weights, noise, scale):
     return (acc * jnp.asarray(scale, jnp.float32)).astype(stacked.dtype)
 
 
+def robust_combine_ref(stacked, weights, scales, global_ref):
+    """Robust Eq. 1 pre-pass + weighted sum, jnp oracle.
+
+    stacked: (K, ...), weights: (K,) f32 merge weights (zero = masked
+    row), scales: (K,) f32 per-row delta shrink factors, global_ref:
+    (...) the old global the deltas are measured against. Each row is
+    first shrunk in delta space, ``row' = g + s_k · (row − g)`` — the
+    delta-norm clip / corruption-factor application of the fault layer
+    (DESIGN.md §8) — then reduced exactly like ``fedavg_combine_ref``.
+
+    Exactness contract: ``s_k == 1`` takes a bit-level passthrough
+    branch (no arithmetic touches the row), and a zero weight
+    contributes EXACT zero even for a non-finite row, so with all-ones
+    scales this is bit-for-bit ``fedavg_combine_ref`` — the faults-off
+    twin lanes in tools/check_winner_pins.py ride on it.
+    """
+    shape = (-1,) + (1,) * (stacked.ndim - 1)
+    w = weights.astype(jnp.float32).reshape(shape)
+    s = scales.astype(jnp.float32).reshape(shape)
+    x = stacked.astype(jnp.float32)
+    g = global_ref.astype(jnp.float32)[None]
+    shrunk = jnp.where(s == 1.0, x, g + s * (x - g))
+    terms = jnp.where(w != 0.0, shrunk * w, 0.0)
+    return jnp.sum(terms, axis=0).astype(stacked.dtype)
+
+
 def fused_sgd_ref(param, grad, lr):
     """param - lr * grad, computed in f32, cast back."""
     return (param.astype(jnp.float32)

@@ -1,11 +1,66 @@
 import os
 import sys
 
+import numpy as np
 import pytest
 
 # src-layout import without install; tests must see ONE cpu device
 # (the 512-device XLA flag belongs to launch/dryrun.py exclusively).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---- hypothesis-or-seeded fallback shim (shared by property tests) ---
+# Property tests use hypothesis when it is installed; otherwise each
+# ``@given`` falls back to a deterministic seeded sample sweep of the
+# same strategy space, so the invariants stay exercised on minimal
+# images (the CI container ships without hypothesis). Import in tests:
+#
+#     from conftest import HAVE_HYPOTHESIS, given, settings, st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _Ints:
+        def __init__(self, lo=None, hi=None, *, min_value=None,
+                     max_value=None):
+            self.lo = min_value if lo is None else lo
+            self.hi = max_value if hi is None else hi
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats:
+        def __init__(self, lo=None, hi=None, *, min_value=None,
+                     max_value=None, **kw):
+            self.lo = min_value if lo is None else lo
+            self.hi = max_value if hi is None else hi
+
+        def sample(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class st:                                          # noqa: N801
+        integers = staticmethod(_Ints)
+        floats = staticmethod(_Floats)
+
+    def settings(**kw):
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", 20)
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            n = getattr(fn, "_max_examples", 20)
+
+            def wrapper():
+                rng = np.random.default_rng(hash(fn.__name__) % 2**32)
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strats.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
 
 
 def pytest_configure(config):

@@ -1,9 +1,8 @@
 """Channel subsystem tests (DESIGN.md §7).
 
-Property tests use hypothesis when it is installed; otherwise each
-``@given`` falls back to a deterministic seeded sample sweep of the
-same strategy space, so the invariants stay exercised on minimal
-images (the CI container ships without hypothesis).
+Property tests ride the shared hypothesis-or-seeded-fallback shim in
+``tests/conftest.py`` (deterministic sample sweeps on minimal images
+without hypothesis installed).
 """
 import itertools
 
@@ -12,50 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:                                   # pragma: no cover
-    HAVE_HYPOTHESIS = False
-
-    class _Ints:
-        def __init__(self, lo, hi):
-            self.lo, self.hi = lo, hi
-
-        def sample(self, rng):
-            return int(rng.integers(self.lo, self.hi + 1))
-
-    class _Floats:
-        def __init__(self, lo, hi):
-            self.lo, self.hi = lo, hi
-
-        def sample(self, rng):
-            return float(rng.uniform(self.lo, self.hi))
-
-    class st:                                          # noqa: N801
-        integers = staticmethod(_Ints)
-        floats = staticmethod(
-            lambda min_value, max_value, **kw: _Floats(min_value,
-                                                       max_value))
-
-    def settings(**kw):
-        def deco(fn):
-            fn._max_examples = kw.get("max_examples", 20)
-            return fn
-        return deco
-
-    def given(**strats):
-        def deco(fn):
-            n = getattr(fn, "_max_examples", 20)
-
-            def wrapper():
-                rng = np.random.default_rng(hash(fn.__name__) % 2**32)
-                for _ in range(n):
-                    fn(**{k: s.sample(rng) for k, s in strats.items()})
-            wrapper.__name__ = fn.__name__
-            wrapper.__doc__ = fn.__doc__
-            return wrapper
-        return deco
+from conftest import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
 
 from repro.channel import (ChannelModel, ChannelSpec, MergeContext,
                            packet_error_rate, path_loss_db,

@@ -1,0 +1,468 @@
+"""Fault-tolerance layer tests (DESIGN.md §8).
+
+Covers the PR-7 contracts:
+
+  * FaultSpec validation and the aircomp/robust-guard exclusion;
+  * bit-transparency: an inert ``FaultSpec()`` (all probabilities zero)
+    produces bit-identical winners / histories / merged globals to
+    ``faults=None`` on every round path — enabling the subsystem costs
+    nothing until a fault fires (stream-position invariance);
+  * failure semantics: crashes drop uploads without retry, burst
+    outages blank deliveries, HARQ retries are bounded by the budget
+    and charged to airtime/energy;
+  * stale uploads: stragglers merge one round late at λ-discounted
+    mass (``fault_alphas`` joint normalization);
+  * robust merge: NaN/Inf quarantine keeps the global finite, clipping
+    bounds the merged delta, and the guard is a bit-exact no-op on
+    clean rounds (kernel-vs-oracle parity in interpret mode);
+  * checkpoint/resume: a killed-and-resumed run or sweep is
+    bit-identical to the uninterrupted one; a spec mismatch refuses.
+
+Property tests ride the shared hypothesis-or-seeded fallback shim in
+``tests/conftest.py``.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st  # noqa: F401
+
+from repro.engine import ExperimentSpec, SweepSpec, build_host_engine
+from repro.engine.backends import SiloBackend
+from repro.faults import (CORRUPT_MODES, FaultInjector, FaultSpec,
+                          fault_alphas, robust_merge)
+from repro.channel import ChannelSpec
+from repro.core.server import winner_alphas
+from repro.kernels import ops, ref
+
+U, N_PER, DIM = 8, 32, 6
+
+
+def make_data(num_users=U, n=N_PER, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"x": rng.normal(size=(n, d)).astype(np.float32),
+             "y": rng.integers(0, 2, size=(n,)).astype(np.int32)}
+            for _ in range(num_users)]
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((logits - batch["y"]) ** 2)
+
+
+def init_params(d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(d,)).astype(np.float32) * 0.1,
+            "b": np.zeros((), np.float32)}
+
+
+DATA = make_data()
+
+
+def make_spec(rounds=5, strategy="priority-distributed", seed=7, **kw):
+    return ExperimentSpec(strategy=strategy, rounds=rounds,
+                          k_per_round=3, seed=seed, **kw)
+
+
+def run_spec(spec, round_mode=None):
+    eng = build_host_engine(spec, init_params(), loss_fn, DATA,
+                            round_mode=round_mode)
+    hist = eng.run()
+    return hist, jax.device_get(eng.global_params)
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(x, y) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ----------------------------------------------------------- FaultSpec
+
+def test_fault_spec_validation():
+    FaultSpec()          # defaults are inert and valid
+    with pytest.raises(ValueError):
+        FaultSpec(crash_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(staleness_discount=-0.1)
+    with pytest.raises(ValueError):
+        FaultSpec(corrupt_mode="bitflip")
+    with pytest.raises(ValueError):
+        FaultSpec(outage_rounds=0)
+    with pytest.raises(ValueError):
+        FaultSpec(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(retry_cw_base=0.0)
+    with pytest.raises(ValueError):
+        FaultSpec(clip_norm=-1.0)
+    assert set(CORRUPT_MODES) == {"nan", "inf", "scale"}
+
+
+def test_merge_guarded_flag():
+    assert FaultSpec().merge_guarded                    # quarantine on
+    assert not FaultSpec(quarantine=False).merge_guarded
+    assert FaultSpec(quarantine=False, clip_norm=1.0).merge_guarded
+    assert FaultSpec(quarantine=False, corrupt_prob=0.1).merge_guarded
+    assert FaultSpec(quarantine=False, straggle_prob=0.1).merge_guarded
+    # failure-only modes leave the merge program untouched
+    assert not FaultSpec(quarantine=False, crash_prob=0.5,
+                         outage_prob=0.5, max_retries=3).merge_guarded
+
+
+def test_aircomp_rejects_merge_guard():
+    with pytest.raises(ValueError, match="digital-only"):
+        make_spec(merge_backend="aircomp", faults=FaultSpec())
+    # failure-only faults compose with aircomp fine
+    make_spec(merge_backend="aircomp",
+              faults=FaultSpec(quarantine=False, crash_prob=0.2))
+
+
+def test_faults_is_sweep_shared():
+    with pytest.raises(ValueError, match="faults"):
+        SweepSpec(specs=[make_spec(faults=FaultSpec(), seed=1),
+                         make_spec(faults=None, seed=2)])
+
+
+# ------------------------------------------------- bit-transparency
+
+@pytest.mark.parametrize("round_mode", ["fused", "stacked"])
+def test_inert_faultspec_bit_transparent(round_mode):
+    """faults=None and an inert FaultSpec() are the same program:
+    winners, deliveries, globals and time accounting all bit-equal."""
+    h0, g0 = run_spec(make_spec(), round_mode=round_mode)
+    h1, g1 = run_spec(make_spec(faults=FaultSpec()),
+                      round_mode=round_mode)
+    assert h0.winners == h1.winners
+    assert h0.delivered == h1.delivered
+    assert h0.round_seconds == h1.round_seconds
+    assert np.array_equal(h0.selections, h1.selections)
+    assert trees_equal(g0, g1)
+    assert (h1.retries, h1.dropped_clients, h1.quarantined_updates,
+            h1.stale_merges) == (0, 0, 0, 0)
+
+
+def test_inert_faultspec_bit_transparent_with_channel():
+    """Stream-position invariance UNDER the channel: the PER gate's
+    draws (and so the delivered subsets) are bit-equal with the fault
+    layer enabled-but-inert."""
+    ch = ChannelSpec(per_model="waterfall", fading="rayleigh")
+    h0, g0 = run_spec(make_spec(channel=ch))
+    h1, g1 = run_spec(make_spec(channel=ch, faults=FaultSpec()))
+    assert h0.winners == h1.winners
+    assert h0.delivered == h1.delivered
+    assert h0.upload_failures == h1.upload_failures
+    assert trees_equal(g0, g1)
+
+
+@pytest.mark.parametrize("strategy", ["priority-distributed",
+                                      "random-distributed"])
+def test_selection_invariant_under_faults(strategy):
+    """Heavy faults never perturb contention: the fault streams are
+    stream-4 spawn children, so winner sequences match faults=None."""
+    h0, _ = run_spec(make_spec(strategy=strategy))
+    h1, _ = run_spec(make_spec(strategy=strategy, faults=FaultSpec(
+        crash_prob=0.4, straggle_prob=0.4, corrupt_prob=0.4,
+        outage_prob=0.3, max_retries=2, clip_norm=1.0)))
+    assert h0.winners == h1.winners
+
+
+# ------------------------------------------------- failure semantics
+
+def test_crash_all_drops_everything():
+    """crash_prob=1: every upload dies client-side — the global never
+    moves and nothing is retried (a crashed client cannot retransmit)."""
+    h, g = run_spec(make_spec(faults=FaultSpec(crash_prob=1.0,
+                                               max_retries=3)))
+    assert h.dropped_clients == h.uploads_total > 0
+    assert h.retries == 0
+    assert all(d == [] for d in h.delivered)
+    assert trees_equal(g, init_params())
+
+
+def test_outage_retries_bounded_and_charged():
+    """outage_prob=1: every round is an outage round, deliveries blank,
+    and each failed upload retries exactly max_retries times (all in
+    vain) — charged to the round clock."""
+    retries = 2
+    base = make_spec(faults=FaultSpec(quarantine=False, outage_prob=1.0,
+                                      outage_rounds=1))
+    h0, g0 = run_spec(base)
+    h1, g1 = run_spec(make_spec(faults=FaultSpec(
+        quarantine=False, outage_prob=1.0, outage_rounds=1,
+        max_retries=retries)))
+    assert h0.winners == h1.winners
+    assert h1.upload_failures == h1.uploads_total > 0
+    assert h1.retries == retries * h1.uploads_total
+    assert h0.retries == 0
+    # the retry attempts burned backoff slots: strictly more time
+    assert sum(h1.round_seconds) > sum(h0.round_seconds)
+    assert trees_equal(g0, init_params())
+    assert trees_equal(g1, init_params())
+
+
+def test_retries_recover_channel_losses():
+    """With a lossy channel, HARQ retries can only ADD arrivals: every
+    round's delivered set is a superset of the retry-free run's, at a
+    wall-clock cost."""
+    ch = ChannelSpec(per_model="waterfall", per_snr_threshold_db=15.0)
+    h0, _ = run_spec(make_spec(channel=ch, faults=FaultSpec(
+        quarantine=False)))
+    h1, _ = run_spec(make_spec(channel=ch, faults=FaultSpec(
+        quarantine=False, max_retries=3)))
+    assert h0.winners == h1.winners
+    for d0, d1 in zip(h0.delivered, h1.delivered):
+        assert set(d0) <= set(d1)
+    assert h1.upload_failures <= h0.upload_failures
+    if h1.retries:
+        assert sum(h1.round_seconds) > sum(h0.round_seconds)
+
+
+def test_upload_conservation():
+    """Every attempt is exactly one of: crashed, arrived, lost."""
+    for fs in (FaultSpec(crash_prob=0.3, outage_prob=0.3, max_retries=1),
+               FaultSpec(crash_prob=0.5, straggle_prob=0.5),
+               FaultSpec(outage_prob=1.0)):
+        h, _ = run_spec(make_spec(faults=fs, channel=ChannelSpec(
+            per_model="waterfall", per_snr_threshold_db=10.0)))
+        arrived = sum(len(d) for d in h.delivered)
+        assert h.uploads_total == (h.dropped_clients + arrived
+                                   + h.upload_failures)
+
+
+@settings(max_examples=10, deadline=None)
+@given(crash=st.floats(min_value=0.0, max_value=1.0),
+       outage=st.floats(min_value=0.0, max_value=1.0),
+       retries=st.integers(min_value=0, max_value=3))
+def test_injector_conservation_property(crash, outage, retries):
+    """Injector-level conservation across random fault mixes: winners
+    partition into crashed / arrived / failed, and the retry count
+    never exceeds the budget."""
+    fs = FaultSpec(crash_prob=crash, outage_prob=outage,
+                   max_retries=retries, quarantine=False)
+    inj = FaultInjector(fs, 3, cw_base=64.0, tx_slots=10)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        winners = sorted(rng.choice(U, size=3, replace=False).tolist())
+        inj.begin_round()
+        rf = inj.process_uploads(winners, list(winners), None)
+        assert sorted(rf.crashed + rf.arrived + rf.failed) == winners
+        assert rf.retries <= retries * len(winners)
+        assert len(rf.retry_uploads) == rf.retries
+
+
+# ----------------------------------------------------- stale uploads
+
+def test_fault_alphas_joint_normalization():
+    sizes = [10, 30]
+    # no stale entries: exactly winner_alphas (bit-transparency)
+    w, sw = fault_alphas(U, [1, 2], sizes, [], 0.5)
+    assert np.array_equal(w, winner_alphas(U, [1, 2], sizes))
+    assert sw.shape == (0,)
+    # one stale user at half mass: joint normalization over 10+30+5
+    w, sw = fault_alphas(U, [1, 2], sizes, [10], 0.5)
+    assert np.isclose(w[1], 10 / 45) and np.isclose(w[2], 30 / 45)
+    assert np.isclose(sw[0], 5 / 45)
+    assert np.isclose(w.sum() + sw.sum(), 1.0)
+    # λ=0 drops stale entirely
+    w, sw = fault_alphas(U, [1], [10], [10], 0.0)
+    assert np.isclose(w[1], 1.0) and sw[0] == 0.0
+    # stale-only round still merges at full mass
+    w, sw = fault_alphas(U, [], [], [10, 10], 0.25)
+    assert w.sum() == 0.0 and np.isclose(sw.sum(), 1.0)
+
+
+def test_stragglers_merge_one_round_late():
+    """straggle_prob=1: every arrival is deferred; round t's merge
+    carries exactly round t-1's arrivals (stale_merges counts them),
+    and the global still moves (stale-only merges at full mass)."""
+    h, g = run_spec(make_spec(rounds=4, faults=FaultSpec(
+        straggle_prob=1.0, staleness_discount=0.5)))
+    arrived = [len(d) for d in h.delivered]
+    assert sum(arrived) > 0
+    # the last round's arrivals never merged; everything else did
+    assert h.stale_merges == sum(arrived[:-1])
+    assert not trees_equal(g, init_params())
+
+
+def test_staleness_discount_changes_merge():
+    """λ is a real dial: different discounts give different globals
+    when fresh and stale updates mix."""
+    def g_at(lam):
+        _, g = run_spec(make_spec(rounds=4, faults=FaultSpec(
+            straggle_prob=0.5, staleness_discount=lam)))
+        return g
+    assert not trees_equal(g_at(1.0), g_at(0.1))
+
+
+# ----------------------------------------------------- robust merge
+
+@pytest.mark.parametrize("mode", ["nan", "inf"])
+def test_quarantine_blocks_poison(mode):
+    """corrupt_prob=1 with quarantine: every fresh update is poisoned
+    and masked; the global never moves and stays finite."""
+    h, g = run_spec(make_spec(faults=FaultSpec(corrupt_prob=1.0,
+                                               corrupt_mode=mode)))
+    assert h.quarantined_updates == h.uploads_total > 0
+    assert trees_equal(g, init_params())
+
+
+def test_no_quarantine_lets_poison_through():
+    """The guard is load-bearing: quarantine=False with NaN corruption
+    poisons the global."""
+    _, g = run_spec(make_spec(faults=FaultSpec(
+        corrupt_prob=1.0, corrupt_mode="nan", quarantine=False)))
+    assert not all(np.isfinite(leaf).all() for leaf in jax.tree.leaves(g))
+
+
+def test_clip_bounds_scaled_corruption():
+    """Delta-norm clipping caps a scale-corrupted update: each round's
+    global step is bounded by clip_norm (convex combination of clipped
+    deltas), and the result stays finite."""
+    clip = 0.5
+    h, g = run_spec(make_spec(faults=FaultSpec(
+        corrupt_prob=1.0, corrupt_mode="scale", corrupt_scale=1e4,
+        clip_norm=clip)))
+    assert all(np.isfinite(leaf).all() for leaf in jax.tree.leaves(g))
+    delta = np.sqrt(sum(
+        float(((np.asarray(a) - np.asarray(b)) ** 2).sum())
+        for a, b in zip(jax.tree.leaves(g),
+                        jax.tree.leaves(init_params()))))
+    rounds_merged = sum(1 for d in h.delivered if d)
+    assert delta <= clip * rounds_merged * 1.01
+
+
+def test_robust_merge_clean_is_bit_exact_fedavg():
+    """With all-ones scales, no quarantine hits and no stale group,
+    robust_merge IS the masked fedavg — bit-for-bit."""
+    rng = np.random.default_rng(0)
+    K = 4
+    glob = {"w": rng.normal(size=(DIM,)).astype(np.float32),
+            "b": np.float32(0.3)}
+    stack = {"w": rng.normal(size=(K, DIM)).astype(np.float32),
+             "b": rng.normal(size=(K,)).astype(np.float32)}
+    w = winner_alphas(K, [0, 2], [10, 30])
+    out, nq = robust_merge(stack, w, np.ones(K, np.float32), glob,
+                           quarantine=True, clip_norm=0.0,
+                           use_kernel=False)
+    from repro.core.server import fedavg_masked
+    want = fedavg_masked(stack, jnp.asarray(w), use_kernel=False)
+    assert int(nq) == 0
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_robust_combine_kernel_oracle_parity():
+    """Pallas robust_combine (interpret mode) vs the jnp oracle."""
+    rng = np.random.default_rng(1)
+    K, D = 5, 300
+    stacked = rng.normal(size=(K, D)).astype(np.float32)
+    glob = rng.normal(size=(D,)).astype(np.float32)
+    w = rng.uniform(0, 1, K).astype(np.float32)
+    w[2] = 0.0                       # masked row
+    s = rng.uniform(0.1, 1.0, K).astype(np.float32)
+    s[1] = 1.0                       # exact-passthrough row
+    out_ref = np.asarray(ref.robust_combine_ref(stacked, w, s, glob))
+    out_k = np.asarray(ops.robust_combine(stacked, w, s, glob,
+                                          interpret=True))
+    np.testing.assert_allclose(out_k, out_ref, rtol=1e-6, atol=1e-6)
+    # scales == 1 reduces to the plain masked fedavg combine, bit-exact
+    ones = np.ones(K, np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ref.robust_combine_ref(stacked, w, ones, glob)),
+        np.asarray(ref.fedavg_combine_ref(stacked, w)))
+
+
+def test_all_quarantined_keeps_old_global_unit():
+    """Zero-alpha-guard extension: when every positive-weight row is
+    non-finite, the old global survives untouched."""
+    glob = {"w": np.arange(DIM, dtype=np.float32)}
+    stack = {"w": np.full((2, DIM), np.nan, np.float32)}
+    out, nq = robust_merge(stack, np.array([0.5, 0.5], np.float32),
+                           np.ones(2, np.float32), glob,
+                           use_kernel=False)
+    assert int(nq) == 2
+    np.testing.assert_array_equal(np.asarray(out["w"]), glob["w"])
+
+
+def test_silo_backend_rejects_fault_ctx():
+    backend = object.__new__(SiloBackend)     # merge() needs no state
+    with pytest.raises(ValueError, match="robust merge guard"):
+        SiloBackend.merge(backend, None, None, [], fault_ctx=object())
+
+
+# ------------------------------------------------ checkpoint/resume
+
+ACTIVE_FAULTS = FaultSpec(crash_prob=0.2, straggle_prob=0.3,
+                          corrupt_prob=0.2, outage_prob=0.2,
+                          max_retries=1, clip_norm=2.0)
+
+
+def _hist_equal(a, b):
+    return (a.winners == b.winners and a.delivered == b.delivered
+            and np.array_equal(a.selections, b.selections)
+            and a.round_seconds == b.round_seconds
+            and a.retries == b.retries
+            and a.stale_merges == b.stale_merges
+            and a.quarantined_updates == b.quarantined_updates)
+
+
+def test_run_checkpoint_resume_bit_identical():
+    """Per-round path: a run that wrote checkpoints, then a FRESH
+    engine resuming from the last one, matches the uninterrupted run
+    bit-for-bit (the checkpointed run itself must also match)."""
+    spec = make_spec(rounds=6, faults=ACTIVE_FAULTS,
+                     channel=ChannelSpec(per_model="waterfall"))
+    h_ref, g_ref = run_spec(spec, round_mode="stacked")
+    with tempfile.TemporaryDirectory() as d:
+        e1 = build_host_engine(spec, init_params(), loss_fn, DATA,
+                               round_mode="stacked")
+        h1 = e1.run(checkpoint_dir=d, checkpoint_every=2)
+        assert _hist_equal(h_ref, h1)
+        # fresh engine resumes from the t=3 checkpoint and finishes
+        e2 = build_host_engine(spec, init_params(), loss_fn, DATA,
+                               round_mode="stacked")
+        h2 = e2.run(checkpoint_dir=d)
+        assert _hist_equal(h_ref, h2)
+        assert trees_equal(g_ref, jax.device_get(e2.global_params))
+
+
+def test_sweep_checkpoint_resume_bit_identical():
+    """Sweep path (mid-sweep kill): E=3 lanes with channel + active
+    faults, resumed from the mid-run checkpoint, matches the
+    uninterrupted sweep lane-for-lane."""
+    ch = ChannelSpec(per_model="waterfall")
+    sw = SweepSpec(specs=[
+        make_spec(rounds=6, seed=7, faults=ACTIVE_FAULTS, channel=ch),
+        make_spec(rounds=6, seed=8, faults=ACTIVE_FAULTS, channel=ch),
+        make_spec(rounds=6, seed=9, strategy="random-distributed",
+                  faults=ACTIVE_FAULTS),
+    ])
+    e_ref = build_host_engine(sw.specs[0], init_params(), loss_fn, DATA)
+    r_ref = e_ref.run_sweep(sw)
+    with tempfile.TemporaryDirectory() as d:
+        e1 = build_host_engine(sw.specs[0], init_params(), loss_fn, DATA)
+        r1 = e1.run_sweep(sw, checkpoint_dir=d, checkpoint_every=2)
+        e2 = build_host_engine(sw.specs[0], init_params(), loss_fn, DATA)
+        r2 = e2.run_sweep(sw, checkpoint_dir=d)
+        for ha, hb, hc in zip(r_ref.histories, r1.histories,
+                              r2.histories):
+            assert _hist_equal(ha, hb)
+            assert _hist_equal(ha, hc)
+        assert trees_equal(jax.device_get(r_ref.final_globals),
+                           jax.device_get(r2.final_globals))
+
+
+def test_resume_rejects_spec_mismatch():
+    spec = make_spec(rounds=4, faults=FaultSpec())
+    with tempfile.TemporaryDirectory() as d:
+        e1 = build_host_engine(spec, init_params(), loss_fn, DATA,
+                               round_mode="stacked")
+        e1.run(checkpoint_dir=d, checkpoint_every=2)
+        other = make_spec(rounds=4, faults=FaultSpec(), seed=99)
+        e2 = build_host_engine(other, init_params(), loss_fn, DATA,
+                               round_mode="stacked")
+        with pytest.raises(ValueError, match="different experiment"):
+            e2.run(checkpoint_dir=d)

@@ -91,6 +91,35 @@ def _scenario_winners():
                 raise SystemExit(
                     f"FAIL: channel-off lane {key} merged globals are "
                     "not bit-equal to the no-channel reference")
+
+    # faults-off twins (PR 7): an inert FaultSpec() — every probability
+    # zero, retries off — must be the faults=None program EXACTLY: the
+    # fault streams are stream-4 spawn children nobody else consumes,
+    # and the inert robust merge reduces bit-for-bit to the plain
+    # masked Eq. 1 (renorm f = x/x = 1.0 exactly). Pinned under
+    # .../faults-off so a regression in either contract (a stray fault
+    # draw shifting shared streams, or the guarded merge perturbing
+    # clean rounds) can't slip through.
+    from repro.faults import FaultSpec
+    inert = [ExperimentSpec(rounds=ROUNDS, strategy=sp.strategy,
+                            seed=sp.seed, faults=FaultSpec())
+             for sp in specs]
+    engine_flt = build_host_engine(inert[0], params, loss_fn, user_data)
+    result_flt = engine_flt.run_sweep(inert)
+    for e, sp in enumerate(specs):
+        key = f"{sp.strategy}/seed{sp.seed}"
+        winners[f"{key}/faults-off"] = result_flt.histories[e].winners
+        if result_flt.histories[e].winners != winners[key]:
+            raise SystemExit(
+                f"FAIL: faults-off lane {key} diverged from the "
+                "no-faults reference winners — the fault layer is no "
+                "longer bit-transparent when inert")
+        for a, b in zip(jax.tree.leaves(result.lane_params(e)),
+                        jax.tree.leaves(result_flt.lane_params(e))):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise SystemExit(
+                    f"FAIL: faults-off lane {key} merged globals are "
+                    "not bit-equal to the no-faults reference")
     return winners
 
 

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""CI guard: kill-and-resume bit-identity for checkpointed sweeps
+(DESIGN.md §8).
+
+Spawns a child process that runs a checkpointed fault+channel sweep
+(``checkpoint_every=1``), SIGTERMs it as soon as the first checkpoint
+hits disk (a genuine mid-sweep kill — the child never finishes), then
+resumes from the orphaned checkpoint in-process and compares against an
+uninterrupted run of the same sweep: winner sequences, fault counters
+and merged globals must match bit-for-bit.
+
+    PYTHONPATH=src python tools/kill_resume_smoke.py
+
+Exit 0 on bit-identity, 1 on divergence.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+ROUNDS = 8
+
+
+def _scenario():
+    """One deterministic fault+channel sweep — child and parent must
+    build the identical program."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.channel import ChannelSpec
+    from repro.engine import ExperimentSpec, SweepSpec, build_host_engine
+    from repro.faults import FaultSpec
+
+    rng = np.random.default_rng(11)
+    data = [{"x": rng.normal(size=(32, 8)).astype(np.float32),
+             "y": rng.integers(0, 2, size=(32,)).astype(np.int32)}
+            for _ in range(8)]
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((logits - batch["y"]) ** 2)
+
+    params = {"w": jnp.zeros((8,), jnp.float32),
+              "b": jnp.zeros((), jnp.float32)}
+    faults = FaultSpec(crash_prob=0.2, straggle_prob=0.3,
+                       corrupt_prob=0.2, outage_prob=0.2,
+                       max_retries=1, clip_norm=2.0)
+    ch = ChannelSpec(per_model="waterfall")
+    sw = SweepSpec(specs=[
+        ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=5,
+                       faults=faults, channel=ch),
+        ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=6,
+                       strategy="random-distributed", faults=faults,
+                       channel=ch),
+    ])
+    engine = build_host_engine(sw.specs[0], params, loss_fn, data)
+    return engine, sw
+
+
+def _child(ckpt_dir: str) -> None:
+    engine, sw = _scenario()
+    engine.run_sweep(sw, checkpoint_dir=ckpt_dir, checkpoint_every=1)
+
+
+def main() -> int:
+    if "--child" in sys.argv:
+        _child(sys.argv[sys.argv.index("--child") + 1])
+        return 0
+
+    import tempfile
+
+    import jax
+    import numpy as np
+    from repro.checkpoint import checkpoint_path
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        child = subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--child",
+             ckpt_dir],
+            cwd=REPO, stdout=subprocess.DEVNULL,
+            stderr=subprocess.STDOUT)
+        path = checkpoint_path(ckpt_dir)
+        deadline = time.time() + 300
+        while not os.path.exists(path):
+            if child.poll() is not None:
+                print("FAIL: child exited before writing a checkpoint "
+                      f"(rc={child.returncode})")
+                return 1
+            if time.time() > deadline:
+                child.kill()
+                print("FAIL: no checkpoint after 300s")
+                return 1
+            time.sleep(0.05)
+        child.send_signal(signal.SIGTERM)
+        rc = child.wait()
+        print(f"killed child mid-sweep (rc={rc}), checkpoint on disk")
+
+        # reference: the same sweep, uninterrupted
+        engine_ref, sw = _scenario()
+        ref = engine_ref.run_sweep(sw)
+
+        # resume from the orphaned checkpoint with a FRESH engine
+        engine_res, sw2 = _scenario()
+        res = engine_res.run_sweep(sw2, checkpoint_dir=ckpt_dir)
+
+        for e, (ha, hb) in enumerate(zip(ref.histories, res.histories)):
+            if (ha.winners != hb.winners
+                    or ha.delivered != hb.delivered
+                    or ha.round_seconds != hb.round_seconds
+                    or (ha.retries, ha.dropped_clients,
+                        ha.quarantined_updates, ha.stale_merges)
+                    != (hb.retries, hb.dropped_clients,
+                        hb.quarantined_updates, hb.stale_merges)):
+                print(f"FAIL: lane {e} history diverged after resume")
+                return 1
+            for a, b in zip(jax.tree.leaves(ref.lane_params(e)),
+                            jax.tree.leaves(res.lane_params(e))):
+                if not np.array_equal(np.asarray(a), np.asarray(b)):
+                    print(f"FAIL: lane {e} resumed globals are not "
+                          "bit-equal to the uninterrupted run")
+                    return 1
+        print(f"OK: resumed sweep bit-identical to uninterrupted run "
+              f"({len(sw)} lanes x {ROUNDS} rounds, "
+              f"fault counters matched)")
+        return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
