@@ -35,11 +35,28 @@ Two implementations:
                         (``benchmarks/round_bench.py``).
                ragged   per-user jitted training (the seed path), when
                         users' batch counts differ and nothing stacks.
+               sparse   winner-sparse rounds (DESIGN.md §9): Eq. 2
+                        priorities are produced BEFORE selection
+                        (``sparse_priorities`` — an exact chunked
+                        train-and-discard prepass, or cached stale
+                        priorities), contention runs over the full
+                        population, and only the K winners' params +
+                        batches are gathered into a compact
+                        (K_max, ...) fused train step
+                        (``sparse_train``); the merge scatters the
+                        compact deltas back into the device-resident
+                        global. Per-round train FLOPs and peak memory
+                        scale with K instead of U.
 
-               All three are draw-for-draw equivalent: epoch batching
+               All paths are draw-for-draw equivalent: epoch batching
                stays on host with each client's own rng stream, so
                fixed seeds give identical winner sequences
-               (``tests/test_fused_round.py``).
+               (``tests/test_fused_round.py``; sparse-with-prepass vs
+               fused is additionally bit-identical on merged globals —
+               every Eq. 1 merge routes through ONE compact
+               ``kernels.ops.gather_combine`` whose reduce sees the
+               same (K, ...) gathered rows from either path,
+               tests/test_sparse.py).
   SiloBackend  the cross-silo TPU path: wraps silo.make_fl_round_step,
                so each "user" is a pod-scale silo and the merge is the
                selection-gated cross-pod collective.
@@ -60,13 +77,14 @@ from repro.checkpoint.fl_state import generator_state, restore_generator
 from repro.core.client import Client, batch_epoch, sgd_epoch_scan
 from repro.core.priority import model_priority, stacked_model_priorities
 from repro.core.rngs import client_rng
-from repro.core.server import fedavg, fedavg_masked, winner_alphas
+from repro.core.server import winner_alphas
 from repro.engine.types import TrainResult
 from repro.faults.robust import robust_merge
 from repro.kernels import ops as kops
 from repro.sharding.cohort import (cohort_sharding, replicated_sharding,
                                    shardable, sweep_global_sharding,
-                                   sweep_sharding, sweep_shardable)
+                                   sweep_sharding, sweep_shardable,
+                                   winner_sharding, winner_shardable)
 
 
 def label_heterogeneity(user_data: Sequence, num_classes: int = 10,
@@ -92,7 +110,34 @@ def label_heterogeneity(user_data: Sequence, num_classes: int = 10,
     rows = hists.sum(axis=1, keepdims=True)
     probs = hists / np.maximum(rows, 1.0)
     pop = hists.sum(axis=0) / max(hists.sum(), 1.0)
-    return 0.5 * np.abs(probs - pop[None]).sum(axis=1)
+    tv = 0.5 * np.abs(probs - pop[None]).sum(axis=1)
+    # a zero-example user has an all-zero probs row, which would score
+    # TV 0.5 against any population mix — maximal apparent divergence
+    # from NO evidence. Score empty users 0.0 instead.
+    return np.where(rows[:, 0] > 0, tv, 0.0)
+
+
+def compact_weights(k_pad: int, positions: Sequence[int],
+                    sizes: Sequence[float]):
+    """(idx, w) inputs of ``kernels.ops.gather_combine``: (k_pad,) int32
+    row indices and (k_pad,) f32 Eq. 1 merge weights, delivery-ordered
+    and zero-padded.
+
+    The weight math mirrors ``core.server.winner_alphas`` exactly
+    (float64 |D_k| normalization, then one cast), so the compact and
+    dense-masked formulations feed bit-identical per-row weights. Pad
+    rows carry index 0 and EXACT-zero weight — the masked reduce drops
+    them, and appending exact +0.0 terms leaves an f32 sum's bits
+    unchanged, so the pad width never leaks into the merged global.
+    """
+    idx = np.zeros(k_pad, np.int32)
+    w = np.zeros(k_pad, np.float32)
+    m = len(positions)
+    if m:
+        idx[:m] = positions
+        s = np.asarray(sizes, np.float64)
+        w[:m] = (s / s.sum()).astype(np.float32)
+    return idx, w
 
 
 @dataclass
@@ -172,27 +217,62 @@ class Backend:
     def sweep_capable(self) -> bool:
         return False
 
+    # ---- winner-sparse contract (optional; HostBackend round_mode
+    # "sparse" implements it — the engine then selects BEFORE training
+    # and trains only the winners) ------------------------------------
+    def sparse_capable(self) -> bool:
+        return False
+
+    def priority_cache_state(self):
+        """Stale-priority cache snapshot for checkpoint/resume, or None
+        when the backend keeps no such cache (everything but the sparse
+        path's "stale" priority mode)."""
+        return None
+
+    def restore_priority_cache(self, state) -> None:
+        if state is not None:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no priority cache to restore")
+
 
 class HostBackend(Backend):
     """Paper-scale simulation over host data. See module docstring for
     the fused / stacked / ragged round paths.
 
     ``round_mode``: "fused" (default), "stacked" (the PR-1 path, kept as
-    the benchmark baseline), or "ragged" (per-user jitted loop).
+    the benchmark baseline), "ragged" (per-user jitted loop), or
+    "sparse" (winner-sparse rounds; needs ``k_max``).
+    ``k_max``: the round's winner budget (the spec's ``k_per_round``) —
+    the compact merge pad width on every path, and the sparse path's
+    compact train width. ``sparse_priority`` / ``sparse_chunk``
+    configure the sparse path's Eq. 2 ordering (see
+    ``sparse_priorities``).
     ``mesh``: optional 1-axis ``jax.sharding`` mesh from
     ``sharding.cohort_mesh`` — the fused stack, batches and per-user
     outputs shard their leading cohort axis over it when the user count
-    divides the axis (no-op on one device).
+    divides the axis (no-op on one device); the sparse path shards its
+    compact K axis instead (``sharding.winner_sharding``).
     """
 
     def __init__(self, loss_fn, user_data: Sequence, *, lr: float = 1e-2,
                  batch_size: int = 32, local_epochs: int = 1, seed: int = 0,
                  prefer_vmap: bool = True, num_classes: int = 10,
-                 round_mode: Optional[str] = None, mesh=None):
+                 round_mode: Optional[str] = None, mesh=None,
+                 k_max: Optional[int] = None,
+                 sparse_priority: str = "prepass",
+                 sparse_chunk: int = 256):
         if round_mode is None:
             round_mode = "fused" if prefer_vmap else "ragged"
-        if round_mode not in ("fused", "stacked", "ragged"):
+        if round_mode not in ("fused", "stacked", "ragged", "sparse"):
             raise ValueError(f"unknown round_mode {round_mode!r}")
+        if round_mode == "sparse" and not k_max:
+            raise ValueError(
+                "round_mode='sparse' needs k_max (the spec's "
+                "k_per_round): it sizes the compact winner stack")
+        if sparse_priority not in ("prepass", "stale"):
+            raise ValueError(
+                f"unknown sparse_priority {sparse_priority!r}; "
+                "known: ('prepass', 'stale')")
         self.num_users = len(user_data)
         self.heterogeneity = label_heterogeneity(user_data, num_classes)
         self.seed = seed       # the clients' stream seed (engine checks
@@ -212,6 +292,9 @@ class HostBackend(Backend):
         self._lr = lr
         self._batch_size = batch_size
         self._local_epochs = local_epochs
+        self._k_max = int(k_max) if k_max else None
+        self._sparse_priority = sparse_priority
+        self._sparse_chunk = int(sparse_chunk)
         self._mesh = mesh
         self._shard = shardable(self.num_users, mesh)
         # Pallas under GSPMD needs custom partitioning; when the cohort
@@ -238,6 +321,13 @@ class HostBackend(Backend):
         ns = {c.num_examples for c in self.clients}
         self._rect = (len(ns) == 1
                       and batch_size <= self.clients[0].num_examples)
+        if self._mode == "sparse" and not self._rect:
+            raise ValueError(
+                "round_mode='sparse' needs a rectangular cohort (equal "
+                "per-user example counts >= batch_size): the prepass "
+                "and compact gather-K train steps stack user data into "
+                "one (U, n, ...) tensor; use round_mode=None (auto) or "
+                "'ragged' for uneven cohorts")
         self._xstack = None        # (U, n, ...) pre-stacked user data
         self._fused_round = None
         self._fused_merge_fn = None
@@ -253,6 +343,15 @@ class HostBackend(Backend):
         # never traces them
         self._fused_fault_fns = {}
         self._sweep_fault_fns = {}
+        # ---- sparse-path state (built lazily on first sparse round) --
+        self._sparse_round = None     # compact (K_max, ...) train jit
+        self._sparse_bcast = None
+        self._prepass_fn = None       # chunked train-and-discard jit
+        self._stale_prios = None      # (U,) f64 last-trained priorities
+        self._pending_big = None      # this round's (U, ep*take) perms
+        self._sweep_sparse_fns = {}   # E -> sparse sweep jits
+        self._sweep_stale_prios = {}  # E -> (E, U) f64 cache
+        self._pending_sweep_big = None
 
     # ------------------------------------------------------------------
     def init_state(self, init_params):
@@ -287,6 +386,24 @@ class HostBackend(Backend):
         for c in self.clients:
             c.data = jax.tree.map(lambda leaf: leaf[c.uid], self._xstack)
 
+    def _merge_def(self, uk):
+        """The ONE Eq. 1 merge program every digital path jits: gather
+        the ``idx`` rows out of the trained stack (dense path: winner
+        ids into (U, ...); sparse path: positions into (K_max, ...)),
+        reduce under the compact weights, keep ``old_glob`` when no
+        weight is nonzero. ``old_glob`` is NOT donated — on round 0 it
+        may still be the caller's init_params."""
+        def fused_merge(trained, idx, w, old_glob):
+            new_glob = jax.tree.map(
+                lambda l, g: kops.gather_combine(l, idx, w, g,
+                                                 use_kernel=uk),
+                trained, old_glob)
+            new_stack = jax.tree.map(
+                lambda g, l: jnp.broadcast_to(g[None], l.shape),
+                new_glob, trained)
+            return new_glob, new_stack
+        return fused_merge
+
     def _build_fused(self):
         U = self.num_users
         self._ensure_xstack()
@@ -312,13 +429,7 @@ class HostBackend(Backend):
                 prios = jnp.ones((U,), jnp.float32)
             return trained, loss_u, prios
 
-        def fused_merge(trained, alphas):
-            new_glob = fedavg_masked(trained, alphas, use_kernel=uk)
-            new_stack = jax.tree.map(
-                lambda g, l: jnp.broadcast_to(g[None], l.shape),
-                new_glob, trained)
-            return new_glob, new_stack
-
+        fused_merge = self._merge_def(uk)
         if self._shard:
             cs = cohort_sharding(self._mesh)
             rep = replicated_sharding(self._mesh)
@@ -328,18 +439,18 @@ class HostBackend(Backend):
                 in_shardings=(cs, cs), out_shardings=(cs, cs, cs))
             self._fused_merge_fn = jax.jit(
                 fused_merge, donate_argnums=0,
-                in_shardings=(cs, rep), out_shardings=(rep, cs))
+                in_shardings=(cs, rep, rep, rep), out_shardings=(rep, cs))
         else:
             self._bcast = jax.jit(bcast)
             self._fused_round = jax.jit(fused_round, static_argnums=2,
                                         donate_argnums=0)
             self._fused_merge_fn = jax.jit(fused_merge, donate_argnums=0)
 
-    def _fused_batches(self):
-        """(U, E*nb, bs, ...) round batches: every client draws one
-        epoch permutation per epoch from ITS OWN rng stream — the exact
-        draws of the stacked / ragged paths — then one fancy-index over
-        the pre-stacked data replaces U per-user gathers + np.stack."""
+    def _draw_big(self):
+        """(U, ep*take) epoch-permutation index matrix for ONE round:
+        every client draws one permutation per local epoch from ITS OWN
+        rng stream — the exact draws of the stacked / ragged paths —
+        laid out with each user's epochs concatenated."""
         U, bs, nb, E = (self.num_users, self._batch_size, self._nb,
                         self._local_epochs)
         n = self.clients[0].num_examples
@@ -348,30 +459,48 @@ class HostBackend(Backend):
         for e in range(E):
             for c in self.clients:
                 perms[e, c.uid] = c._rng.permutation(n)[:take]
-        big = perms.transpose(1, 0, 2).reshape(U, E * take)
-        rows = np.arange(U)[:, None]
+        return perms.transpose(1, 0, 2).reshape(U, E * take)
+
+    def _gather_rows(self, rows, big_rows):
+        """(R, ep*nb, bs, ...) round batches for the data rows ``rows``
+        (user ids) under the per-row index matrix ``big_rows``
+        ((R, ep*take) slice of ``_draw_big``'s output): one fancy-index
+        over the pre-stacked data replaces R per-user gathers."""
+        R = len(rows)
+        bs, nb, E = self._batch_size, self._nb, self._local_epochs
+        r = np.asarray(rows, np.int64)[:, None]
         return jax.tree.map(
-            lambda leaf: leaf[rows, big].reshape(
-                (U, E * nb, bs) + leaf.shape[2:]),
+            lambda leaf: leaf[r, big_rows].reshape(
+                (R, E * nb, bs) + leaf.shape[2:]),
             self._xstack)
 
+    def _fused_batches(self):
+        """(U, E*nb, bs, ...) full-cohort round batches."""
+        big = self._draw_big()
+        return self._gather_rows(np.arange(self.num_users), big)
+
     def _build_fused_air(self):
-        """AirComp twin of ``fused_merge``: per-leaf noisy superposition
-        through ``kernels.ops.aircomp_combine`` (per-leaf receiver noise
-        from a fold_in of the round key), same donation / residency
-        contract as the digital merge. Built lazily — a fedavg-only run
+        """AirComp twin of ``fused_merge``: gather the ``idx`` rows,
+        then per-leaf noisy superposition through
+        ``kernels.ops.aircomp_combine`` (per-leaf receiver noise from a
+        fold_in of the round key), same donation / residency contract
+        as the digital merge. The compact (k_pad,) alphas / coeffs are
+        host-assembled identically for the dense and sparse paths, so
+        the rescale ``Σa / Σ(a·c)`` — an order-sensitive f32 sum — is
+        bit-identical between them. Built lazily — a fedavg-only run
         never traces it, keeping the no-channel program untouched."""
         uk = self._use_kernel
 
-        def fused_merge_air(trained, alphas, coeffs, sigma, key):
+        def fused_merge_air(trained, idx, alphas, coeffs, sigma, key):
             leaves, treedef = jax.tree.flatten(trained)
             merged = []
             for i, leaf in enumerate(leaves):
                 noise = sigma * jax.random.normal(
                     jax.random.fold_in(key, i), leaf.shape[1:],
                     jnp.float32)
+                rows = jnp.take(leaf, idx, axis=0)
                 merged.append(kops.aircomp_combine(
-                    leaf, alphas, coeffs, noise, use_kernel=uk))
+                    rows, alphas, coeffs, noise, use_kernel=uk))
             new_glob = jax.tree.unflatten(treedef, merged)
             new_stack = jax.tree.map(
                 lambda g, l: jnp.broadcast_to(g[None], l.shape),
@@ -456,39 +585,75 @@ class HostBackend(Backend):
 
     def extract_local(self, train_result, u):
         """User u's trained params as freshly materialized arrays, safe
-        to hold across the merge (which donates the fused / stacked
-        handle buffers) — the fault layer's stale-upload capture."""
+        to hold across the merge (which donates the fused / stacked /
+        sparse handle buffers) — the fault layer's stale-upload
+        capture."""
         handle = train_result.local_handle
         if isinstance(handle, dict) and "fused_stack" in handle:
             return jax.tree.map(lambda p: p[u], handle["fused_stack"])
+        if isinstance(handle, dict) and "sparse_stack" in handle:
+            j = handle["winners"].index(int(u))
+            return jax.tree.map(lambda p: p[j], handle["sparse_stack"])
         return self._local(handle, u)
+
+    def _k_pad(self, m: int) -> int:
+        """Compact merge width: ``k_max`` when set (so every round's
+        merge — and the dense/sparse path pair — pads identically and
+        the jitted programs never retrace on the delivery count), else
+        the delivery count itself."""
+        if self._k_max and m <= self._k_max:
+            return self._k_max
+        return max(m, 1)
 
     def merge(self, state, train_result, winners, merge_ctx=None,
               fault_ctx=None):
         handle = train_result.local_handle
-        if isinstance(handle, dict) and "fused_stack" in handle:
+        is_fused = isinstance(handle, dict) and "fused_stack" in handle
+        is_sparse = isinstance(handle, dict) and "sparse_stack" in handle
+        if is_fused or is_sparse:
+            key = "fused_stack" if is_fused else "sparse_stack"
+            trained = handle[key]
+            winners = [int(u) for u in winners]
+            # row indices into the trained stack: user ids for the dense
+            # (U, ...) stack, delivery positions for the compact one
+            pos = (winners if is_fused
+                   else [handle["winners"].index(u) for u in winners])
+            m = len(winners)
+            k_pad = self._k_pad(m)
+            if trained is None:
+                # sparse round with no winners (all collided): nothing
+                # trained; only a stale-only robust merge can land here
+                assert fault_ctx is not None and not winners
+                return self._gather_merge_faults(state, handle, [],
+                                                 fault_ctx)
             if fault_ctx is not None:
+                idx, _ = compact_weights(k_pad, pos, [1] * m)
                 new_glob, new_stack = self._merge_fused_faults(
-                    state, handle, fault_ctx)
-                handle["fused_stack"] = None  # donated into the stack
-                self._resident = new_stack
-                self._resident_key = new_glob
-                return new_glob
-            alphas = winner_alphas(
-                self.num_users, winners,
-                [self.clients[u].num_examples for u in winners])
-            if merge_ctx is None:
-                new_glob, new_stack = self._fused_merge_fn(
-                    handle["fused_stack"], jnp.asarray(alphas))
+                    state, trained, idx, winners, fault_ctx)
             else:
-                if self._fused_merge_air is None:
-                    self._build_fused_air()
-                new_glob, new_stack = self._fused_merge_air(
-                    handle["fused_stack"], jnp.asarray(alphas),
-                    jnp.asarray(merge_ctx.coeffs, jnp.float32),
-                    jnp.asarray(merge_ctx.noise_sigma, jnp.float32),
-                    merge_ctx.key)
-            handle["fused_stack"] = None     # buffer donated into the stack
+                idx, w = compact_weights(
+                    k_pad, pos,
+                    [self.clients[u].num_examples for u in winners])
+                if merge_ctx is None:
+                    new_glob, new_stack = self._fused_merge_fn(
+                        trained, jnp.asarray(idx), jnp.asarray(w), state)
+                else:
+                    if self._fused_merge_air is None:
+                        self._build_fused_air()
+                    # pad slots gather user 0's coefficient; their zero
+                    # alpha masks it to an exact-zero term either way,
+                    # and the vector is uid-built so dense and sparse
+                    # assemble the SAME compact coeffs
+                    uids = np.zeros(k_pad, np.int64)
+                    uids[:m] = winners
+                    coeffs = np.asarray(merge_ctx.coeffs,
+                                        np.float32)[uids]
+                    new_glob, new_stack = self._fused_merge_air(
+                        trained, jnp.asarray(idx), jnp.asarray(w),
+                        jnp.asarray(coeffs),
+                        jnp.asarray(merge_ctx.noise_sigma, jnp.float32),
+                        merge_ctx.key)
+            handle[key] = None               # buffer donated into the stack
             self._resident = new_stack       # stays on device for round t+1
             self._resident_key = new_glob
             return new_glob
@@ -503,22 +668,36 @@ class HostBackend(Backend):
         models = [self._local(handle, u) for u in winners]
         sizes = [self.clients[u].num_examples for u in winners]
         if merge_ctx is None:
-            return fedavg(models, sizes)
+            # same compact combine as the fused/sparse paths (positions
+            # into the gathered stack), so partial-cohort rounds merge
+            # bit-identically to the full-cohort formulations
+            idx, w = compact_weights(self._k_pad(len(models)),
+                                     list(range(len(models))), sizes)
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *models)
+            return jax.tree.map(
+                lambda l, g: kops.gather_combine(
+                    l, idx, w, g, use_kernel=self._use_kernel),
+                stacked, state)
         return self._gather_merge_air(models, sizes, winners, merge_ctx)
 
     # ----------------------------------------- robust merge twins (§8)
     def _build_fused_fault(self, key):
-        """Robust-guard twin of ``fused_merge``: the same donated,
-        device-resident merge step routed through ``robust_merge``.
-        The old global is an extra input (delta-space guard reference)
-        and is NOT donated — on round 0 it may still be the caller's
+        """Robust-guard twin of ``fused_merge``: gather the merge
+        candidates' rows out of the trained stack, then the same
+        donated, device-resident merge step routed through
+        ``robust_merge`` over the compact (k_pad, ...) group. The old
+        global is an extra input (delta-space guard reference) and is
+        NOT donated — on round 0 it may still be the caller's
         init_params."""
         M, quarantine, clip = key
         uk = self._use_kernel
 
-        def fused_fault(trained, weights, corrupt, old_glob, *stale_args):
+        def fused_fault(trained, idx, weights, corrupt, old_glob,
+                        *stale_args):
             stale, stale_w = stale_args if M else (None, None)
-            glob, nq = robust_merge(trained, weights, corrupt, old_glob,
+            rows = jax.tree.map(lambda l: jnp.take(l, idx, axis=0),
+                                trained)
+            glob, nq = robust_merge(rows, weights, corrupt, old_glob,
                                     stale, stale_w, quarantine=quarantine,
                                     clip_norm=clip, use_kernel=uk)
             stack = jax.tree.map(
@@ -530,17 +709,28 @@ class HostBackend(Backend):
         self._fused_fault_fns[key] = fn
         return fn
 
-    def _merge_fused_faults(self, state, handle, ctx):
+    def _merge_fused_faults(self, state, trained, idx, winners, ctx):
+        """Compact the dense (U,) fault-context weight / corruption
+        vectors down to the (k_pad,) merge candidates (pads: exact-zero
+        weight, corruption factor 1.0 = the bit-level passthrough
+        branch) and dispatch the robust merge twin."""
+        m = len(winners)
+        k_pad = idx.shape[0]
+        w = np.zeros(k_pad, np.float32)
+        c = np.ones(k_pad, np.float32)
+        if m:
+            sel = [int(u) for u in winners]
+            w[:m] = np.asarray(ctx.weights, np.float32)[sel]
+            c[:m] = np.asarray(ctx.corrupt, np.float32)[sel]
         key = (len(ctx.stale), bool(ctx.quarantine), float(ctx.clip_norm))
         fn = self._fused_fault_fns.get(key) or self._build_fused_fault(key)
-        args = [handle["fused_stack"],
-                jnp.asarray(ctx.weights, jnp.float32),
-                jnp.asarray(ctx.corrupt, jnp.float32), state]
+        args = [trained, jnp.asarray(idx), jnp.asarray(w),
+                jnp.asarray(c), state]
         if ctx.stale:
             args.append(jax.tree.map(
                 lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
                 *[p for p, _ in ctx.stale]))
-            args.append(jnp.asarray([w for _, w in ctx.stale],
+            args.append(jnp.asarray([w_ for _, w_ in ctx.stale],
                                     jnp.float32))
         new_glob, new_stack, nq = fn(*args)
         ctx.n_quarantined = int(nq)
@@ -591,6 +781,170 @@ class HostBackend(Backend):
                 use_kernel=self._use_kernel))
         return jax.tree.unflatten(treedef, merged)
 
+    # ------------------------------------------- winner-sparse path (§9)
+    # Contention-first rounds: Eq. 2 priorities are produced BEFORE
+    # selection, then only the K winners' params + batches are gathered
+    # into a compact (K_max, ...) fused train step and the merged delta
+    # scatters back into the device-resident global. Per-round train
+    # FLOPs and peak memory scale with K, not U.
+    def sparse_capable(self) -> bool:
+        return (self._mode == "sparse" and self._rect
+                and bool(self._k_max))
+
+    def _build_sparse(self):
+        K = self._k_max
+        self._ensure_xstack()
+        nb, epoch_run = self._nb, self._epoch_run
+        shard = (self._mesh is not None
+                 and winner_shardable(K, self._mesh))
+        # same rule as the fused path: Pallas under real GSPMD
+        # partitioning needs custom partitioning, so a >1-way K split
+        # routes the reductions through the jnp oracle
+        uk = (not shard) or self._mesh.size == 1
+        self._sparse_uk = uk
+
+        def bcast_k(g):
+            return jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (K,) + p.shape), g)
+
+        def sparse_round(stack, batched):
+            # rows are identical at round start (broadcast global), so
+            # row 0 is the Eq. 2 reference — same trick as fused_round.
+            # Priorities are always computed: K rows are cheap, and the
+            # "stale" mode feeds them back into its cache.
+            glob = jax.tree.map(lambda p: p[0], stack)
+            trained, losses = jax.vmap(epoch_run)(stack, batched)
+            loss_k = losses[:, -nb:].mean(axis=1)
+            prios = stacked_model_priorities(trained, glob, use_kernel=uk)
+            return trained, loss_k, prios
+
+        def prepass_chunk(glob, batched):
+            # exact Eq. 2 over one chunk: train-and-discard — only the
+            # (C,) losses/priorities leave the call, so peak memory is
+            # O(chunk · params) regardless of U. Per-row results of a
+            # width-C vmap are bitwise equal to the width-U dense vmap's
+            # rows, which is what makes prepass priorities (and the
+            # winner retrain below) bit-identical to the fused path.
+            C = jax.tree.leaves(batched)[0].shape[0]
+            stack = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (C,) + p.shape), glob)
+            trained, losses = jax.vmap(epoch_run)(stack, batched)
+            loss_c = losses[:, -nb:].mean(axis=1)
+            prios = stacked_model_priorities(trained, glob, use_kernel=uk)
+            return loss_c, prios
+
+        fused_merge = self._merge_def(uk)
+        if shard:
+            ks = winner_sharding(self._mesh)
+            rep = replicated_sharding(self._mesh)
+            self._sparse_bcast = jax.jit(bcast_k, out_shardings=ks)
+            self._sparse_round = jax.jit(
+                sparse_round, donate_argnums=0,
+                in_shardings=(ks, ks), out_shardings=(ks, rep, rep))
+            self._fused_merge_fn = jax.jit(
+                fused_merge, donate_argnums=0,
+                in_shardings=(ks, rep, rep, rep), out_shardings=(rep, ks))
+        else:
+            self._sparse_bcast = jax.jit(bcast_k)
+            self._sparse_round = jax.jit(sparse_round, donate_argnums=0)
+            self._fused_merge_fn = jax.jit(fused_merge, donate_argnums=0)
+        self._prepass_fn = jax.jit(prepass_chunk)
+
+    def sparse_priorities(self, state, need_priority: bool):
+        """Pre-selection Eq. 2: ``(priorities (U,) f64, losses | None)``.
+
+        "prepass" mode draws the round's FULL epoch permutations (every
+        client's stream, the dense path's exact draws — cached for the
+        winner retrain) and, when priorities are needed, runs the
+        chunked train-and-discard prepass for bit-exact priorities and
+        losses. "stale" mode serves each user's last-trained priority
+        from the cache (ones before first contact) at O(K) FLOPs and
+        O(winners) stream draws — distributional parity only.
+        """
+        if self._sparse_round is None:
+            self._build_sparse()
+        U = self.num_users
+        if self._sparse_priority == "stale":
+            if not need_priority:
+                return np.ones(U), None
+            if self._stale_prios is None:
+                self._stale_prios = np.ones(U, np.float64)
+            return self._stale_prios.copy(), None
+        self._pending_big = big = self._draw_big()
+        if not need_priority:
+            return np.ones(U), None
+        C = max(1, min(self._sparse_chunk, U))
+        losses = np.empty(U)
+        prios = np.empty(U)
+        for lo in range(0, U, C):
+            rows = np.arange(lo, min(lo + C, U))
+            l, p = self._prepass_fn(state, self._gather_rows(
+                rows, big[rows]))
+            losses[lo:lo + len(rows)] = np.asarray(l, np.float64)
+            prios[lo:lo + len(rows)] = np.asarray(p, np.float64)
+        return prios, losses
+
+    def sparse_train(self, state, winners: List[int]) -> TrainResult:
+        """Compact winner training: gather the K winners' batches (from
+        the prepass draws when present, else fresh winner-only draws)
+        and run the (K_max, ...) fused step. Pad rows re-train user 0's
+        data and ride with zero merge weight. Returns a
+        ``{"sparse_stack", "winners"}`` handle for ``merge``."""
+        if self._sparse_round is None:
+            self._build_sparse()
+        K, m = self._k_max, len(winners)
+        if m > K:
+            raise ValueError(f"{m} winners exceed k_max={K}")
+        big, self._pending_big = self._pending_big, None
+        if not m and big is None:
+            # nothing to train and no streams were consumed: keep the
+            # resident stack (if any) for the next round
+            return TrainResult(losses={}, priorities=np.ones(
+                self.num_users), local_handle={"sparse_stack": None,
+                                               "winners": []})
+        rows = np.zeros(K, np.int64)
+        rows[:m] = [int(u) for u in winners]
+        if big is not None:
+            big_rows = big[rows]
+        else:
+            # "stale" mode: only the WINNERS' streams advance — pad
+            # rows ride on index 0 (example-0 batches, zero-weight)
+            bs, nb, E = self._batch_size, self._nb, self._local_epochs
+            n = self.clients[0].num_examples
+            take = nb * bs
+            big_rows = np.zeros((K, E * take), np.int64)
+            for j in range(m):
+                u = rows[j]
+                for e in range(E):
+                    big_rows[j, e * take:(e + 1) * take] = \
+                        self.clients[u]._rng.permutation(n)[:take]
+        batched = self._gather_rows(rows, big_rows)
+        if self._resident is not None and self._resident_key is state:
+            stack = self._resident
+        else:
+            stack = self._sparse_bcast(state)
+        self._resident = self._resident_key = None
+        trained, loss_k, prios_k = self._sparse_round(stack, batched)
+        if self._sparse_priority == "stale" and m:
+            if self._stale_prios is None:
+                self._stale_prios = np.ones(self.num_users, np.float64)
+            self._stale_prios[rows[:m]] = \
+                np.asarray(prios_k, np.float64)[:m]
+        lk = np.asarray(loss_k, np.float64)
+        return TrainResult(
+            losses={int(u): float(lk[j]) for j, u in enumerate(winners)},
+            priorities=np.ones(self.num_users),
+            local_handle={"sparse_stack": trained,
+                          "winners": [int(u) for u in winners]})
+
+    def priority_cache_state(self):
+        return (None if self._stale_prios is None
+                else self._stale_prios.copy())
+
+    def restore_priority_cache(self, state) -> None:
+        if state is not None:
+            self._stale_prios = np.asarray(state, np.float64).copy()
+
     # -------------------------------------------------- sweep round path
     # E independent experiments as ONE device program (DESIGN.md §5):
     # the fused round step vmapped over a leading experiment axis, so
@@ -636,18 +990,17 @@ class HostBackend(Backend):
                 prios = jnp.ones((E, U), jnp.float32)
             return trained, loss_u, prios
 
-        def sweep_merge(trained, alphas, old_glob):
-            # masked Eq. 1 per lane; lanes whose alpha row is all-zero
-            # (winnerless round) keep their old global — the in-graph
-            # twin of the single path's "skip merge, rebuild from state"
-            merged = jax.vmap(
-                lambda s, a: fedavg_masked(s, a, use_kernel=uk))(
-                    trained, alphas)
-            has = alphas.sum(axis=1) > 0                      # (E,)
-            glob = jax.tree.map(
-                lambda m, o: jnp.where(
-                    has.reshape((E,) + (1,) * (m.ndim - 1)), m, o),
-                merged, old_glob)
+        def sweep_merge(trained, idx, w, old_glob):
+            # compact Eq. 1 per lane — the vmapped twin of the single
+            # path's gather_combine merge; its in-op all-zero-weight
+            # guard keeps a winnerless lane's old global per-lane (the
+            # in-graph twin of "skip merge, rebuild from state")
+            def one(tr_e, i_e, w_e, g_e):
+                return jax.tree.map(
+                    lambda l, g: kops.gather_combine(l, i_e, w_e, g,
+                                                     use_kernel=uk),
+                    tr_e, g_e)
+            glob = jax.vmap(one)(trained, idx, w, old_glob)
             stack = jax.tree.map(
                 lambda g, tr: jnp.broadcast_to(g[:, None], tr.shape),
                 glob, trained)
@@ -661,15 +1014,15 @@ class HostBackend(Backend):
                 jax.jit(sweep_round, static_argnums=2, donate_argnums=0,
                         in_shardings=(ss, ss),
                         out_shardings=(ss, ss, ss)),
-                jax.jit(sweep_merge, donate_argnums=(0, 2),
-                        in_shardings=(ss, ss, gs),
+                jax.jit(sweep_merge, donate_argnums=(0, 3),
+                        in_shardings=(ss, gs, gs, gs),
                         out_shardings=(gs, ss)),
             )
         else:
             fns = (
                 jax.jit(bcast),
                 jax.jit(sweep_round, static_argnums=2, donate_argnums=0),
-                jax.jit(sweep_merge, donate_argnums=(0, 2)),
+                jax.jit(sweep_merge, donate_argnums=(0, 3)),
             )
         self._sweep_fns[E] = fns
         return fns
@@ -693,15 +1046,11 @@ class HostBackend(Backend):
                 for s in seeds]
         return SweepState(num_lanes=E, glob=glob, stack=stack, rngs=rngs)
 
-    def sweep_batches(self, st: SweepState):
-        """(E, U, epochs*nb, bs, ...) round batches, one fancy-index.
-
-        Per (lane, user): one epoch permutation per local epoch from
+    def _draw_sweep_big(self, st: SweepState):
+        """(E, U, ep*take) epoch-permutation index tensor for one sweep
+        round: per (lane, user) one permutation per local epoch from
         that lane/user's OWN stream, in epoch order — the draws a
-        sequential fused run of the lane would make — then a single
-        gather over the shared (U, n, ...) data stack builds every
-        lane's round batches at once (the data is read-only and shared;
-        only the index tensor is per-lane)."""
+        sequential fused run of the lane would make."""
         E, U = st.num_lanes, self.num_users
         bs, nb, ep = self._batch_size, self._nb, self._local_epochs
         n = self.clients[0].num_examples
@@ -711,7 +1060,15 @@ class HostBackend(Backend):
             for k in range(ep):
                 for u in range(U):
                     perms[e, k, u] = st.rngs[e][u].permutation(n)[:take]
-        big = perms.transpose(0, 2, 1, 3).reshape(E, U, ep * take)
+        return perms.transpose(0, 2, 1, 3).reshape(E, U, ep * take)
+
+    def sweep_batches(self, st: SweepState):
+        """(E, U, epochs*nb, bs, ...) round batches, one fancy-index
+        over the shared (U, n, ...) data stack (the data is read-only
+        and shared; only the index tensor is per-lane)."""
+        E, U = st.num_lanes, self.num_users
+        bs, nb, ep = self._batch_size, self._nb, self._local_epochs
+        big = self._draw_sweep_big(st)
         rows = np.arange(U)[None, :, None]
         return jax.tree.map(
             lambda leaf: leaf[rows, big].reshape(
@@ -729,48 +1086,67 @@ class HostBackend(Backend):
                                 priorities=prios)
 
     def sweep_merge(self, st: SweepState, tr: SweepTrainResult,
-                    alphas: np.ndarray, merge_ctx=None) -> None:
-        """Dispatch the batched masked merge; the trained stack is
+                    idx: np.ndarray, w: np.ndarray, merge_ctx=None,
+                    uids=None) -> None:
+        """Dispatch the batched compact merge; the trained stack is
         donated in, and the merged (glob, stack) become the resident
-        device state for the next round. ``merge_ctx`` is the sweep
-        MergeContext (stacked (E, U) coeffs / (E,) sigmas / (E, 2)
-        keys) routing every lane through the AirComp program."""
+        device state for the next round.
+
+        ``idx`` / ``w``: (E, k_pad) per-lane row indices into the
+        trained stack (user ids on the dense sweep, positions on the
+        sparse one) + compact Eq. 1 weights, zero-padded. ``merge_ctx``
+        is the sweep MergeContext (stacked (E, U) coeffs / (E,) sigmas
+        / (E, 2) keys) routing every lane through the AirComp program;
+        ``uids`` then carries the (E, k_pad) USER ids backing each
+        compact slot (== idx on the dense sweep) for the host-side
+        coefficient gather."""
         trained, tr.trained = tr.trained, None
         if merge_ctx is None:
-            _, _, mrg = self._sweep_fns[st.num_lanes]
-            st.glob, st.stack = mrg(trained, jnp.asarray(alphas), st.glob)
+            if self._mode == "sparse":
+                mrg = (self._sweep_sparse_fns.get(st.num_lanes)
+                       or self._build_sweep_sparse_fns(st.num_lanes))[2]
+            else:
+                _, _, mrg = self._sweep_fns.get(st.num_lanes) or \
+                    self._build_sweep_fns(st.num_lanes)
+            st.glob, st.stack = mrg(trained, jnp.asarray(idx),
+                                    jnp.asarray(w), st.glob)
             return
         mrg = (self._sweep_air_fns.get(st.num_lanes)
                or self._build_sweep_air(st.num_lanes))
+        E = st.num_lanes
+        coeffs = np.asarray(merge_ctx.coeffs, np.float32)[
+            np.arange(E)[:, None], np.asarray(uids, np.int64)]
         st.glob, st.stack = mrg(
-            trained, jnp.asarray(alphas),
-            jnp.asarray(merge_ctx.coeffs, jnp.float32),
+            trained, jnp.asarray(idx), jnp.asarray(w),
+            jnp.asarray(coeffs),
             jnp.asarray(merge_ctx.noise_sigma, jnp.float32),
             merge_ctx.key, st.glob)
 
     def _build_sweep_air(self, E: int):
         """AirComp twin of the sweep merge: vmap the per-leaf noisy
-        superposition over the lane axis (per-lane power-control coeffs,
-        receiver sigma and noise key), with the same all-zero-alpha
-        keep-old-global guard and donation chain as the digital merge."""
+        superposition over the lane axis (per-lane compact winner rows,
+        power-control coeffs, receiver sigma and noise key), with the
+        same all-zero-alpha keep-old-global guard and donation chain as
+        the digital merge."""
         U, uk = self.num_users, self._use_kernel
         if (self._mesh is not None and sweep_shardable(E, U, self._mesh)):
             uk = uk and self._mesh.size == 1
 
-        def one_lane(trained, alphas, coeffs, sigma, key):
+        def one_lane(trained, idx, alphas, coeffs, sigma, key):
             leaves, treedef = jax.tree.flatten(trained)
             merged = []
             for i, leaf in enumerate(leaves):
+                rows = jnp.take(leaf, idx, axis=0)
                 noise = sigma * jax.random.normal(
                     jax.random.fold_in(key, i), leaf.shape[1:],
                     jnp.float32)
                 merged.append(kops.aircomp_combine(
-                    leaf, alphas, coeffs, noise, use_kernel=uk))
+                    rows, alphas, coeffs, noise, use_kernel=uk))
             return jax.tree.unflatten(treedef, merged)
 
-        def sweep_merge_air(trained, alphas, coeffs, sigmas, keys,
+        def sweep_merge_air(trained, idx, alphas, coeffs, sigmas, keys,
                             old_glob):
-            merged = jax.vmap(one_lane)(trained, alphas, coeffs,
+            merged = jax.vmap(one_lane)(trained, idx, alphas, coeffs,
                                         sigmas, keys)
             has = alphas.sum(axis=1) > 0                      # (E,)
             glob = jax.tree.map(
@@ -782,15 +1158,182 @@ class HostBackend(Backend):
                 glob, trained)
             return glob, stack
 
-        fn = jax.jit(sweep_merge_air, donate_argnums=(0, 5))
+        fn = jax.jit(sweep_merge_air, donate_argnums=(0, 6))
         self._sweep_air_fns[E] = fn
         return fn
 
     def sweep_extract(self, tr: SweepTrainResult, e: int, u: int):
-        """Lane e / user u's trained row as freshly materialized arrays
-        (the trained stack is donated into the merge) — the sweep twin
-        of ``extract_local`` for stale-upload capture."""
+        """Lane e / row u's trained params as freshly materialized
+        arrays (the trained stack is donated into the merge) — the
+        sweep twin of ``extract_local`` for stale-upload capture. On
+        the sparse sweep ``u`` is a compact POSITION, not a user id."""
         return jax.tree.map(lambda p: p[e, u], tr.trained)
+
+    # ------------------------------------ sweep twin of the sparse path
+    def sweep_sparse_capable(self) -> bool:
+        """Sparse sweeps need exactly what the single sparse path
+        needs: round_mode='sparse' (k_max set) + a rectangular cohort."""
+        return self.sparse_capable()
+
+    def _gather_sweep_rows(self, rows, big_rows):
+        """(E, R, ep*nb, bs, ...) round batches: one lane-wise fancy
+        index of the shared (U, n, ...) data stack. ``rows`` holds the
+        user ids, broadcastable against ``big_rows``'s (E, R, T) draw
+        tensor."""
+        E, R = big_rows.shape[0], big_rows.shape[1]
+        bs, nb, ep = self._batch_size, self._nb, self._local_epochs
+        return jax.tree.map(
+            lambda leaf: leaf[rows, big_rows].reshape(
+                (E, R, ep * nb, bs) + leaf.shape[2:]), self._xstack)
+
+    def _build_sweep_sparse_fns(self, E: int):
+        """(bcast_k, round, merge, prepass) jits for E lanes over the
+        compact (E, K_max, ...) winner stack — the dense sweep programs
+        one axis down on the user dimension. Unsharded: K_max rows are
+        too few to split usefully across a mesh."""
+        K = self._k_max
+        self._ensure_xstack()
+        nb, epoch_run = self._nb, self._epoch_run
+        uk = self._use_kernel
+
+        def lane_prios(tr, g):
+            return stacked_model_priorities(tr, g, use_kernel=uk)
+
+        def bcast_k(g):
+            return jax.tree.map(
+                lambda p: jnp.broadcast_to(p[:, None],
+                                           (E, K) + p.shape[1:]), g)
+
+        def round_fn(stack, batched):
+            glob = jax.tree.map(lambda p: p[:, 0], stack)
+            trained, losses = jax.vmap(jax.vmap(epoch_run))(stack, batched)
+            loss_k = losses[:, :, -nb:].mean(axis=2)          # (E, K)
+            prios = jax.vmap(lane_prios)(trained, glob)
+            return trained, loss_k, prios
+
+        def prepass_chunk(glob, batched):
+            C = jax.tree.leaves(batched)[0].shape[1]
+            stack = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[:, None],
+                                           (E, C) + p.shape[1:]), glob)
+            trained, losses = jax.vmap(jax.vmap(epoch_run))(stack, batched)
+            loss_c = losses[:, :, -nb:].mean(axis=2)
+            prios = jax.vmap(lane_prios)(trained, glob)
+            return loss_c, prios
+
+        def sweep_merge(trained, idx, w, old_glob):
+            def one(tr_e, i_e, w_e, g_e):
+                return jax.tree.map(
+                    lambda l, g: kops.gather_combine(l, i_e, w_e, g,
+                                                     use_kernel=uk),
+                    tr_e, g_e)
+            glob = jax.vmap(one)(trained, idx, w, old_glob)
+            stack = jax.tree.map(
+                lambda g, tr: jnp.broadcast_to(g[:, None], tr.shape),
+                glob, trained)
+            return glob, stack
+
+        fns = (jax.jit(bcast_k),
+               jax.jit(round_fn, donate_argnums=0),
+               jax.jit(sweep_merge, donate_argnums=(0, 3)),
+               jax.jit(prepass_chunk))
+        self._sweep_sparse_fns[E] = fns
+        return fns
+
+    def sweep_sparse_init(self, init_params,
+                          seeds: Sequence[int]) -> SweepState:
+        """SweepState with NO cohort stack: (E, ...) lane globals + the
+        per-lane client streams (the dense sweep's exact seeding rule);
+        the compact (E, K_max, ...) winner stack only materializes
+        inside each round."""
+        if not self.sweep_sparse_capable():
+            raise ValueError(
+                "sparse sweep needs round_mode='sparse' (k_max set) "
+                "and a rectangular cohort")
+        E = len(seeds)
+        self._sweep_sparse_fns.get(E) or self._build_sweep_sparse_fns(E)
+        glob = jax.tree.map(
+            lambda p: jnp.broadcast_to(jnp.asarray(p)[None],
+                                       (E,) + np.shape(p)), init_params)
+        rngs = [[client_rng(s, u) for u in range(self.num_users)]
+                for s in seeds]
+        return SweepState(num_lanes=E, glob=glob, stack=None, rngs=rngs)
+
+    def sweep_sparse_priorities(self, st: SweepState,
+                                need_priority: bool):
+        """(E, U) pre-selection Eq. 2 across every lane (+ (E, U)
+        prepass losses, or None) — the sweep twin of
+        ``sparse_priorities``, same prepass/stale split and the same
+        bit-parity contract per lane."""
+        E, U = st.num_lanes, self.num_users
+        fns = (self._sweep_sparse_fns.get(E)
+               or self._build_sweep_sparse_fns(E))
+        if self._sparse_priority == "stale":
+            if not need_priority:
+                return np.ones((E, U)), None
+            if self._sweep_stale_prios.get(E) is None:
+                self._sweep_stale_prios[E] = np.ones((E, U), np.float64)
+            return self._sweep_stale_prios[E].copy(), None
+        self._pending_sweep_big = big = self._draw_sweep_big(st)
+        if not need_priority:
+            return np.ones((E, U)), None
+        C = max(1, min(self._sparse_chunk, U))
+        losses = np.empty((E, U))
+        prios = np.empty((E, U))
+        for lo in range(0, U, C):
+            rows = np.arange(lo, min(lo + C, U))
+            batched = self._gather_sweep_rows(rows[None, :, None],
+                                              big[:, rows])
+            l, p = fns[3](st.glob, batched)
+            losses[:, lo:lo + len(rows)] = np.asarray(l, np.float64)
+            prios[:, lo:lo + len(rows)] = np.asarray(p, np.float64)
+        return prios, losses
+
+    def sweep_sparse_train(self, st: SweepState,
+                           winners_all) -> SweepTrainResult:
+        """Compact winner training for every lane at once:
+        ``winners_all[e]`` is lane e's delivery-ordered winner list.
+        The returned arrays are (E, K_max) POSITION-indexed (not
+        user-indexed — the sparse lane runner owns the mapping); pad
+        rows retrain row 0's gather and ride with zero merge weight."""
+        E, U, K = st.num_lanes, self.num_users, self._k_max
+        fns = (self._sweep_sparse_fns.get(E)
+               or self._build_sweep_sparse_fns(E))
+        big, self._pending_sweep_big = self._pending_sweep_big, None
+        rows = np.zeros((E, K), np.int64)
+        for e, ws in enumerate(winners_all):
+            if len(ws) > K:
+                raise ValueError(f"{len(ws)} winners exceed k_max={K}")
+            rows[e, :len(ws)] = [int(u) for u in ws]
+        if big is not None:
+            big_rows = big[np.arange(E)[:, None], rows]
+        else:
+            # "stale" mode: only the winners' streams advance; pad rows
+            # ride on index 0 (example-0 batches, zero-weight)
+            bs, nb, ep = self._batch_size, self._nb, self._local_epochs
+            n = self.clients[0].num_examples
+            take = nb * bs
+            big_rows = np.zeros((E, K, ep * take), np.int64)
+            for e, ws in enumerate(winners_all):
+                for j, u in enumerate(ws):
+                    for k in range(ep):
+                        big_rows[e, j, k * take:(k + 1) * take] = \
+                            st.rngs[e][int(u)].permutation(n)[:take]
+        batched = self._gather_sweep_rows(rows[:, :, None], big_rows)
+        stack = st.stack if st.stack is not None else fns[0](st.glob)
+        st.stack = None
+        trained, loss_k, prios_k = fns[1](stack, batched)
+        if self._sparse_priority == "stale":
+            cache = self._sweep_stale_prios.get(E)
+            if cache is None:
+                cache = self._sweep_stale_prios[E] = \
+                    np.ones((E, U), np.float64)
+            pk = np.asarray(prios_k, np.float64)
+            for e, ws in enumerate(winners_all):
+                if ws:
+                    cache[e, rows[e, :len(ws)]] = pk[e, :len(ws)]
+        return SweepTrainResult(trained=trained, losses=loss_k,
+                                priorities=prios_k)
 
     def _build_sweep_fault(self, key):
         """Robust-guard twin of the sweep merge: ``robust_merge``
@@ -803,43 +1346,51 @@ class HostBackend(Backend):
         if self._mesh is not None and sweep_shardable(E, U, self._mesh):
             uk = uk and self._mesh.size == 1
 
-        def one_lane(tr_e, w_e, c_e, g_e, *stale_e):
+        def one_lane(tr_e, i_e, w_e, c_e, g_e, *stale_e):
             stale, stale_w = stale_e if M else (None, None)
-            return robust_merge(tr_e, w_e, c_e, g_e, stale, stale_w,
+            rows = jax.tree.map(
+                lambda l: jnp.take(l, i_e, axis=0), tr_e)
+            return robust_merge(rows, w_e, c_e, g_e, stale, stale_w,
                                 quarantine=quarantine, clip_norm=clip,
                                 use_kernel=uk)
 
-        def sweep_fault(trained, weights, corrupt, old_glob, *stale_args):
-            glob, nq = jax.vmap(one_lane)(trained, weights, corrupt,
-                                          old_glob, *stale_args)
+        def sweep_fault(trained, idx, weights, corrupt, old_glob,
+                        *stale_args):
+            glob, nq = jax.vmap(one_lane)(trained, idx, weights,
+                                          corrupt, old_glob, *stale_args)
             stack = jax.tree.map(
                 lambda g, t: jnp.broadcast_to(g[:, None], t.shape),
                 glob, trained)
             return glob, stack, nq
 
-        fn = jax.jit(sweep_fault, donate_argnums=(0, 3))
+        fn = jax.jit(sweep_fault, donate_argnums=(0, 4))
         self._sweep_fault_fns[key] = fn
         return fn
 
     def sweep_merge_faults(self, st: SweepState, tr: SweepTrainResult,
-                           weights: np.ndarray, corrupt: np.ndarray,
+                           idx: np.ndarray, weights: np.ndarray,
+                           corrupt: np.ndarray,
                            stale_stack=None, stale_weights=None, *,
                            quarantine: bool = True,
                            clip_norm: float = 0.0) -> np.ndarray:
         """Dispatch the robust-guard sweep merge.
 
-        ``weights`` / ``corrupt``: (E, U) f32 host arrays (joint
-        fresh-mass weights from ``fault_alphas`` and per-user corruption
-        factors); ``stale_stack``: (E, M, ...) stacked stale-update
-        pytree, rows beyond a lane's stale count zero-padded and riding
-        with zero weight in ``stale_weights`` (E, M). Returns the (E,)
-        per-lane quarantine counts."""
+        ``idx``: (E, k_pad) per-lane compact row indices into the
+        trained stack (pads index row 0); ``weights`` / ``corrupt``:
+        (E, k_pad) f32 host arrays (joint fresh-mass weights from
+        ``fault_alphas`` gathered down to the compact slots, and per-row
+        corruption factors — pads ride weight 0 / corrupt 1.0, the
+        bit-level passthrough); ``stale_stack``: (E, M, ...) stacked
+        stale-update pytree, rows beyond a lane's stale count
+        zero-padded and riding with zero weight in ``stale_weights``
+        (E, M). Returns the (E,) per-lane quarantine counts."""
         trained, tr.trained = tr.trained, None
         M = (0 if stale_weights is None
              else int(np.shape(stale_weights)[1]))
         key = (st.num_lanes, M, bool(quarantine), float(clip_norm))
         fn = self._sweep_fault_fns.get(key) or self._build_sweep_fault(key)
-        args = [trained, jnp.asarray(weights, jnp.float32),
+        args = [trained, jnp.asarray(idx, jnp.int32),
+                jnp.asarray(weights, jnp.float32),
                 jnp.asarray(corrupt, jnp.float32), st.glob]
         if M:
             args += [stale_stack,

@@ -50,11 +50,11 @@ from repro.checkpoint.fl_state import (generator_state, load_fl_checkpoint,
                                        save_fl_checkpoint)
 from repro.core.counter import FairnessCounter, SweepFairnessCounter
 from repro.core.rngs import channel_noise_entropy, engine_rng, strategy_seed
-from repro.core.server import winner_alphas
-from repro.engine.backends import Backend
+from repro.engine.backends import Backend, compact_weights
 from repro.engine.registry import create_strategy, select_grouped
 from repro.engine.spec import ExperimentSpec, SweepSpec
-from repro.engine.types import (FLHistory, SelectionContext, SweepResult)
+from repro.engine.types import (FLHistory, SelectionContext, SweepResult,
+                                TrainResult)
 from repro.faults.injectors import FaultInjector
 from repro.faults.robust import FaultMergeContext, fault_alphas
 
@@ -235,13 +235,32 @@ class FLEngine:
             sel = strat.select(self._context(
                 np.ones(self.num_users), participating, t, shares))
             train_ids = list(sel.winners)
-        else:
-            sel = None
+            tr = self.backend.train_round(
+                self.state, t, train_ids,
+                need_priority=strat.uses_priority)
+        elif self.backend.sparse_capable():
+            # winner-sparse round (DESIGN.md §9): Eq. 2 priorities come
+            # BEFORE selection (exact chunked prepass, or the stale
+            # cache), then only the contention winners train in the
+            # compact (K_max, ...) step. Loss traces: prepass rounds
+            # report the full-cohort prepass losses (the dense path's
+            # numbers); stale rounds report winner losses only.
             train_ids = list(range(self.num_users))
-
-        tr = self.backend.train_round(self.state, t, train_ids,
-                                      need_priority=strat.uses_priority)
-        if sel is None:
+            prios, pre_losses = self.backend.sparse_priorities(
+                self.state, strat.uses_priority)
+            sel = strat.select(self._context(
+                prios, participating, t, shares))
+            tr = self.backend.sparse_train(
+                self.state, [int(u) for u in sel.winners])
+            tr = TrainResult(
+                losses=(pre_losses if pre_losses is not None
+                        else tr.losses),
+                priorities=prios, local_handle=tr.local_handle)
+        else:
+            train_ids = list(range(self.num_users))
+            tr = self.backend.train_round(
+                self.state, t, train_ids,
+                need_priority=strat.uses_priority)
             sel = strat.select(self._context(
                 tr.priorities, participating, t, shares))
 
@@ -395,6 +414,9 @@ class FLEngine:
                        if self.faults is not None else None),
             "counter": self.counter.state_dict(),
             "client_streams": self.backend.client_stream_states(),
+            # sparse "stale" runs carry last-trained Eq. 2 priorities
+            # across rounds; None everywhere else
+            "priority_cache": self.backend.priority_cache_state(),
         }
 
     def _load_run_payload(self, payload, fp):
@@ -419,6 +441,8 @@ class FLEngine:
             self.faults.load_state_dict(payload["faults"])
         self.counter.load_state_dict(payload["counter"])
         self.backend.restore_client_streams(payload["client_streams"])
+        self.backend.restore_priority_cache(
+            payload.get("priority_cache"))
         return payload["history"], payload["round"] + 1
 
     # ------------------------------------------------------- sweep path
@@ -443,12 +467,21 @@ class FLEngine:
             sweep = SweepSpec(specs=list(sweep))
         if overlap is None:
             overlap = sweep.overlap
+        lanes = [_Lane(spec, self.num_users) for spec in sweep.specs]
+        if getattr(self.backend, "sweep_sparse_capable", lambda: False)():
+            # winner-sparse sweeps run the contention-first lane loop:
+            # every lane selects, then ONE compact (E, K_max, ...) train
+            # call covers all lanes' winners
+            result, _, _ = self._run_lanes_sparse(
+                lanes, init_state=self._init_params, verbose=verbose,
+                labels=sweep.labels, checkpoint_dir=checkpoint_dir)
+            return result
         if not self.backend.sweep_capable():
             raise ValueError(
                 "run_sweep needs a sweep-capable backend (HostBackend "
-                "round_mode='fused' over a rectangular cohort); run the "
-                "cells sequentially through FLEngine.run instead")
-        lanes = [_Lane(spec, self.num_users) for spec in sweep.specs]
+                "round_mode='fused' or 'sparse' over a rectangular "
+                "cohort); run the cells sequentially through "
+                "FLEngine.run instead")
         result, _, _ = self._run_lanes(
             lanes, init_state=self._init_params, overlap=overlap,
             verbose=verbose, labels=sweep.labels,
@@ -513,7 +546,8 @@ class FLEngine:
         if (lane.strategy.uses_priority
                 and not lane.strategy.trains_before_selection):
             h.priorities.append(prios_row.tolist())
-        h.train_loss.append(float(np.mean(loss_row)))
+        if np.size(loss_row):      # sparse stale + winnerless: no losses
+            h.train_loss.append(float(np.mean(loss_row)))
 
     def _sweep_merge_ctx(self, lanes, t: int):
         """Stacked (E, ...) AirComp merge inputs, or None for the
@@ -538,18 +572,21 @@ class FLEngine:
         return MergeContext(coeffs=coeffs, noise_sigma=sigmas,
                             key=jnp.stack(keys))
 
-    def _sweep_merge_faults(self, lanes, st, tr, rfs, stales, fs, t):
-        """Assemble the (E, U) joint fresh-weight / corruption matrices
-        and the zero-padded (E, M, ...) stale stack, then dispatch the
-        robust sweep merge. Returns the (E,) per-lane quarantine
-        counts. ``t`` is unused by the math but kept for symmetry with
-        ``_sweep_merge_ctx`` call sites."""
-        del t
+    def _sweep_merge_faults(self, lanes, st, tr, rfs, stales, fs, idx):
+        """Assemble the compact (E, k_pad) joint fresh-weight /
+        corruption matrices (``fault_alphas`` gathered down to each
+        lane's merge slots; pads ride exact-zero weight and corruption
+        1.0, the bit-level passthrough) and the zero-padded (E, M, ...)
+        stale stack, then dispatch the robust sweep merge. ``idx`` is
+        the (E, k_pad) row-index matrix into the trained stack, slot
+        order = each lane's ``rf.merged_now`` delivery order. Returns
+        the (E,) per-lane quarantine counts."""
         import jax
         import jax.numpy as jnp
         backend, U, E = self.backend, self.num_users, len(lanes)
-        weights = np.zeros((E, U), np.float32)
-        corrupt = np.ones((E, U), np.float32)
+        k_pad = idx.shape[1]
+        weights = np.zeros((E, k_pad), np.float32)
+        corrupt = np.ones((E, k_pad), np.float32)
         M = max(len(s) for s in stales)
         stale_w = np.zeros((E, M), np.float32) if M else None
         for e, (rf, stale_in) in enumerate(zip(rfs, stales)):
@@ -557,11 +594,15 @@ class FLEngine:
                 U, rf.merged_now,
                 [backend.num_examples(u) for u in rf.merged_now],
                 [n for _, _, n in stale_in], fs.staleness_discount)
-            weights[e] = w
+            sel = [int(u) for u in rf.merged_now]
+            if sel:
+                weights[e, :len(sel)] = w[sel]
+                cu = np.ones(U, np.float32)
+                for u, fac in rf.corrupt.items():
+                    cu[int(u)] = fac
+                corrupt[e, :len(sel)] = cu[sel]
             if len(sw):
                 stale_w[e, :len(sw)] = sw
-            for u, fac in rf.corrupt.items():
-                corrupt[e, int(u)] = fac
         stale_stack = None
         if M:
             # pad rows are zeros_like of a real stale update; they ride
@@ -583,8 +624,34 @@ class FLEngine:
             stale_stack = jax.tree.map(lambda *ls: jnp.stack(ls),
                                        *per_lane)
         return backend.sweep_merge_faults(
-            st, tr, weights, corrupt, stale_stack, stale_w,
+            st, tr, idx, weights, corrupt, stale_stack, stale_w,
             quarantine=fs.quarantine, clip_norm=fs.clip_norm)
+
+    def _dispatch_sweep_merge(self, lanes, st, tr, merged_all, pos_all,
+                              rfs, stales, lead_faults, k_pad, t):
+        """One compact (E, k_pad) merge dispatch shared by the dense
+        and sparse sweep loops. ``merged_all[e]`` are lane e's merge
+        candidates (user ids, delivery order); ``pos_all[e]`` their row
+        indices into the trained stack (== the user ids on the dense
+        sweep, compact positions on the sparse one). Routes through the
+        robust-guard, AirComp, or plain digital sweep merge; returns
+        the (E,) quarantine counts, or None off the fault path."""
+        backend, E = self.backend, len(lanes)
+        idx = np.zeros((E, k_pad), np.int32)
+        w = np.zeros((E, k_pad), np.float32)
+        uids = np.zeros((E, k_pad), np.int64)
+        for e in range(E):
+            idx[e], w[e] = compact_weights(
+                k_pad, pos_all[e],
+                [backend.num_examples(u) for u in merged_all[e]])
+            uids[e, :len(merged_all[e])] = merged_all[e]
+        if lead_faults is not None and lead_faults.merge_guarded:
+            return self._sweep_merge_faults(lanes, st, tr, rfs, stales,
+                                            lead_faults, idx)
+        backend.sweep_merge(st, tr, idx, w,
+                            merge_ctx=self._sweep_merge_ctx(lanes, t),
+                            uids=uids)
+        return None
 
     def _sweep_payload(self, fp, t, st, stream_snap, counters, lanes):
         import jax
@@ -711,22 +778,15 @@ class FLEngine:
                 failures_all.append(f)
                 rfs.append(rf)
                 stales.append(stale_in)
-            nq = None
-            if lead_faults is not None and lead_faults.merge_guarded:
-                nq = self._sweep_merge_faults(lanes, st, tr, rfs,
-                                              stales, lead_faults, t)
-            else:
-                merged_all = [rf.merged_now if rf is not None else d
-                              for rf, d in zip(rfs, delivered_all)]
-                alphas = np.zeros((E, U), np.float32)
-                for e, merged in enumerate(merged_all):
-                    if merged:
-                        alphas[e] = winner_alphas(
-                            U, merged,
-                            [backend.num_examples(u) for u in merged])
-                backend.sweep_merge(
-                    st, tr, alphas,
-                    merge_ctx=self._sweep_merge_ctx(lanes, t))
+            merged_all = [[int(u) for u in
+                           (rf.merged_now if rf is not None else d)]
+                          for rf, d in zip(rfs, delivered_all)]
+            # dense sweep: user ids ARE the row indices into the
+            # (E, U, ...) trained stack
+            k_pad = backend._k_pad(max(len(m) for m in merged_all))
+            nq = self._dispatch_sweep_merge(
+                lanes, st, tr, merged_all, merged_all, rfs, stales,
+                lead_faults, k_pad, t)
             next_tr = None
             if not last:
                 if next_batched is None:
@@ -769,6 +829,110 @@ class FLEngine:
             final_globals=st.glob)
         return result, st, counters
 
+    def _run_lanes_sparse(self, lanes, *, init_state, verbose,
+                          labels=None, checkpoint_dir=None):
+        """Winner-sparse sweep loop (DESIGN.md §9): per round, Eq. 2
+        priorities for every lane (exact prepass or stale cache), ONE
+        grouped host contention pass, ONE compact (E, K_max, ...) train
+        call over the winners only, then the compact merge. Synchronous
+        — no overlap pipeline: the next round's winner draws depend on
+        this round's contention, and the K-compact train step is too
+        small for overlap to pay."""
+        if checkpoint_dir is not None:
+            raise NotImplementedError(
+                "sparse sweeps don't checkpoint; use round_mode='fused' "
+                "for checkpointed sweeps")
+        backend, U, E = self.backend, self.num_users, len(lanes)
+        rounds = lanes[0].spec.rounds
+        need_prio = any(l.strategy.uses_priority for l in lanes)
+        lead_faults = lanes[0].spec.faults       # sweep-shared field
+        counters = SweepFairnessCounter(
+            E, U, np.array([l.spec.counter_threshold for l in lanes]))
+        seeds = [l.spec.seed for l in lanes]
+        t0 = time.time()
+        st = backend.sweep_sparse_init(init_state, seeds)
+        for t in range(rounds):
+            prios, pre_losses = backend.sweep_sparse_priorities(
+                st, need_prio)
+            prios64 = np.asarray(prios, np.float64)
+            winners_all, sels = self._select_lanes(
+                lanes, counters, prios64, t)
+            tr = backend.sweep_sparse_train(st, winners_all)
+            delivered_all, failures_all, rfs, stales = [], [], [], []
+            for e, lane in enumerate(lanes):
+                if lane.faults is not None:
+                    lane.faults.begin_round()
+                d, f = _gate_round(lane.channel, winners_all[e])
+                rf, stale_in = None, []
+                if lane.faults is not None:
+                    rf = lane.faults.process_uploads(
+                        winners_all[e], d,
+                        lane.channel.per if lane.channel is not None
+                        else None)
+                    d, f = rf.arrived, len(rf.failed)
+                    stale_in = lane.faults.pop_stale()
+                    for u in rf.stragglers:
+                        lane.faults.push_stale(
+                            u, backend.sweep_extract(
+                                tr, e, winners_all[e].index(int(u))),
+                            backend.num_examples(u))
+                delivered_all.append(d)
+                failures_all.append(f)
+                rfs.append(rf)
+                stales.append(stale_in)
+            merged_all = [[int(u) for u in
+                           (rf.merged_now if rf is not None else d)]
+                          for rf, d in zip(rfs, delivered_all)]
+            # sparse sweep: row indices are compact DELIVERY positions
+            # into the (E, K_max, ...) winner stack
+            pos_all = [[winners_all[e].index(u) for u in merged_all[e]]
+                       for e in range(E)]
+            k_pad = int(np.shape(tr.priorities)[1])       # = k_max
+            nq = self._dispatch_sweep_merge(
+                lanes, st, tr, merged_all, pos_all, rfs, stales,
+                lead_faults, k_pad, t)
+            counters.update(winners_all)
+            losses64 = (np.asarray(pre_losses, np.float64)
+                        if pre_losses is not None
+                        else np.asarray(tr.losses, np.float64))
+            for e, lane in enumerate(lanes):
+                if rfs[e] is not None:
+                    lane.history.stale_merges += len(stales[e])
+                if nq is not None:
+                    lane.history.quarantined_updates += int(nq[e])
+                # prepass rounds report full-cohort losses (the dense
+                # sweep's numbers); stale rounds report winner losses
+                loss_row = (losses64[e] if pre_losses is not None
+                            else losses64[e, :len(winners_all[e])])
+                self._record_lane(lane, sels[e], winners_all[e],
+                                  delivered_all[e], failures_all[e],
+                                  loss_row, prios64[e], rf=rfs[e])
+            if self.eval_fn is not None:
+                for e, lane in enumerate(lanes):
+                    spec = lane.spec
+                    if t % spec.eval_every == 0 or t == spec.rounds - 1:
+                        acc = float(self.eval_fn(
+                            backend.sweep_global(st, e)))
+                        lane.history.accuracy.append(acc)
+                        lane.history.eval_round.append(t)
+                        if verbose:
+                            tag = (labels[e] if labels
+                                   else f"{spec.strategy}/{e}")
+                            print(f"[{tag}] round {t:4d} acc {acc:.4f}")
+        result = SweepResult(
+            histories=[l.history for l in lanes],
+            specs=[l.spec for l in lanes], labels=labels,
+            overlap=False, wall_s=time.time() - t0,
+            final_globals=st.glob)
+        return result, st, counters
+
+
+#: auto-select the winner-sparse path when the winner budget is at
+#: least this many times smaller than the cohort (K ≪ U): below the
+#: ratio the compact gather-K round wins on FLOPs and memory, above it
+#: the dense fused round's single full-width step is at least as good.
+SPARSE_AUTO_RATIO = 8
+
 
 def build_host_engine(spec: ExperimentSpec, init_params, loss_fn,
                       user_data, eval_fn=None, *,
@@ -776,13 +940,27 @@ def build_host_engine(spec: ExperimentSpec, init_params, loss_fn,
                       mesh=None) -> FLEngine:
     """Convenience: spec + host data -> engine over HostBackend.
 
-    ``round_mode`` picks the backend round path ("fused" / "stacked" /
-    "ragged"; default fused); ``mesh`` optionally shards the fused
-    cohort axis over devices (see ``repro.sharding.cohort``).
+    ``round_mode`` (argument, else ``spec.round_mode``) picks the
+    backend round path ("fused" / "stacked" / "ragged" / "sparse");
+    when BOTH are None the factory auto-selects: "sparse" (the
+    contention-first gather-K path, DESIGN.md §9) when the cohort is
+    rectangular and ``k_per_round * SPARSE_AUTO_RATIO <= num_users``,
+    else the dense default ("fused" / "ragged" per ``prefer_vmap``).
+    ``mesh`` optionally shards the fused cohort axis — or the sparse
+    path's compact K axis — over devices (``repro.sharding.cohort``).
     """
+    import jax
     from repro.engine.backends import HostBackend
+    mode = round_mode if round_mode is not None else spec.round_mode
+    if mode is None and prefer_vmap:
+        ns = {jax.tree.leaves(d)[0].shape[0] for d in user_data}
+        rect = len(ns) == 1 and spec.batch_size <= next(iter(ns))
+        if (rect and spec.k_per_round * SPARSE_AUTO_RATIO
+                <= len(user_data)):
+            mode = "sparse"
     backend = HostBackend(
         loss_fn, user_data, lr=spec.lr, batch_size=spec.batch_size,
         local_epochs=spec.local_epochs, seed=spec.seed,
-        prefer_vmap=prefer_vmap, round_mode=round_mode, mesh=mesh)
+        prefer_vmap=prefer_vmap, round_mode=mode, mesh=mesh,
+        k_max=spec.k_per_round, sparse_priority=spec.sparse_priority)
     return FLEngine(spec, backend, init_params, eval_fn)

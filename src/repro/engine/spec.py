@@ -27,6 +27,16 @@ from repro.faults.spec import FaultSpec
 #: Eq. 1 merge implementations the backends know how to build
 MERGE_BACKENDS = ("fedavg", "aircomp")
 
+#: HostBackend round paths (DESIGN.md §3/§9); None = auto-select
+#: ("sparse" when K ≪ U over a rectangular cohort, else "fused")
+ROUND_MODES = ("fused", "stacked", "ragged", "sparse")
+
+#: Eq. 2 orderings for the winner-sparse round path (DESIGN.md §9):
+#: "prepass" trains-and-discards the full cohort in bounded chunks for
+#: exact (bit-identical) priorities; "stale" reuses each user's
+#: last-trained priority (O(K) FLOPs, distributional parity only)
+SPARSE_PRIORITY_MODES = ("prepass", "stale")
+
 
 @dataclass
 class ExperimentSpec:
@@ -63,6 +73,15 @@ class ExperimentSpec:
     # pre-fault reference, winner-pin guarded). Sweep-shared: the E
     # lanes route through ONE jitted (plain or robust) merge program.
     faults: Optional[FaultSpec] = None
+    #: HostBackend round path (DESIGN.md §3/§9); None lets the engine
+    #: factory auto-select — "sparse" (contention-first gather-K rounds)
+    #: when K ≪ U over a rectangular cohort, else "fused". Sweep-shared:
+    #: the path picks the ONE device program every lane runs through.
+    round_mode: Optional[str] = None
+    #: Eq. 2 ordering for the sparse path ("prepass" = exact /
+    #: bit-identical to fused; "stale" = cached, O(K) per round).
+    #: Ignored outside round_mode="sparse".
+    sparse_priority: str = "prepass"
     # local training (consumed by backend factories)
     lr: float = 1e-2
     batch_size: int = 32
@@ -70,6 +89,15 @@ class ExperimentSpec:
     seed: int = 0
 
     def __post_init__(self):
+        if (self.round_mode is not None
+                and self.round_mode not in ROUND_MODES):
+            raise ValueError(
+                f"unknown round_mode {self.round_mode!r}; "
+                f"known: {ROUND_MODES} (or None = auto)")
+        if self.sparse_priority not in SPARSE_PRIORITY_MODES:
+            raise ValueError(
+                f"unknown sparse_priority {self.sparse_priority!r}; "
+                f"known: {SPARSE_PRIORITY_MODES}")
         if self.merge_backend not in MERGE_BACKENDS:
             raise ValueError(
                 f"unknown merge_backend {self.merge_backend!r}; "
@@ -94,7 +122,8 @@ class ExperimentSpec:
 #: ``rounds`` because the lanes advance in lockstep, the rest because
 #: they configure the ONE backend / merge program every lane shares.
 SWEEP_SHARED_FIELDS = ("rounds", "lr", "batch_size", "local_epochs",
-                       "merge_backend", "faults")
+                       "merge_backend", "faults", "round_mode",
+                       "sparse_priority")
 
 
 @dataclass

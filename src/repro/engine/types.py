@@ -73,6 +73,13 @@ class SelectionResult:
             return self.winners == list(other)
         return NotImplemented
 
+    def __hash__(self):
+        # a hand-written __eq__ on a dataclass implicitly sets
+        # __hash__ = None; results must stay usable in sets / dict keys
+        # (hash on the same fields __eq__ compares against peers)
+        return hash((tuple(self.winners), self.collisions,
+                     self.elapsed_slots))
+
 
 @dataclass
 class TrainResult:
@@ -139,10 +146,16 @@ class FLHistory:
     def time_to_accuracy(self, target: float) -> Optional[float]:
         """Simulated seconds until ``accuracy >= target`` was first
         evaluated, or None if never reached — the convergence-time-vs-
-        bandwidth figure's y-axis."""
+        bandwidth figure's y-axis.
+
+        An eval recorded past the last accounted round (e.g. a post-run
+        final eval at ``t == rounds``) clamps to the run's elapsed
+        time instead of silently dropping a reached target."""
         for acc, t in zip(self.accuracy, self.eval_round):
-            if acc >= target and t < len(self.cumulative_seconds):
-                return self.cumulative_seconds[t]
+            if acc >= target:
+                if t < len(self.cumulative_seconds):
+                    return self.cumulative_seconds[t]
+                return self.elapsed_seconds()
         return None
 
 

@@ -62,6 +62,30 @@ def fedavg_combine(stacked, alphas, use_kernel=True, interpret=None):
     return ref.fedavg_combine_ref(stacked, alphas)
 
 
+def gather_combine(stacked, idx, weights, glob, use_kernel=True,
+                   interpret=None):
+    """Winner-sparse Eq. 1: gather the rows at ``idx`` out of a
+    (S, ...) stack and reduce them under (K,) merge weights, keeping
+    ``glob`` when no weight is nonzero (winnerless-round guard, in-op
+    so vmapped sweep lanes get it per-lane).
+
+    One op for both merge paths: the dense fused merge passes winner
+    ids into the full (U, ...) trained stack, the sparse round path
+    passes positions into its compact (K_max, ...) stack — the reduce
+    sees identical (K, ...) gathered values either way, making the two
+    paths bit-identical (the ISSUE-8 parity contract, pinned in
+    tools/check_winner_pins.py).
+    """
+    i = jnp.asarray(idx, jnp.int32)
+    w = jnp.asarray(weights, jnp.float32)
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        from repro.kernels.gather import gather_combine_pallas
+        return gather_combine_pallas(stacked, i, w, glob,
+                                     interpret=interp)
+    return ref.gather_combine_ref(stacked, i, w, glob)
+
+
 def aircomp_combine(stacked, alphas, coeffs=None, noise=0.0,
                     use_kernel=True, interpret=None):
     """AirComp analog over-the-air Eq. 1: noisy superposition of the

@@ -27,6 +27,31 @@ def fedavg_combine_ref(stacked, alphas):
     return jnp.sum(terms, axis=0).astype(stacked.dtype)
 
 
+def gather_combine_ref(stacked, idx, weights, glob):
+    """Winner-sparse Eq. 1, jnp oracle (see ``kernels/gather.py``).
+
+    stacked: (S, ...); idx: (K,) int32 row indices (delivery order,
+    zero-padded); weights: (K,) f32 merge weights (exact-zero pads);
+    glob: (...) the old global, returned unchanged when no weight is
+    nonzero (the winnerless-round guard).
+
+    Masked like ``fedavg_combine_ref``: a zero weight contributes EXACT
+    zero even when the gathered row is non-finite. The reduce runs over
+    the materialized (K, ...) gathered rows, so its result depends only
+    on K and the row values — NOT on the source stack's length S. The
+    dense fused merge (S = U) and the sparse compact merge (S = K_max)
+    are therefore bit-identical by construction (tests/test_sparse.py).
+    """
+    rows = jnp.take(stacked, idx.astype(jnp.int32), axis=0)
+    a = weights.astype(jnp.float32).reshape(
+        (-1,) + (1,) * (stacked.ndim - 1))
+    terms = jnp.where(a != 0.0, rows.astype(jnp.float32) * a, 0.0)
+    acc = jnp.sum(terms, axis=0)
+    has = jnp.any(weights != 0.0)
+    return jnp.where(has, acc,
+                     glob.astype(jnp.float32)).astype(stacked.dtype)
+
+
 def aircomp_combine_ref(stacked, weights, noise, scale):
     """AirComp analog over-the-air merge, jnp oracle.
 

@@ -81,6 +81,23 @@ def sweep_shardable(num_experiments: int, num_users: int,
     return (num_experiments % axis == 0) or (num_users % axis == 0)
 
 
+def winner_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for compact winner-stacked ``(K_max, ...)`` leaves (the
+    winner-sparse round path, DESIGN.md §9): split the compact K axis
+    over the cohort mesh axis, replicate each winner's small model —
+    :func:`cohort_sharding` with K winners standing in for U users."""
+    return NamedSharding(mesh, P(COHORT_AXIS))
+
+
+def winner_shardable(k_max: int, mesh: Optional[Mesh]) -> bool:
+    """True when the compact ``(K_max, ...)`` winner stack can split
+    over ``mesh`` (same divisibility rule as :func:`shardable`, on the
+    winner budget instead of the user count)."""
+    if mesh is None or COHORT_AXIS not in mesh.shape:
+        return False
+    return k_max % mesh.shape[COHORT_AXIS] == 0
+
+
 def shardable(num_users: int, mesh: Optional[Mesh]) -> bool:
     """True when the cohort axis can actually split over ``mesh``.
 

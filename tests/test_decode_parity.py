@@ -54,6 +54,7 @@ def test_prefill_then_decode_matches_forward():
                                    rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow   # ~20 s CPU compile+decode loop; RUN_SLOW=1 runs it
 def test_ring_cache_sliding_window_decode():
     """A window-sized ring cache gives the same logits as a full cache
     for a sliding-window model (the bounded-state long_500k mechanism)."""

@@ -137,25 +137,27 @@ def test_interpret_mode_exercises_kernels_through_engine(setup,
     AND still reproduce the jnp-oracle winner sequence."""
     h_oracle, _ = _run(setup, "fused", "priority-distributed", rounds=2)
 
+    import repro.kernels.gather as kgather
     import repro.kernels.ops as kops
-    calls = {"delta": 0, "fedavg": 0}
-    real_delta, real_fedavg = kops.delta_norm_pallas, kops.fedavg_pallas
+    calls = {"delta": 0, "gather": 0}
+    real_delta = kops.delta_norm_pallas
+    real_gather = kgather.gather_combine_pallas
 
     def spy_delta(*a, **kw):
         calls["delta"] += 1
         return real_delta(*a, **kw)
 
-    def spy_fedavg(*a, **kw):
-        calls["fedavg"] += 1
-        return real_fedavg(*a, **kw)
+    def spy_gather(*a, **kw):
+        calls["gather"] += 1
+        return real_gather(*a, **kw)
 
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
     monkeypatch.setattr(kops, "delta_norm_pallas", spy_delta)
-    monkeypatch.setattr(kops, "fedavg_pallas", spy_fedavg)
+    monkeypatch.setattr(kgather, "gather_combine_pallas", spy_gather)
 
     h_interp, _ = _run(setup, "fused", "priority-distributed", rounds=2)
     assert calls["delta"] > 0, "Eq. 2 never reached delta_norm kernel"
-    assert calls["fedavg"] > 0, "merge never reached fedavg kernel"
+    assert calls["gather"] > 0, "merge never reached gather kernel"
     assert h_interp.winners == h_oracle.winners
     np.testing.assert_allclose(h_interp.train_loss, h_oracle.train_loss,
                                rtol=1e-4)

@@ -22,7 +22,14 @@ def _batch(cfg, key, B=2, S=32):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# deepseek's reduced MoE train step is the one ~10 s CPU compile in
+# this module — slow-gated (RUN_SLOW=1); the full-config dims check
+# below still covers the arch in tier 1
+SMOKE_ARCHS = [pytest.param(a, marks=pytest.mark.slow)
+               if a == "deepseek-v3-671b" else a for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
 def test_reduced_arch_forward_and_train_step(arch):
     cfg = get_config(arch).reduced()
     assert cfg.num_layers <= 2 and cfg.d_model <= 512

@@ -1,0 +1,326 @@
+"""Winner-sparse round path (DESIGN.md §9, ISSUE 8).
+
+Parity contract: with ``sparse_priority="prepass"`` the sparse path —
+contention over the full population FIRST, then a compact (K_max, ...)
+gather-K train step and a scatter-merge — must match the dense fused
+path winner-for-winner AND produce bit-identical merged globals, with
+the channel and fault layers on or off, single runs and sweeps alike.
+Also covers the gather_combine kernel (interpret-mode parity vs the jnp
+oracle, stack-length invariance) and the ISSUE-8 satellite bugfixes
+(time_to_accuracy clamp, zero-example heterogeneity, SelectionResult
+hashability).
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.channel import ChannelSpec
+from repro.engine import (ExperimentSpec, FLHistory, SweepSpec,
+                          build_host_engine, label_heterogeneity)
+from repro.engine.types import SelectionResult
+from repro.faults import FaultSpec
+from repro.kernels import ops as kops
+from repro.kernels.ref import fedavg_combine_ref, gather_combine_ref
+
+
+# ------------------------------------------------------------------ setup
+NUM_USERS, N_PER_USER, DIM, CLASSES = 12, 24, 6, 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Rectangular cohort, skewed labels (Eq. 2 separates users), tiny
+    softmax model — K=2 winners out of 12 users per round."""
+    rng = np.random.default_rng(11)
+    user_data = []
+    for u in range(NUM_USERS):
+        probs = np.ones(CLASSES) / CLASSES
+        probs[u % CLASSES] += 1.0
+        probs /= probs.sum()
+        user_data.append({
+            "x": rng.normal(size=(N_PER_USER, DIM)).astype(np.float32),
+            "y": rng.choice(CLASSES, N_PER_USER, p=probs),
+        })
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], CLASSES)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((DIM, CLASSES), jnp.float32),
+              "b": jnp.zeros((CLASSES,), jnp.float32)}
+    return params, loss_fn, user_data
+
+
+def _spec(mode, strategy="priority-distributed", *, rounds=5, seed=0,
+          **kw):
+    return ExperimentSpec(rounds=rounds, strategy=strategy, seed=seed,
+                          k_per_round=2, batch_size=4, round_mode=mode,
+                          **kw)
+
+
+def _run(setup, spec):
+    params, loss_fn, user_data = setup
+    engine = build_host_engine(spec, params, loss_fn, user_data)
+    hist = engine.run()
+    return hist, engine
+
+
+def _globals_equal(e_a, e_b):
+    for a, b in zip(jax.tree.leaves(e_a.global_params),
+                    jax.tree.leaves(e_b.global_params)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            return False
+    return True
+
+
+# -------------------------------------------------- gather_combine op
+def _rand_case(rng, S, K, P):
+    stacked = rng.normal(size=(S, P)).astype(np.float32)
+    glob = rng.normal(size=(P,)).astype(np.float32)
+    m = int(rng.integers(1, K + 1))
+    idx = np.zeros(K, np.int32)
+    idx[:m] = rng.choice(S, m, replace=False)
+    w = np.zeros(K, np.float32)
+    s = rng.uniform(0.5, 2.0, m)
+    w[:m] = (s / s.sum()).astype(np.float32)
+    return stacked, idx, w, glob
+
+
+def test_gather_combine_interpret_parity():
+    """Pallas kernel (interpret mode) is bit-identical to the jnp
+    oracle across ragged winner counts and pad widths."""
+    rng = np.random.default_rng(0)
+    for S, K, P in [(8, 2, 16), (32, 5, 7), (64, 8, 128), (5, 5, 3)]:
+        stacked, idx, w, glob = _rand_case(rng, S, K, P)
+        ker = kops.gather_combine(stacked, idx, w, glob,
+                                  use_kernel=True, interpret=True)
+        ref = gather_combine_ref(jnp.asarray(stacked), jnp.asarray(idx),
+                                 jnp.asarray(w), jnp.asarray(glob))
+        np.testing.assert_array_equal(np.asarray(ker), np.asarray(ref))
+
+
+def test_gather_combine_winnerless_guard():
+    """All-zero weights (a winnerless round) must return the old global
+    bit-for-bit — even when the gathered rows are non-finite."""
+    stacked = np.full((4, 8), np.nan, np.float32)
+    glob = np.arange(8, dtype=np.float32)
+    out = kops.gather_combine(stacked, np.zeros(2, np.int32),
+                              np.zeros(2, np.float32), glob,
+                              use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(out), glob)
+
+
+def test_gather_combine_full_cohort_matches_fedavg():
+    """With idx = arange(U) and full weights, gather_combine IS the
+    dense masked Eq. 1 reduce (fedavg_combine_ref) bit-for-bit."""
+    rng = np.random.default_rng(1)
+    U, P = 6, 32
+    stacked = rng.normal(size=(U, P)).astype(np.float32)
+    glob = np.zeros(P, np.float32)
+    s = rng.uniform(0.5, 2.0, U)
+    w = (s / s.sum()).astype(np.float32)
+    out = kops.gather_combine(stacked, np.arange(U, dtype=np.int32), w,
+                              glob, use_kernel=False)
+    ref = fedavg_combine_ref(jnp.asarray(stacked), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gather_combine_stack_length_invariance():
+    """THE bit-parity keystone: reducing winner rows out of the full
+    (U, ...) stack (dense fused merge) and out of a compact (K, ...)
+    restack (sparse merge) yields bit-identical results — the reduce
+    sees the same (K, ...) gathered values either way."""
+    rng = np.random.default_rng(2)
+    U, K, P = 40, 3, 64
+    stacked, idx, w, glob = _rand_case(rng, U, K, P)
+    compact = stacked[idx]                     # delivery-order restack
+    pos = np.arange(K, dtype=np.int32)
+    a = kops.gather_combine(stacked, idx, w, glob, use_kernel=False)
+    b = kops.gather_combine(compact, pos, w, glob, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- run parity (prepass)
+@pytest.mark.parametrize("strategy", ["priority-distributed",
+                                      "random-distributed",
+                                      "hetero-topk"])
+def test_sparse_matches_fused_run(setup, strategy):
+    """Acceptance pin: prepass-sparse vs dense fused — identical
+    winners and bit-equal merged globals; identical full-cohort loss /
+    priority traces when the strategy consumes Eq. 2 (for non-priority
+    strategies the sparse path skips the prepass and reports winner
+    losses only)."""
+    hd, ed = _run(setup, _spec("fused", strategy))
+    hs, es = _run(setup, _spec("sparse", strategy))
+    assert hs.winners == hd.winners
+    if hd.priorities:
+        assert hs.train_loss == hd.train_loss
+        assert hs.priorities == hd.priorities
+    assert _globals_equal(ed, es)
+
+
+def test_sparse_matches_fused_channel_twin(setup):
+    """Channel layer on: the PER gate sees the same winner set and the
+    same channel streams either way — delivered sets and merged globals
+    must stay bit-equal."""
+    hd, ed = _run(setup, _spec("fused", channel=ChannelSpec()))
+    hs, es = _run(setup, _spec("sparse", channel=ChannelSpec()))
+    assert hs.winners == hd.winners
+    assert hs.delivered == hd.delivered
+    assert hs.upload_failures == hd.upload_failures
+    assert _globals_equal(ed, es)
+
+
+def test_sparse_matches_fused_faults_twin(setup):
+    """Fault layer on (crash/straggle/corrupt active): the sparse path
+    routes the robust merge over the compact K axis — arrivals, stale
+    merges, quarantine counts and globals must all match the dense
+    run."""
+    flt = FaultSpec(crash_prob=0.1, straggle_prob=0.2, corrupt_prob=0.1)
+    hd, ed = _run(setup, _spec("fused", rounds=8, faults=flt))
+    hs, es = _run(setup, _spec("sparse", rounds=8, faults=flt))
+    assert hs.winners == hd.winners
+    assert hs.delivered == hd.delivered
+    assert hs.stale_merges == hd.stale_merges
+    assert hs.quarantined_updates == hd.quarantined_updates
+    assert hs.dropped_clients == hd.dropped_clients
+    assert _globals_equal(ed, es)
+
+
+def test_sparse_sweep_matches_dense_sweep(setup):
+    """Sweep parity: a 4-lane sparse sweep equals the dense sweep
+    lane-for-lane AND equals E sequential sparse runs — winners,
+    losses, and bit-equal finals."""
+    params, loss_fn, user_data = setup
+    grids = {}
+    for mode in ("fused", "sparse"):
+        sw = SweepSpec.grid(_spec(mode),
+                            strategy=["priority-distributed",
+                                      "random-distributed"],
+                            seed=[0, 1])
+        eng = build_host_engine(sw.specs[0], params, loss_fn, user_data)
+        grids[mode] = (sw, eng.run_sweep(sw))
+    (sw_d, r_d), (sw_s, r_s) = grids["fused"], grids["sparse"]
+    for e, (hd, hs) in enumerate(zip(r_d.histories, r_s.histories)):
+        assert hs.winners == hd.winners
+        assert hs.train_loss == hd.train_loss
+        for a, b in zip(jax.tree.leaves(r_d.lane_params(e)),
+                        jax.tree.leaves(r_s.lane_params(e))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # lane e == the same cell run alone through the sparse path
+        h1, e1 = _run(setup, sw_s.specs[e])
+        assert h1.winners == hs.winners
+        for a, b in zip(jax.tree.leaves(e1.global_params),
+                        jax.tree.leaves(r_s.lane_params(e))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------- stale mode
+def test_sparse_stale_mode_runs(setup):
+    """Stale priorities (O(K) rounds): distributional only — assert the
+    run is well-formed (K winners per round from the population, finite
+    global) rather than bit-parity with prepass."""
+    hs, es = _run(setup, _spec("sparse", sparse_priority="stale",
+                               rounds=6))
+    assert len(hs.winners) == 6
+    for w in hs.winners:
+        assert len(set(w)) == len(w)
+        assert all(0 <= u < NUM_USERS for u in w)
+    for leaf in jax.tree.leaves(es.global_params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    # stale rounds report winner losses only — never more entries than
+    # rounds, and only for rounds that merged someone
+    assert len(hs.train_loss) <= 6
+
+
+def test_sparse_stale_checkpoint_resume(setup):
+    """The stale-priority cache rides the run checkpoint: a fresh
+    engine resuming mid-run matches the uninterrupted run bit-for-bit
+    (winners AND globals — a lost cache would re-prime priorities and
+    diverge)."""
+    params, loss_fn, user_data = setup
+    spec = _spec("sparse", sparse_priority="stale", rounds=6)
+    h_ref, e_ref = _run(setup, spec)
+    with tempfile.TemporaryDirectory() as d:
+        e1 = build_host_engine(spec, params, loss_fn, user_data)
+        h1 = e1.run(checkpoint_dir=d, checkpoint_every=2)
+        assert h1.winners == h_ref.winners
+        e2 = build_host_engine(spec, params, loss_fn, user_data)
+        h2 = e2.run(checkpoint_dir=d)
+        assert h2.winners == h_ref.winners
+        assert _globals_equal(e_ref, e2)
+
+
+# ------------------------------------------------------ mode selection
+def test_auto_selects_sparse_when_k_much_smaller(setup):
+    """round_mode=None auto-selects sparse only when K ≪ U (the
+    SPARSE_AUTO_RATIO rule) over a rectangular cohort."""
+    params, loss_fn, user_data = setup
+    wide = ExperimentSpec(rounds=2, k_per_round=1, batch_size=4)
+    eng = build_host_engine(wide, params, loss_fn, user_data)
+    assert eng.backend._mode == "sparse"
+    tight = ExperimentSpec(rounds=2, k_per_round=2, batch_size=4)
+    eng = build_host_engine(tight, params, loss_fn, user_data)
+    assert eng.backend._mode == "fused"
+
+
+def test_sparse_requires_rectangular_cohort(setup):
+    """A ragged cohort can't stack into the (U, n, ...) prepass tensor:
+    explicit round_mode='sparse' must fail loudly, and auto must fall
+    back to a ragged-capable mode."""
+    params, loss_fn, user_data = setup
+    ragged = [dict(d) for d in user_data]
+    ragged[0] = {"x": ragged[0]["x"][:8], "y": ragged[0]["y"][:8]}
+    with pytest.raises(Exception):
+        eng = build_host_engine(_spec("sparse"), params, loss_fn, ragged)
+        eng.run()
+    auto = ExperimentSpec(rounds=1, k_per_round=1, batch_size=4)
+    eng = build_host_engine(auto, params, loss_fn, ragged)
+    assert eng.backend._mode != "sparse"
+    eng.run()
+
+
+# ---------------------------------------------------------- satellites
+def test_time_to_accuracy_clamps_final_eval():
+    """A post-run final eval at t == rounds (one past the accounting)
+    clamps to elapsed time instead of dropping the reached target."""
+    h = FLHistory(accuracy=[0.4, 0.9], eval_round=[1, 3],
+                  round_seconds=[1.0, 1.0, 1.0],
+                  cumulative_seconds=[1.0, 2.0, 3.0])
+    assert h.time_to_accuracy(0.9) == 3.0      # t=3 clamps to elapsed
+    assert h.time_to_accuracy(0.4) == 2.0      # t=1 reads cumulative
+    assert h.time_to_accuracy(0.99) is None    # never reached
+
+
+def test_time_to_accuracy_empty_history():
+    assert FLHistory().time_to_accuracy(0.5) is None
+
+
+def test_label_heterogeneity_zero_example_user():
+    """An empty user carries NO evidence of divergence — it must score
+    0.0, not the TV-0.5 artifact of an all-zero histogram row."""
+    data = [{"x": np.zeros((4, 2), np.float32),
+             "y": np.array([0, 0, 1, 1])},
+            {"x": np.zeros((0, 2), np.float32),
+             "y": np.zeros(0, np.int64)},
+            {"x": np.zeros((4, 2), np.float32),
+             "y": np.array([1, 1, 1, 1])}]
+    scores = label_heterogeneity(data, num_classes=2)
+    assert scores[1] == 0.0
+    assert scores[0] > 0.0 and scores[2] > 0.0
+    assert np.all((scores >= 0.0) & (scores <= 1.0))
+
+
+def test_selection_result_hashable():
+    """__eq__ is hand-written, so __hash__ must be restored: results
+    live in sets / dict keys, and equal results must hash equal."""
+    a = SelectionResult(winners=[3, 1], collisions=2, elapsed_slots=9)
+    b = SelectionResult(winners=[3, 1], collisions=2, elapsed_slots=9)
+    c = SelectionResult(winners=[1, 3], collisions=2, elapsed_slots=9)
+    assert hash(a) == hash(b) and a == b
+    assert len({a, b, c}) == 2

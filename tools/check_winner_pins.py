@@ -120,6 +120,34 @@ def _scenario_winners():
                 raise SystemExit(
                     f"FAIL: faults-off lane {key} merged globals are "
                     "not bit-equal to the no-faults reference")
+
+    # winner-sparse twins (PR 8): round_mode="sparse" with the default
+    # prepass priority ordering must be the fused program EXACTLY —
+    # selection moves BEFORE training, but the prepass replays the same
+    # full-cohort training on the same client streams and the compact
+    # gather-K merge reduces the same winner rows in the same delivery
+    # order (DESIGN.md §9). Pinned under .../sparse so a regression in
+    # the contention-first reordering (a stream consumed out of turn, a
+    # pad row leaking into the merge) can't slip through.
+    sparse = [ExperimentSpec(rounds=ROUNDS, strategy=sp.strategy,
+                             seed=sp.seed, round_mode="sparse")
+              for sp in specs]
+    engine_sp = build_host_engine(sparse[0], params, loss_fn, user_data)
+    result_sp = engine_sp.run_sweep(sparse)
+    for e, sp in enumerate(specs):
+        key = f"{sp.strategy}/seed{sp.seed}"
+        winners[f"{key}/sparse"] = result_sp.histories[e].winners
+        if result_sp.histories[e].winners != winners[key]:
+            raise SystemExit(
+                f"FAIL: winner-sparse lane {key} diverged from the "
+                "fused reference winners — the contention-first sparse "
+                "path no longer matches the train-first program")
+        for a, b in zip(jax.tree.leaves(result.lane_params(e)),
+                        jax.tree.leaves(result_sp.lane_params(e))):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise SystemExit(
+                    f"FAIL: winner-sparse lane {key} merged globals "
+                    "are not bit-equal to the fused reference")
     return winners
 
 
