@@ -1,0 +1,230 @@
+"""Objectives subsystem benchmark (DESIGN.md §10): the cost of the
+registry on the sweep engine, along three rungs:
+
+  * ``objective=None`` — the pre-PR-9 program (baseline);
+  * plain ``ObjectiveSpec()`` — the registry's dispatch with both sides
+    at fedavg; routes to the untouched programs, so the acceptance bar
+    is <= 5% overhead over baseline;
+  * inert superset lanes — ``feddyn(alpha=0) + fedavgm(beta=0,
+    server_lr=1)``: the generalized train scan, the h gather/scatter
+    and the server-opt step all compiled in but bit-transparent
+    (informational: the price of the superset program when idle);
+  * active lanes — FedDyn + FedAdam firing (informational).
+
+Also times the ``server_opt_combine`` kernel against the gather-merge
+it follows, and a strategies x objectives ``run_sweep`` grid for
+lane throughput (the fig3-style comparison the subsystem exists for).
+
+Writes ``BENCH_objectives.json`` at the repo root (CI uploads it).
+
+  PYTHONPATH=src python -m benchmarks.run objectives              # full
+  BENCH_OBJECTIVES_SMOKE=1 ... python -m benchmarks.run objectives
+  python -m benchmarks.objectives_bench --smoke                   # ditto
+
+Smoke runs write ``BENCH_objectives.smoke.json`` instead, so the
+checked-in full artifact can't be clobbered under its own name. The 5%
+bar is asserted only on full runs — CI smoke boxes are too noisy to
+gate on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+SMOKE = (os.environ.get("BENCH_OBJECTIVES_SMOKE") == "1"
+         or "--smoke" in sys.argv)
+ROUNDS = int(os.environ.get("BENCH_OBJECTIVES_ROUNDS",
+                            "4" if SMOKE else "12"))
+LANES = 2 if SMOKE else 8
+REPS = 1 if SMOKE else 3
+
+_JSON_PATH = os.path.join(
+    os.path.dirname(__file__), "..",
+    "BENCH_objectives.smoke.json" if SMOKE else "BENCH_objectives.json")
+
+
+def _make_problem(num_users, n=64, d=16):
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    data = [{"x": rng.normal(size=(n, d)).astype(np.float32),
+             "y": rng.integers(0, 4, size=(n,))} for _ in range(num_users)]
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        oh = jax.nn.one_hot(batch["y"], 4)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    params = {"w": jnp.zeros((d, 4), jnp.float32),
+              "b": jnp.zeros((4,), jnp.float32)}
+    return data, loss_fn, params
+
+
+def _sweep_wall(objective, data, loss_fn, params):
+    """Best-of-REPS steady-state wall for one E-lane sweep under an
+    objective config: one warmup sweep pays the jit compiles (including
+    the superset train/merge programs), then the engine is reused so
+    the number prices the per-round cost, not tracing."""
+    from repro.engine import ExperimentSpec, SweepSpec, build_host_engine
+
+    specs = [ExperimentSpec(
+        rounds=ROUNDS, k_per_round=4, batch_size=16, local_epochs=2,
+        seed=s, objective=objective) for s in range(LANES)]
+    sw = SweepSpec(specs=specs)
+    eng = build_host_engine(specs[0], params, loss_fn, data)
+    eng.run_sweep(sw)                               # warmup (compiles)
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        eng.run_sweep(sw)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _kernel_section(report, lines):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    K, P = (8, 10_000) if SMOKE else (8, 100_000)
+    key = jax.random.PRNGKey(P)
+    stacked = jax.random.normal(key, (K, P), jnp.float32)
+    glob = jax.random.normal(jax.random.fold_in(key, 1), (P,), jnp.float32)
+    m = jnp.zeros((P,), jnp.float32)
+    v = jnp.zeros((P,), jnp.float32)
+    idx = jnp.arange(K, dtype=jnp.int32)
+    w = jnp.full((K,), 1.0 / K, jnp.float32)
+    consts = jnp.asarray([2.0, 0.9, 0.99, 0.1, 1e-3], jnp.float32)
+
+    gat = jax.jit(lambda s, i, ww, g: ops.gather_combine(s, i, ww, g))
+    srv = jax.jit(lambda a, o, mm, vv, c: ops.server_opt_combine(
+        a, o, mm, vv, c))
+
+    def best_of(fn, *args):
+        jax.block_until_ready(fn(*args))
+        b = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            jax.block_until_ready(fn(*args))
+            b = min(b, time.time() - t0)
+        return b
+
+    gat_s = best_of(gat, stacked, idx, w, glob)
+    avg = gat(stacked, idx, w, glob)
+    srv_s = best_of(srv, avg, glob, m, v, consts)
+    ratio = srv_s / gat_s
+    report["kernel"] = {
+        "k": K, "params": P,
+        "gather_us": round(gat_s * 1e6, 1),
+        "server_opt_us": round(srv_s * 1e6, 1),
+        "server_opt_over_gather": round(ratio, 3),
+    }
+    lines.append(f"objectives/kernel/gather/K{K}_P{P},{gat_s * 1e6:.1f},"
+                 "baseline")
+    lines.append(f"objectives/kernel/server_opt/K{K}_P{P},"
+                 f"{srv_s * 1e6:.1f},ratio_vs_gather={ratio:.2f}x")
+
+
+def _grid_section(report, lines, data, loss_fn, params):
+    """strategies x objectives run_sweep — lane throughput of the
+    mixed-objective superset program (the subsystem's raison d'etre:
+    one device program answers the fig3 question across optimizers)."""
+    from repro.engine import ExperimentSpec, SweepSpec, build_host_engine
+    from repro.objectives import ObjectiveSpec
+
+    objectives = [None,
+                  ObjectiveSpec(local="fedprox", mu=0.01),
+                  ObjectiveSpec(local="feddyn", alpha=0.01,
+                                aggregator="fedadam", server_lr=0.1)]
+    strategies = ("priority-distributed", "priority-centralized")
+    base = ExperimentSpec(rounds=ROUNDS, k_per_round=4, batch_size=16,
+                          local_epochs=2, seed=0)
+    sw = SweepSpec.grid(base, strategy=strategies, objective=objectives)
+    eng = build_host_engine(sw.specs[0], params, loss_fn, data)
+    eng.run_sweep(sw)                               # warmup
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.time()
+        eng.run_sweep(sw)
+        best = min(best, time.time() - t0)
+    E = len(sw)
+    lane_rounds_s = E * ROUNDS / best
+    report["grid"] = {
+        "lanes": E, "rounds": ROUNDS,
+        "strategies": list(strategies),
+        "objectives": ["none", "fedprox", "feddyn+fedadam"],
+        "wall_s": round(best, 4),
+        "lane_rounds_per_s": round(lane_rounds_s, 1),
+    }
+    lines.append(f"objectives/grid/E{E},{best / ROUNDS * 1e6:.0f},"
+                 f"lane_rounds_per_s={lane_rounds_s:.1f}")
+
+
+def run():
+    import jax
+    from repro.objectives import ObjectiveSpec
+
+    lines = []
+    report = {
+        "config": {"smoke": SMOKE, "rounds": ROUNDS, "lanes": LANES},
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "e2e": {},
+    }
+    _kernel_section(report, lines)
+
+    U = 16 if SMOKE else 32
+    data, loss_fn, params = _make_problem(U)
+
+    base_s = _sweep_wall(None, data, loss_fn, params)
+    plain_s = _sweep_wall(ObjectiveSpec(), data, loss_fn, params)
+    inert = ObjectiveSpec(local="feddyn", alpha=0.0,
+                          aggregator="fedavgm", beta=0.0, server_lr=1.0)
+    inert_s = _sweep_wall(inert, data, loss_fn, params)
+    active = ObjectiveSpec(local="feddyn", alpha=0.01,
+                           aggregator="fedadam", server_lr=0.1)
+    active_s = _sweep_wall(active, data, loss_fn, params)
+
+    overhead = plain_s / base_s - 1.0
+    superset = inert_s / base_s - 1.0
+    report["e2e"] = {
+        "lanes": LANES, "rounds": ROUNDS, "num_users": U,
+        "objective_none_s": round(base_s, 4),
+        "objective_plain_s": round(plain_s, 4),
+        "plain_overhead_pct": round(overhead * 100, 2),
+        "objective_inert_superset_s": round(inert_s, 4),
+        "inert_superset_overhead_pct": round(superset * 100, 2),
+        "objective_active_s": round(active_s, 4),
+    }
+    lines.append(f"objectives/e2e/none,{base_s / ROUNDS * 1e6:.0f},"
+                 f"baseline;lanes={LANES}")
+    lines.append(f"objectives/e2e/plain,{plain_s / ROUNDS * 1e6:.0f},"
+                 f"overhead={overhead * 100:.1f}%")
+    lines.append(f"objectives/e2e/inert_superset,"
+                 f"{inert_s / ROUNDS * 1e6:.0f},"
+                 f"overhead={superset * 100:.1f}%")
+    lines.append(f"objectives/e2e/active,{active_s / ROUNDS * 1e6:.0f},"
+                 "feddyn+fedadam")
+
+    _grid_section(report, lines, data, loss_fn, params)
+
+    # write BEFORE asserting — an overhead break must not discard numbers
+    with open(_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    lines.append(f"objectives/json,0,wrote={os.path.abspath(_JSON_PATH)}")
+    if not SMOKE:
+        assert overhead <= 0.05, (
+            f"plain ObjectiveSpec costs {overhead * 100:.1f}% over "
+            "objective=None (acceptance bar: 5%)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print("\n".join(run()))

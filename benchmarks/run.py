@@ -13,9 +13,9 @@ import traceback
 
 from benchmarks import (channel_bench, contention_bench, faults_bench,
                         fig2_iid, fig3_noniid, fig4_fairness,
-                        fig5_counter_acc, fig6_cw_size, roofline,
-                        kernel_bench, round_bench, sparse_bench,
-                        sweep_bench)
+                        fig5_counter_acc, fig6_cw_size, objectives_bench,
+                        roofline, kernel_bench, round_bench,
+                        sparse_bench, sweep_bench)
 
 SUITES = {
     "fig2": fig2_iid.run,
@@ -26,6 +26,7 @@ SUITES = {
     "csma": contention_bench.run,
     "channel": channel_bench.run,
     "faults": faults_bench.run,
+    "objectives": objectives_bench.run,
     "round": round_bench.run,
     "sparse": sparse_bench.run,
     "sweep": sweep_bench.run,

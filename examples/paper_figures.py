@@ -1,7 +1,11 @@
 """Reproduce the paper's Fig. 2 / Fig. 3 strategy-comparison curves with
 ONE ``run_sweep`` call per figure, plus the two channel-layer figures
 (DESIGN.md §7): final accuracy vs SNR (tx power) under PER-gated
-AirComp uploads, and convergence time vs uplink bandwidth.
+AirComp uploads, and convergence time vs uplink bandwidth — and the
+objectives extension of the Fig. 3 question (DESIGN.md §10): does the
+distributed-selection gap survive heterogeneity-aware local objectives
+(FedProx / FedDyn)? The objective is a sweep AXIS, so the whole
+strategies x objectives grid is still one ``run_sweep``.
 
 Each figure is a sweep: the cells (strategies x seeds, or channel
 operating points x seeds) stack into a single device program — no
@@ -78,6 +82,36 @@ def figure(name: str, iid: bool):
               f"  auc {mean.mean():.3f}")
 
 
+def figure_objectives():
+    """Fig. 3 extension: non-IID accuracy, distributed vs centralized
+    selection, across local objectives — one run_sweep over the
+    strategies x objectives x seeds grid. Plain FedAvg lanes and
+    FedProx/FedDyn lanes share one superset device program."""
+    from repro.engine import ObjectiveSpec
+    objectives = [None,
+                  ObjectiveSpec(local="fedprox", mu=0.01),
+                  ObjectiveSpec(local="feddyn", alpha=0.01)]
+    obj_names = ["fedavg", "fedprox", "feddyn"]
+    strategies = ["priority-distributed", "priority-centralized"]
+    base = ExperimentSpec(rounds=ROUNDS, eval_every=2, local_epochs=2)
+    sweep = SweepSpec.grid(base, strategy=strategies,
+                           objective=objectives,
+                           seed=list(range(SEEDS)))
+    engine = build_engine(False, base)
+    result = engine.run_sweep(sweep)
+
+    print(f"\n== Fig. 3 x objectives (non-IID; {len(sweep)} cells, "
+          f"one run_sweep, {result.wall_s:.1f}s) ==")
+    for i, strat in enumerate(strategies):
+        for j, name in enumerate(obj_names):
+            lo = (i * len(objectives) + j) * SEEDS
+            hists = result.histories[lo:lo + SEEDS]
+            curves = np.array([h.accuracy for h in hists])
+            mean = curves.mean(axis=0)
+            print(f"  {strat:22s} {name:8s} |{text_curve(mean)}| "
+                  f"final {mean[-1]:.3f}  auc {mean.mean():.3f}")
+
+
 def figure_accuracy_vs_snr():
     """Channel figure 1: final accuracy vs mean SNR (tx power axis),
     PER-gated uploads + noisy AirComp merge — the wireless price of
@@ -134,6 +168,7 @@ def figure_time_vs_bandwidth():
 def main():
     figure("Fig. 2", iid=True)
     figure("Fig. 3", iid=False)
+    figure_objectives()
     figure_accuracy_vs_snr()
     figure_time_vs_bandwidth()
 

@@ -42,6 +42,13 @@ provably opt-in (winners are bit-identical with the channel disabled).
 The fault streams (PR 7) extend the same contract to the
 fault-injection layer: enabling a ``FaultSpec`` never perturbs the
 engine / strategy / client / channel draws.
+
+The objectives subsystem (PR 9, DESIGN.md §10) has NO stream here by
+design: registered local objectives and server aggregators draw
+nothing — every piece of optimizer state (server-opt m/v, FedDyn
+per-user h) is zero-initialized — so an ``ObjectiveSpec`` can never
+move any stream above, which is what makes the inert-objective
+winner-pin twins bit-exact.
 """
 from __future__ import annotations
 

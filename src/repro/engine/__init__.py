@@ -31,12 +31,14 @@ from repro.engine.backends import (Backend, HostBackend, SiloBackend,
                                    label_heterogeneity)
 from repro.engine.engine import FLEngine, build_host_engine
 from repro.engine.evals import make_accuracy_eval
+from repro.objectives import ObjectiveSpec
 
 __all__ = [
     "ChannelModel", "ChannelSpec", "MergeContext",
     "available_strategies", "create_strategy", "get_strategy_class",
     "register_strategy", "select_grouped", "supports_batched_select",
-    "ExperimentSpec", "SweepSpec", "FLHistory", "SelectionContext",
+    "ExperimentSpec", "SweepSpec", "ObjectiveSpec", "FLHistory",
+    "SelectionContext",
     "SelectionResult", "SweepResult", "TrainResult",
     "PAPER_STRATEGIES", "Strategy", "Backend", "HostBackend",
     "SiloBackend", "SweepState", "SweepTrainResult",

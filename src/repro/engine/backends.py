@@ -81,6 +81,7 @@ from repro.core.server import winner_alphas
 from repro.engine.types import TrainResult
 from repro.faults.robust import robust_merge
 from repro.kernels import ops as kops
+from repro.objectives import build_objective_table, objective_epoch_scan
 from repro.sharding.cohort import (cohort_sharding, replicated_sharding,
                                    shardable, sweep_global_sharding,
                                    sweep_sharding, sweep_shardable,
@@ -150,11 +151,21 @@ class SweepState:
     ``rngs[e][u]`` is lane e / user u's epoch-permutation stream, seeded
     from the LANE's spec seed (not the backend's), so each lane draws
     the identical batches a sequential run of that spec would.
+
+    ``obj`` is the sweep's ``ObjectiveTable`` (None = every lane plain
+    FedAvg → the pre-registry programs); ``m``/``v`` the (E, ...)
+    server-opt moments and ``h`` the (E, U, ...) FedDyn state, all
+    device-resident next to ``glob`` and chained through donation
+    (DESIGN.md §10).
     """
     num_lanes: int
     glob: Any
     stack: Any
     rngs: List[List[np.random.Generator]]
+    obj: Any = None
+    m: Any = None
+    v: Any = None
+    h: Any = None
 
 
 @dataclass
@@ -183,14 +194,17 @@ class Backend:
         raise NotImplementedError
 
     def merge(self, state, train_result: TrainResult, winners: List[int],
-              merge_ctx=None, fault_ctx=None):
+              merge_ctx=None, fault_ctx=None, attempts=None):
         """Eq. 1 over ``winners``. ``merge_ctx`` (a
         ``repro.channel.MergeContext``) switches the digital FedAvg
         reduction to the AirComp analog superposition; ``fault_ctx`` (a
         ``repro.faults.FaultMergeContext``) routes it through the
         robust guard pass (quarantine / clip / stale groups) instead —
         backends that don't implement a context must reject it non-None.
-        The two contexts are mutually exclusive (spec-validated)."""
+        The two contexts are mutually exclusive (spec-validated).
+        ``attempts`` is the round's ATTEMPT winner list (pre-channel
+        gate) — consumed only by h-carrying objectives (DESIGN.md §10);
+        backends without objective support may ignore it."""
         raise NotImplementedError
 
     def global_params(self, state):
@@ -234,6 +248,29 @@ class Backend:
             raise NotImplementedError(
                 f"{type(self).__name__} has no priority cache to restore")
 
+    # ---- objectives contract (optional; HostBackend's fused / sparse
+    # paths implement it — DESIGN.md §10) ------------------------------
+    def objective_active(self) -> bool:
+        """True when the backend was built with a non-plain objective
+        (the engine refuses a non-plain spec on backends reporting
+        False)."""
+        return False
+
+    def objective_needs_h(self) -> bool:
+        """True when merges must run on h-carrying rounds even without
+        deliveries (feddyn: attempts update h)."""
+        return False
+
+    def objective_state(self):
+        """Host snapshot of the single-run objective state (server m/v,
+        FedDyn h) for checkpoint/resume, or None."""
+        return None
+
+    def restore_objective_state(self, state) -> None:
+        if state is not None:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no objective state to restore")
+
 
 class HostBackend(Backend):
     """Paper-scale simulation over host data. See module docstring for
@@ -260,11 +297,18 @@ class HostBackend(Backend):
                  round_mode: Optional[str] = None, mesh=None,
                  k_max: Optional[int] = None,
                  sparse_priority: str = "prepass",
-                 sparse_chunk: int = 256):
+                 sparse_chunk: int = 256, objective=None):
         if round_mode is None:
             round_mode = "fused" if prefer_vmap else "ragged"
         if round_mode not in ("fused", "stacked", "ragged", "sparse"):
             raise ValueError(f"unknown round_mode {round_mode!r}")
+        self._objective = objective
+        obj_on = objective is not None and not objective.is_plain
+        if obj_on and round_mode in ("stacked", "ragged"):
+            raise ValueError(
+                "non-plain objectives compile into the fused / sparse "
+                f"device programs only; round_mode={round_mode!r} is the "
+                "uncompiled fallback path (DESIGN.md §10)")
         if round_mode == "sparse" and not k_max:
             raise ValueError(
                 "round_mode='sparse' needs k_max (the spec's "
@@ -328,6 +372,12 @@ class HostBackend(Backend):
                 "and compact gather-K train steps stack user data into "
                 "one (U, n, ...) tensor; use round_mode=None (auto) or "
                 "'ragged' for uneven cohorts")
+        if obj_on and not self._rect:
+            raise ValueError(
+                "non-plain objectives need a rectangular cohort (equal "
+                "per-user example counts >= batch_size): the objective "
+                "grad law compiles into the fused / sparse stacked "
+                "train steps only (DESIGN.md §10)")
         self._xstack = None        # (U, n, ...) pre-stacked user data
         self._fused_round = None
         self._fused_merge_fn = None
@@ -352,6 +402,17 @@ class HostBackend(Backend):
         self._sweep_sparse_fns = {}   # E -> sparse sweep jits
         self._sweep_stale_prios = {}  # E -> (E, U) f64 cache
         self._pending_sweep_big = None
+        # ---- objectives state (DESIGN.md §10; lazy) -------------------
+        self._obj_run = None          # objective_epoch_scan closure
+        self._obj_merge_fn = None     # jitted single-run objective merge
+        self._obj_m = None            # server-opt first moment (~ glob)
+        self._obj_v = None            # server-opt second moment
+        self._obj_h = None            # (U, ...) per-user FedDyn h-state
+        self._sweep_obj_round = {}    # (E, use_h) -> dense sweep round
+        self._sweep_obj_merge_fns = {}  # (E, okey) -> sweep merge (the
+        #                               one program both the dense and
+        #                               sparse sweeps jit, by shape)
+        self._sweep_sparse_obj = {}   # (E, use_h) -> (round, prepass)
 
     # ------------------------------------------------------------------
     def init_state(self, init_params):
@@ -370,6 +431,61 @@ class HostBackend(Backend):
     def _can_fuse(self, train_ids) -> bool:
         return (self._mode == "fused" and self._rect
                 and len(train_ids) == self.num_users)
+
+    # -------------------------------------- objectives helpers (§10)
+    def objective_active(self) -> bool:
+        return (self._objective is not None
+                and not self._objective.is_plain)
+
+    def objective_needs_h(self) -> bool:
+        return self.objective_active() and self._objective.uses_h
+
+    def _ensure_obj_run(self):
+        if self._obj_run is None:
+            self._obj_run = objective_epoch_scan(
+                self._loss_fn, self._lr, self._objective.uses_h)
+        return self._obj_run
+
+    def _ensure_obj_h(self, state):
+        """(U, ...) FedDyn h pytree, zero-initialized on first touch
+        (no RNG — the objectives subsystem draws nothing)."""
+        if self._obj_h is None:
+            U = self.num_users
+            self._obj_h = jax.tree.map(
+                lambda p: jnp.zeros((U,) + jnp.shape(p),
+                                    jnp.asarray(p).dtype), state)
+        return self._obj_h
+
+    def objective_state(self):
+        """Checkpoint payload: host copies of the server-opt moments and
+        the FedDyn h-state (None entries for pieces this objective never
+        materialized — bit-identical resume re-zero-initializes them)."""
+        if not self.objective_active():
+            return None
+        host = lambda x: None if x is None else jax.device_get(x)
+        return {"m": host(self._obj_m), "v": host(self._obj_v),
+                "h": host(self._obj_h)}
+
+    def restore_objective_state(self, state) -> None:
+        if state is None:
+            return
+        dev = lambda x: (None if x is None
+                         else jax.tree.map(jnp.asarray, x))
+        self._obj_m = dev(state.get("m"))
+        self._obj_v = dev(state.get("v"))
+        self._obj_h = dev(state.get("h"))
+
+    def adopt_sweep_objective(self, st) -> None:
+        """E=1 delegation continuity: when ``run()`` routes through the
+        sweep path, strip the lane axis off the sweep objective state so
+        a later single-run resume picks up the same moments/h."""
+        if st.obj is None:
+            return
+        lane0 = lambda x: (None if x is None
+                           else jax.tree.map(lambda p: p[0], x))
+        self._obj_m = lane0(st.m)
+        self._obj_v = lane0(st.v)
+        self._obj_h = lane0(st.h)
 
     # ------------------------------------------------- fused round path
     def _ensure_xstack(self):
@@ -414,11 +530,7 @@ class HostBackend(Backend):
             return jax.tree.map(
                 lambda p: jnp.broadcast_to(p[None], (U,) + p.shape), g)
 
-        def fused_round(stack, batched, need_prio):
-            # rows of `stack` are identical at round start (the merged /
-            # broadcast global), so row 0 is the Eq. 2 reference model
-            glob = jax.tree.map(lambda p: p[0], stack)
-            trained, losses = jax.vmap(epoch_run)(stack, batched)
+        def _round_tail(trained, losses, glob, need_prio):
             # per-user loss = mean over the LAST epoch's batches, the
             # exact quantity the stacked / ragged paths report
             loss_u = losses[:, -nb:].mean(axis=1)
@@ -429,8 +541,51 @@ class HostBackend(Backend):
                 prios = jnp.ones((U,), jnp.float32)
             return trained, loss_u, prios
 
+        obj_on = self.objective_active()
+        use_h = obj_on and self._objective.uses_h
+        if obj_on:
+            obj_run = self._ensure_obj_run()
+            # closed-over constant: the single path serves ONE spec, so
+            # an inert coefficient constant-folds the guard away and the
+            # compiled math is literally the plain program's
+            prox = jnp.float32(self._objective.prox_coeff)
+        if use_h:
+            def fused_round(stack, batched, h, need_prio):
+                glob = jax.tree.map(lambda p: p[0], stack)
+                trained, losses = jax.vmap(
+                    obj_run, in_axes=(0, 0, None, None, 0))(
+                        stack, batched, glob, prox, h)
+                return _round_tail(trained, losses, glob, need_prio)
+            fr_static = 3
+        elif obj_on:
+            def fused_round(stack, batched, need_prio):
+                glob = jax.tree.map(lambda p: p[0], stack)
+                trained, losses = jax.vmap(
+                    obj_run, in_axes=(0, 0, None, None))(
+                        stack, batched, glob, prox)
+                return _round_tail(trained, losses, glob, need_prio)
+            fr_static = 2
+        else:
+            def fused_round(stack, batched, need_prio):
+                # rows of `stack` are identical at round start (the
+                # merged / broadcast global), so row 0 is the Eq. 2
+                # reference model
+                glob = jax.tree.map(lambda p: p[0], stack)
+                trained, losses = jax.vmap(epoch_run)(stack, batched)
+                return _round_tail(trained, losses, glob, need_prio)
+            fr_static = 2
+
         fused_merge = self._merge_def(uk)
-        if self._shard:
+        if self._shard and obj_on:
+            # objective runs don't take the explicit-sharding fast path
+            # (the extra h operand has no spec); GSPMD still propagates
+            # from the input shardings under a real mesh
+            self._bcast = jax.jit(bcast)
+            self._fused_round = jax.jit(fused_round,
+                                        static_argnums=fr_static,
+                                        donate_argnums=0)
+            self._fused_merge_fn = jax.jit(fused_merge, donate_argnums=0)
+        elif self._shard:
             cs = cohort_sharding(self._mesh)
             rep = replicated_sharding(self._mesh)
             self._bcast = jax.jit(bcast, out_shardings=cs)
@@ -442,7 +597,8 @@ class HostBackend(Backend):
                 in_shardings=(cs, rep, rep, rep), out_shardings=(rep, cs))
         else:
             self._bcast = jax.jit(bcast)
-            self._fused_round = jax.jit(fused_round, static_argnums=2,
+            self._fused_round = jax.jit(fused_round,
+                                        static_argnums=fr_static,
                                         donate_argnums=0)
             self._fused_merge_fn = jax.jit(fused_merge, donate_argnums=0)
 
@@ -521,8 +677,13 @@ class HostBackend(Backend):
             stack = self._bcast(state)      # first round / unmerged round
         # the stack buffer is donated into the trained stack below
         self._resident = self._resident_key = None
-        trained, loss_vec, prios = self._fused_round(
-            stack, self._fused_batches(), bool(need_priority))
+        if self.objective_needs_h():
+            trained, loss_vec, prios = self._fused_round(
+                stack, self._fused_batches(), self._ensure_obj_h(state),
+                bool(need_priority))
+        else:
+            trained, loss_vec, prios = self._fused_round(
+                stack, self._fused_batches(), bool(need_priority))
         priorities = (np.asarray(prios, np.float64).copy()
                       if need_priority else np.ones(self.num_users))
         # dense (U,) loss vector — a per-user dict would reintroduce the
@@ -539,6 +700,11 @@ class HostBackend(Backend):
                                local_handle={})
         if self._can_fuse(train_ids):
             return self._train_round_fused(state, need_priority)
+        if self.objective_active():
+            raise RuntimeError(
+                "non-plain objective on an unfused round (partial "
+                "cohort?): objectives compile into the fused / sparse "
+                "device programs only (DESIGN.md §10)")
         if self._mode != "ragged" and self._can_stack(train_ids):
             # PR-1 stacked path: epoch-batch on host with each client's
             # own rng stream, then train the whole (sub)cohort as one
@@ -606,7 +772,7 @@ class HostBackend(Backend):
         return max(m, 1)
 
     def merge(self, state, train_result, winners, merge_ctx=None,
-              fault_ctx=None):
+              fault_ctx=None, attempts=None):
         handle = train_result.local_handle
         is_fused = isinstance(handle, dict) and "fused_stack" in handle
         is_sparse = isinstance(handle, dict) and "sparse_stack" in handle
@@ -635,8 +801,14 @@ class HostBackend(Backend):
                     k_pad, pos,
                     [self.clients[u].num_examples for u in winners])
                 if merge_ctx is None:
-                    new_glob, new_stack = self._fused_merge_fn(
-                        trained, jnp.asarray(idx), jnp.asarray(w), state)
+                    if self.objective_active():
+                        new_glob, new_stack = self._objective_merge(
+                            state, trained, idx, w, attempts, handle,
+                            is_fused)
+                    else:
+                        new_glob, new_stack = self._fused_merge_fn(
+                            trained, jnp.asarray(idx), jnp.asarray(w),
+                            state)
                 else:
                     if self._fused_merge_air is None:
                         self._build_fused_air()
@@ -679,6 +851,133 @@ class HostBackend(Backend):
                     l, idx, w, g, use_kernel=self._use_kernel),
                 stacked, state)
         return self._gather_merge_air(models, sizes, winners, merge_ctx)
+
+    # ------------------------------------ objective merge program (§10)
+    def _build_obj_merge(self):
+        """Objective twin of ``fused_merge`` (one program for the dense
+        AND sparse handles — jit re-specializes on the trained stack's
+        row count): Eq. 1 gather_combine per leaf, then the server-opt
+        step on the pseudo-gradient, then the merge-time FedDyn h
+        scatter. Argument layout after ``(trained, idx, w, old_glob)``:
+        ``[m, v]`` when the aggregator carries state, then
+        ``[h, hsrc, hdst]`` when the local objective carries h.
+        ``trained`` and the m/v/h state are donated (device-resident
+        chain); ``old_glob`` is NOT (round 0 may pass init_params)."""
+        uk = self._use_kernel
+        obj = self._objective
+        use_h, use_srv = obj.uses_h, obj.uses_server
+        consts = jnp.asarray(obj.server_consts())
+        alpha = jnp.float32(obj.alpha_coeff)
+
+        def obj_merge(trained, idx, w, old_glob, *rest):
+            i = 0
+            if use_srv:
+                m, v = rest[0], rest[1]
+                i = 2
+            if use_h:
+                h, hsrc, hdst = rest[i], rest[i + 1], rest[i + 2]
+            avg = jax.tree.map(
+                lambda l, g: kops.gather_combine(l, idx, w, g,
+                                                 use_kernel=uk),
+                trained, old_glob)
+            if use_srv:
+                # winnerless guard: a round with zero delivered mass
+                # must not decay the server momentum — the plain path
+                # skips its merge entirely on such rounds, so the
+                # server-opt state freezes and the output stays the
+                # (glob-keeping) average, bitwise
+                has = jnp.any(w != 0.0)
+                al, td = jax.tree.flatten(avg)
+                ol = jax.tree.leaves(old_glob)
+                ml = jax.tree.leaves(m)
+                vl = jax.tree.leaves(v)
+                go, gm, gv = [], [], []
+                for a_l, o_l, m_l, v_l in zip(al, ol, ml, vl):
+                    o2, m2, v2 = kops.server_opt_combine(
+                        a_l, o_l, m_l, v_l, consts, use_kernel=uk)
+                    go.append(jnp.where(has, o2, a_l))
+                    gm.append(jnp.where(has, m2, m_l))
+                    gv.append(jnp.where(has, v2, v_l))
+                new_glob = jax.tree.unflatten(td, go)
+                new_m = jax.tree.unflatten(td, gm)
+                new_v = jax.tree.unflatten(td, gv)
+            else:
+                new_glob = avg
+            if use_h:
+                # h_u <- h_u - alpha * (w_u^end - w_glob), keyed to the
+                # round's ATTEMPT winners (the clients that trained — a
+                # channel drop doesn't undo a local h update). Pad
+                # slots carry dst = U and drop out of bounds, so they
+                # can't flip a -0.0 h entry; alpha == 0 keeps h bitwise.
+                rows = jax.tree.map(
+                    lambda l: jnp.take(l, hsrc, axis=0), trained)
+                new_h = jax.tree.map(
+                    lambda hh, r, wg: jnp.where(
+                        alpha != 0.0,
+                        hh.at[hdst].add(-alpha * (r - wg[None]),
+                                        mode="drop"),
+                        hh),
+                    h, rows, old_glob)
+            new_stack = jax.tree.map(
+                lambda g, l: jnp.broadcast_to(g[None], l.shape),
+                new_glob, trained)
+            out = [new_glob, new_stack]
+            if use_srv:
+                out += [new_m, new_v]
+            if use_h:
+                out += [new_h]
+            return tuple(out)
+
+        donate = [0]
+        if use_srv:
+            donate += [4, 5]
+        if use_h:
+            donate += [4 + (2 if use_srv else 0)]
+        self._obj_merge_fn = jax.jit(obj_merge,
+                                     donate_argnums=tuple(donate))
+        return self._obj_merge_fn
+
+    def _objective_merge(self, state, trained, idx, w, attempts, handle,
+                         is_fused):
+        """Assemble the objective merge call: lazy zero-init of the m/v/h
+        state, host-side (kh,) attempt gather/scatter vectors (row
+        indices into the trained stack — user ids on the dense handle,
+        delivery positions on the sparse one — and destination user
+        ids, pads parked at U), then dispatch and re-own the donated
+        state outputs."""
+        obj = self._objective
+        fn = self._obj_merge_fn or self._build_obj_merge()
+        args = [trained, jnp.asarray(idx), jnp.asarray(w), state]
+        if obj.uses_server:
+            if self._obj_m is None:
+                self._obj_m = jax.tree.map(
+                    lambda p: jnp.zeros_like(jnp.asarray(p)), state)
+                self._obj_v = jax.tree.map(
+                    lambda p: jnp.zeros_like(jnp.asarray(p)), state)
+            args += [self._obj_m, self._obj_v]
+            self._obj_m = self._obj_v = None     # donated below
+        if obj.uses_h:
+            att = [int(u) for u in (attempts or [])]
+            kh = self._k_pad(len(att))
+            hsrc = np.zeros(kh, np.int32)
+            hdst = np.full(kh, self.num_users, np.int32)
+            if att:
+                hsrc[:len(att)] = (att if is_fused
+                                   else [handle["winners"].index(u)
+                                         for u in att])
+                hdst[:len(att)] = att
+            args += [self._ensure_obj_h(state), jnp.asarray(hsrc),
+                     jnp.asarray(hdst)]
+            self._obj_h = None                   # donated below
+        out = fn(*args)
+        new_glob, new_stack = out[0], out[1]
+        i = 2
+        if obj.uses_server:
+            self._obj_m, self._obj_v = out[i], out[i + 1]
+            i += 2
+        if obj.uses_h:
+            self._obj_h = out[i]
+        return new_glob, new_stack
 
     # ----------------------------------------- robust merge twins (§8)
     def _build_fused_fault(self, key):
@@ -795,30 +1094,48 @@ class HostBackend(Backend):
         K = self._k_max
         self._ensure_xstack()
         nb, epoch_run = self._nb, self._epoch_run
+        obj_on = self.objective_active()
+        # objective programs skip the explicit sharding annotations
+        # (same rule as the fused path: plain jit, GSPMD propagates)
         shard = (self._mesh is not None
-                 and winner_shardable(K, self._mesh))
+                 and winner_shardable(K, self._mesh) and not obj_on)
         # same rule as the fused path: Pallas under real GSPMD
         # partitioning needs custom partitioning, so a >1-way K split
         # routes the reductions through the jnp oracle
         uk = (not shard) or self._mesh.size == 1
         self._sparse_uk = uk
+        use_h = obj_on and self._objective.uses_h
+        if obj_on:
+            obj_run = self._ensure_obj_run()
+            prox = jnp.float32(self._objective.prox_coeff)
+
+            def train_rows(stack, batched, glob, h_rows):
+                if use_h:
+                    return jax.vmap(obj_run,
+                                    in_axes=(0, 0, None, None, 0))(
+                        stack, batched, glob, prox, h_rows)
+                return jax.vmap(obj_run, in_axes=(0, 0, None, None))(
+                    stack, batched, glob, prox)
 
         def bcast_k(g):
             return jax.tree.map(
                 lambda p: jnp.broadcast_to(p[None], (K,) + p.shape), g)
 
-        def sparse_round(stack, batched):
+        def _round_body(stack, batched, h_rows):
             # rows are identical at round start (broadcast global), so
             # row 0 is the Eq. 2 reference — same trick as fused_round.
             # Priorities are always computed: K rows are cheap, and the
             # "stale" mode feeds them back into its cache.
             glob = jax.tree.map(lambda p: p[0], stack)
-            trained, losses = jax.vmap(epoch_run)(stack, batched)
+            if obj_on:
+                trained, losses = train_rows(stack, batched, glob, h_rows)
+            else:
+                trained, losses = jax.vmap(epoch_run)(stack, batched)
             loss_k = losses[:, -nb:].mean(axis=1)
             prios = stacked_model_priorities(trained, glob, use_kernel=uk)
             return trained, loss_k, prios
 
-        def prepass_chunk(glob, batched):
+        def _prepass_body(glob, batched, h_rows):
             # exact Eq. 2 over one chunk: train-and-discard — only the
             # (C,) losses/priorities leave the call, so peak memory is
             # O(chunk · params) regardless of U. Per-row results of a
@@ -828,10 +1145,25 @@ class HostBackend(Backend):
             C = jax.tree.leaves(batched)[0].shape[0]
             stack = jax.tree.map(
                 lambda p: jnp.broadcast_to(p[None], (C,) + p.shape), glob)
-            trained, losses = jax.vmap(epoch_run)(stack, batched)
+            if obj_on:
+                trained, losses = train_rows(stack, batched, glob, h_rows)
+            else:
+                trained, losses = jax.vmap(epoch_run)(stack, batched)
             loss_c = losses[:, -nb:].mean(axis=1)
             prios = stacked_model_priorities(trained, glob, use_kernel=uk)
             return loss_c, prios
+
+        # the h-carrying variants take the winners' h rows as a third
+        # traced argument; the others keep the original 2-arg signature
+        # (no retrace churn for plain/fedprox specs)
+        if use_h:
+            sparse_round = _round_body
+            prepass_chunk = _prepass_body
+        else:
+            sparse_round = lambda stack, batched: _round_body(
+                stack, batched, None)
+            prepass_chunk = lambda glob, batched: _prepass_body(
+                glob, batched, None)
 
         fused_merge = self._merge_def(uk)
         if shard:
@@ -876,10 +1208,17 @@ class HostBackend(Backend):
         C = max(1, min(self._sparse_chunk, U))
         losses = np.empty(U)
         prios = np.empty(U)
+        needs_h = self.objective_needs_h()
+        h = self._ensure_obj_h(state) if needs_h else None
         for lo in range(0, U, C):
             rows = np.arange(lo, min(lo + C, U))
-            l, p = self._prepass_fn(state, self._gather_rows(
-                rows, big[rows]))
+            batched = self._gather_rows(rows, big[rows])
+            if needs_h:
+                hc = jax.tree.map(
+                    lambda hh: hh[lo:lo + len(rows)], h)
+                l, p = self._prepass_fn(state, batched, hc)
+            else:
+                l, p = self._prepass_fn(state, batched)
             losses[lo:lo + len(rows)] = np.asarray(l, np.float64)
             prios[lo:lo + len(rows)] = np.asarray(p, np.float64)
         return prios, losses
@@ -924,7 +1263,15 @@ class HostBackend(Backend):
         else:
             stack = self._sparse_bcast(state)
         self._resident = self._resident_key = None
-        trained, loss_k, prios_k = self._sparse_round(stack, batched)
+        if self.objective_needs_h():
+            # pad rows gather user 0's h alongside its batches —
+            # harmless (zero merge weight, output row discarded)
+            h_rows = jax.tree.map(lambda hh: hh[rows],
+                                  self._ensure_obj_h(state))
+            trained, loss_k, prios_k = self._sparse_round(
+                stack, batched, h_rows)
+        else:
+            trained, loss_k, prios_k = self._sparse_round(stack, batched)
         if self._sparse_priority == "stale" and m:
             if self._stale_prios is None:
                 self._stale_prios = np.ones(self.num_users, np.float64)
@@ -1027,14 +1374,218 @@ class HostBackend(Backend):
         self._sweep_fns[E] = fns
         return fns
 
-    def sweep_init(self, init_params, seeds: Sequence[int]) -> SweepState:
+    # --------------------------------- objective sweep programs (§10)
+    # The objective is a sweep AXIS: lanes with different objectives
+    # share ONE superset program built from the union of their
+    # structural flags; per-lane (E,) prox/alpha vectors and (E, 5)
+    # server consts arrive as traced arguments, so inert lanes pass
+    # through bitwise via the same runtime guards the single path
+    # constant-folds. Unsharded (plain jit, GSPMD propagates) — same
+    # rule as the single-run objective programs.
+    def _build_sweep_obj_round(self, E: int, use_h: bool):
+        U = self.num_users
+        self._ensure_xstack()
+        nb, uk = self._nb, self._use_kernel
+        obj_run = objective_epoch_scan(self._loss_fn, self._lr, use_h)
+
+        def _tail(trained, losses, glob, need_prio):
+            loss_u = losses[:, :, -nb:].mean(axis=2)          # (E, U)
+            if need_prio:
+                prios = jax.vmap(
+                    lambda tr, g: stacked_model_priorities(
+                        tr, g, use_kernel=uk))(trained, glob)
+            else:
+                prios = jnp.ones((E, U), jnp.float32)
+            return trained, loss_u, prios
+
+        if use_h:
+            def sweep_obj_round(stack, batched, prox, h, need_prio):
+                glob = jax.tree.map(lambda p: p[:, 0], stack)
+                trained, losses = jax.vmap(
+                    lambda s, b, g, p, hh: jax.vmap(
+                        obj_run, in_axes=(0, 0, None, None, 0))(
+                            s, b, g, p, hh))(stack, batched, glob,
+                                             prox, h)
+                return _tail(trained, losses, glob, need_prio)
+            static = 4
+        else:
+            def sweep_obj_round(stack, batched, prox, need_prio):
+                glob = jax.tree.map(lambda p: p[:, 0], stack)
+                trained, losses = jax.vmap(
+                    lambda s, b, g, p: jax.vmap(
+                        obj_run, in_axes=(0, 0, None, None))(
+                            s, b, g, p))(stack, batched, glob, prox)
+                return _tail(trained, losses, glob, need_prio)
+            static = 3
+        fn = jax.jit(sweep_obj_round, static_argnums=static,
+                     donate_argnums=0)
+        self._sweep_obj_round[(E, use_h)] = fn
+        return fn
+
+    def _build_sweep_obj_merge(self, E: int, okey):
+        """Objective twin of the sweep merge — ONE program for the
+        dense AND sparse sweeps (jit re-specializes on the trained
+        stack's row count). Per-lane Eq. 1 gather_combine, the vmapped
+        server-opt step under per-lane (E, 5) consts rows, then the
+        per-lane FedDyn h scatter under (E,) alphas."""
+        use_h, use_srv = okey
+        uk = self._use_kernel
+
+        def sweep_obj_merge(trained, idx, w, old_glob, *rest):
+            i = 0
+            if use_srv:
+                m, v, consts = rest[0], rest[1], rest[2]
+                i = 3
+            if use_h:
+                h, hsrc, hdst, alphav = rest[i], rest[i + 1], \
+                    rest[i + 2], rest[i + 3]
+
+            def one(tr_e, i_e, w_e, g_e):
+                return jax.tree.map(
+                    lambda l, g: kops.gather_combine(l, i_e, w_e, g,
+                                                     use_kernel=uk),
+                    tr_e, g_e)
+            avg = jax.vmap(one)(trained, idx, w, old_glob)
+            if use_srv:
+                # per-lane winnerless guard (see _build_obj_merge)
+                has = jnp.any(w != 0.0, axis=1)               # (E,)
+                al, td = jax.tree.flatten(avg)
+                ol = jax.tree.leaves(old_glob)
+                ml = jax.tree.leaves(m)
+                vl = jax.tree.leaves(v)
+                go, gm, gv = [], [], []
+                for a_l, o_l, m_l, v_l in zip(al, ol, ml, vl):
+                    o2, m2, v2 = jax.vmap(
+                        lambda a, o, mm, vv, c: kops.server_opt_combine(
+                            a, o, mm, vv, c, use_kernel=uk))(
+                        a_l, o_l, m_l, v_l, consts)
+                    hb = has.reshape((E,) + (1,) * (a_l.ndim - 1))
+                    go.append(jnp.where(hb, o2, a_l))
+                    gm.append(jnp.where(hb, m2, m_l))
+                    gv.append(jnp.where(hb, v2, v_l))
+                new_glob = jax.tree.unflatten(td, go)
+                new_m = jax.tree.unflatten(td, gm)
+                new_v = jax.tree.unflatten(td, gv)
+            else:
+                new_glob = avg
+            if use_h:
+                rows = jax.tree.map(
+                    lambda l: jax.vmap(
+                        lambda le, se: jnp.take(le, se, axis=0))(l, hsrc),
+                    trained)
+
+                def upd(h_e, r_e, g_e, d_e, a_e):
+                    return jnp.where(
+                        a_e != 0.0,
+                        h_e.at[d_e].add(-a_e * (r_e - g_e[None]),
+                                        mode="drop"),
+                        h_e)
+                new_h = jax.tree.map(
+                    lambda hh, r, wg: jax.vmap(upd)(hh, r, wg, hdst,
+                                                    alphav),
+                    h, rows, old_glob)
+            new_stack = jax.tree.map(
+                lambda g, tr: jnp.broadcast_to(g[:, None], tr.shape),
+                new_glob, trained)
+            out = [new_glob, new_stack]
+            if use_srv:
+                out += [new_m, new_v]
+            if use_h:
+                out += [new_h]
+            return tuple(out)
+
+        donate = [0, 3]
+        if use_srv:
+            donate += [4, 5]
+        if use_h:
+            donate += [4 + (3 if use_srv else 0)]
+        fn = jax.jit(sweep_obj_merge, donate_argnums=tuple(donate))
+        self._sweep_obj_merge_fns[(E, okey)] = fn
+        return fn
+
+    def _attach_sweep_objective(self, st: SweepState, objectives,
+                                init_params, payload=None) -> None:
+        """Install the sweep's ObjectiveTable + device-resident m/v/h
+        state on a fresh/restored SweepState. No-op when every lane is
+        plain (None table) — the untouched pre-registry programs run."""
+        table = build_objective_table(objectives or [])
+        if table is None:
+            return
+        st.obj = table
+        E, U = st.num_lanes, self.num_users
+
+        def zeros(lead):
+            return jax.tree.map(
+                lambda p: jnp.zeros(lead + np.shape(p),
+                                    jnp.asarray(p).dtype), init_params)
+        payload = payload or {}
+
+        def load(key, lead):
+            x = payload.get(key)
+            return (zeros(lead) if x is None
+                    else jax.tree.map(jnp.asarray, x))
+        if table.use_srv:
+            st.m = load("m", (E,))
+            st.v = load("v", (E,))
+        if table.use_h:
+            st.h = load("h", (E, U))
+
+    def sweep_objective_state(self, st: SweepState):
+        """Checkpoint payload twin of ``objective_state`` for sweeps."""
+        if st.obj is None:
+            return None
+        host = lambda x: None if x is None else jax.device_get(x)
+        return {"m": host(st.m), "v": host(st.v), "h": host(st.h)}
+
+    def _dispatch_obj_sweep_merge(self, st: SweepState, trained, idx, w,
+                                  attempts) -> None:
+        """Assemble + dispatch the objective sweep merge. ``attempts``
+        is ``(att_uids, att_pos)``: per-lane attempt-winner user ids and
+        the matching row positions into the trained stack (== the uids
+        on the dense sweep, delivery positions on the sparse one)."""
+        E, table = st.num_lanes, st.obj
+        use_h, use_srv = table.okey
+        fn = (self._sweep_obj_merge_fns.get((E, table.okey))
+              or self._build_sweep_obj_merge(E, table.okey))
+        glob, st.glob = st.glob, None                # donated below
+        args = [trained, jnp.asarray(idx), jnp.asarray(w), glob]
+        if use_srv:
+            m, st.m = st.m, None
+            v, st.v = st.v, None
+            args += [m, v, jnp.asarray(table.consts)]
+        if use_h:
+            att_uids, att_pos = (attempts if attempts is not None
+                                 else ([[]] * E, [[]] * E))
+            kh = self._k_pad(max((len(a) for a in att_uids), default=0))
+            hsrc = np.zeros((E, kh), np.int32)
+            hdst = np.full((E, kh), self.num_users, np.int32)
+            for e in range(E):
+                n = len(att_uids[e])
+                if n:
+                    hsrc[e, :n] = [int(p) for p in att_pos[e]]
+                    hdst[e, :n] = [int(u) for u in att_uids[e]]
+            h, st.h = st.h, None
+            args += [h, jnp.asarray(hsrc), jnp.asarray(hdst),
+                     jnp.asarray(table.alpha)]
+        out = fn(*args)
+        st.glob, st.stack = out[0], out[1]
+        i = 2
+        if use_srv:
+            st.m, st.v = out[i], out[i + 1]
+            i += 2
+        if use_h:
+            st.h = out[i]
+
+    def sweep_init(self, init_params, seeds: Sequence[int],
+                   objectives=None) -> SweepState:
         """Fresh device (glob, stack) + per-lane client rng streams.
 
         ``seeds[e]`` is lane e's experiment seed; user u's stream is
         ``core.rngs.client_rng(seed, u)`` — exactly the stream a
         dedicated per-spec backend (``Client``'s seeding rule) would
         own, which is what makes sweep lanes batch-draw-identical to
-        sequential runs."""
+        sequential runs. ``objectives[e]`` is lane e's ObjectiveSpec
+        (None = plain); all-plain sweeps attach no objective state."""
         if not self.sweep_capable():
             raise ValueError(
                 "sweep needs round_mode='fused' and a rectangular "
@@ -1044,7 +1595,9 @@ class HostBackend(Backend):
         glob, stack = bcast(init_params)
         rngs = [[client_rng(s, u) for u in range(self.num_users)]
                 for s in seeds]
-        return SweepState(num_lanes=E, glob=glob, stack=stack, rngs=rngs)
+        st = SweepState(num_lanes=E, glob=glob, stack=stack, rngs=rngs)
+        self._attach_sweep_objective(st, objectives, init_params)
+        return st
 
     def _draw_sweep_big(self, st: SweepState):
         """(E, U, ep*take) epoch-permutation index tensor for one sweep
@@ -1079,15 +1632,28 @@ class HostBackend(Backend):
                     need_priority: bool) -> SweepTrainResult:
         """Dispatch ONE jitted train call for all E lanes; the incoming
         stack is donated into the trained stack (residency chain)."""
-        _, rnd, _ = self._sweep_fns[st.num_lanes]
         stack, st.stack = st.stack, None      # donated below
-        trained, loss_u, prios = rnd(stack, batched, bool(need_priority))
+        if st.obj is not None:
+            key = (st.num_lanes, st.obj.use_h)
+            rnd = (self._sweep_obj_round.get(key)
+                   or self._build_sweep_obj_round(*key))
+            prox = jnp.asarray(st.obj.prox)
+            if st.obj.use_h:
+                trained, loss_u, prios = rnd(stack, batched, prox, st.h,
+                                             bool(need_priority))
+            else:
+                trained, loss_u, prios = rnd(stack, batched, prox,
+                                             bool(need_priority))
+        else:
+            _, rnd, _ = self._sweep_fns[st.num_lanes]
+            trained, loss_u, prios = rnd(stack, batched,
+                                         bool(need_priority))
         return SweepTrainResult(trained=trained, losses=loss_u,
                                 priorities=prios)
 
     def sweep_merge(self, st: SweepState, tr: SweepTrainResult,
                     idx: np.ndarray, w: np.ndarray, merge_ctx=None,
-                    uids=None) -> None:
+                    uids=None, attempts=None) -> None:
         """Dispatch the batched compact merge; the trained stack is
         donated in, and the merged (glob, stack) become the resident
         device state for the next round.
@@ -1099,8 +1665,13 @@ class HostBackend(Backend):
         / (E, 2) keys) routing every lane through the AirComp program;
         ``uids`` then carries the (E, k_pad) USER ids backing each
         compact slot (== idx on the dense sweep) for the host-side
-        coefficient gather."""
+        coefficient gather. ``attempts``: the per-lane attempt-winner
+        (uids, positions) pair routed to the objective merge when the
+        sweep carries an ObjectiveTable (ignored otherwise)."""
         trained, tr.trained = tr.trained, None
+        if merge_ctx is None and st.obj is not None:
+            self._dispatch_obj_sweep_merge(st, trained, idx, w, attempts)
+            return
         if merge_ctx is None:
             if self._mode == "sparse":
                 mrg = (self._sweep_sparse_fns.get(st.num_lanes)
@@ -1240,8 +1811,64 @@ class HostBackend(Backend):
         self._sweep_sparse_fns[E] = fns
         return fns
 
-    def sweep_sparse_init(self, init_params,
-                          seeds: Sequence[int]) -> SweepState:
+    def _build_sweep_sparse_obj(self, E: int, use_h: bool):
+        """(round, prepass) objective twins of the sparse sweep jits:
+        same compact shapes, objective local steps under per-lane (E,)
+        prox, the h-carrying variants taking the gathered winner h rows
+        as an extra traced argument. The merge is NOT here — the
+        objective sweep merge program is shared with the dense sweep
+        (``_build_sweep_obj_merge``; jit re-specializes by shape)."""
+        self._ensure_xstack()
+        nb, uk = self._nb, self._use_kernel
+        obj_run = objective_epoch_scan(self._loss_fn, self._lr, use_h)
+
+        def lane_prios(tr, g):
+            return stacked_model_priorities(tr, g, use_kernel=uk)
+
+        def train_rows(stack, batched, glob, prox, h_rows):
+            if use_h:
+                return jax.vmap(
+                    lambda s, b, g, p, hh: jax.vmap(
+                        obj_run, in_axes=(0, 0, None, None, 0))(
+                            s, b, g, p, hh))(stack, batched, glob,
+                                             prox, h_rows)
+            return jax.vmap(
+                lambda s, b, g, p: jax.vmap(
+                    obj_run, in_axes=(0, 0, None, None))(s, b, g, p))(
+                stack, batched, glob, prox)
+
+        def _round_body(stack, batched, prox, h_rows):
+            glob = jax.tree.map(lambda p: p[:, 0], stack)
+            trained, losses = train_rows(stack, batched, glob, prox,
+                                         h_rows)
+            loss_k = losses[:, :, -nb:].mean(axis=2)
+            prios = jax.vmap(lane_prios)(trained, glob)
+            return trained, loss_k, prios
+
+        def _prepass_body(glob, batched, prox, h_rows):
+            C = jax.tree.leaves(batched)[0].shape[1]
+            stack = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[:, None],
+                                           (E, C) + p.shape[1:]), glob)
+            trained, losses = train_rows(stack, batched, glob, prox,
+                                         h_rows)
+            loss_c = losses[:, :, -nb:].mean(axis=2)
+            prios = jax.vmap(lane_prios)(trained, glob)
+            return loss_c, prios
+
+        if use_h:
+            round_fn, prepass = _round_body, _prepass_body
+        else:
+            round_fn = lambda stack, batched, prox: _round_body(
+                stack, batched, prox, None)
+            prepass = lambda glob, batched, prox: _prepass_body(
+                glob, batched, prox, None)
+        fns = (jax.jit(round_fn, donate_argnums=0), jax.jit(prepass))
+        self._sweep_sparse_obj[(E, use_h)] = fns
+        return fns
+
+    def sweep_sparse_init(self, init_params, seeds: Sequence[int],
+                          objectives=None) -> SweepState:
         """SweepState with NO cohort stack: (E, ...) lane globals + the
         per-lane client streams (the dense sweep's exact seeding rule);
         the compact (E, K_max, ...) winner stack only materializes
@@ -1257,7 +1884,9 @@ class HostBackend(Backend):
                                        (E,) + np.shape(p)), init_params)
         rngs = [[client_rng(s, u) for u in range(self.num_users)]
                 for s in seeds]
-        return SweepState(num_lanes=E, glob=glob, stack=None, rngs=rngs)
+        st = SweepState(num_lanes=E, glob=glob, stack=None, rngs=rngs)
+        self._attach_sweep_objective(st, objectives, init_params)
+        return st
 
     def sweep_sparse_priorities(self, st: SweepState,
                                 need_priority: bool):
@@ -1280,11 +1909,23 @@ class HostBackend(Backend):
         C = max(1, min(self._sparse_chunk, U))
         losses = np.empty((E, U))
         prios = np.empty((E, U))
+        if st.obj is not None:
+            key = (E, st.obj.use_h)
+            pfn = (self._sweep_sparse_obj.get(key)
+                   or self._build_sweep_sparse_obj(*key))[1]
+            prox = jnp.asarray(st.obj.prox)
         for lo in range(0, U, C):
             rows = np.arange(lo, min(lo + C, U))
             batched = self._gather_sweep_rows(rows[None, :, None],
                                               big[:, rows])
-            l, p = fns[3](st.glob, batched)
+            if st.obj is None:
+                l, p = fns[3](st.glob, batched)
+            elif st.obj.use_h:
+                hc = jax.tree.map(
+                    lambda hh: hh[:, lo:lo + len(rows)], st.h)
+                l, p = pfn(st.glob, batched, prox, hc)
+            else:
+                l, p = pfn(st.glob, batched, prox)
             losses[:, lo:lo + len(rows)] = np.asarray(l, np.float64)
             prios[:, lo:lo + len(rows)] = np.asarray(p, np.float64)
         return prios, losses
@@ -1322,7 +1963,21 @@ class HostBackend(Backend):
         batched = self._gather_sweep_rows(rows[:, :, None], big_rows)
         stack = st.stack if st.stack is not None else fns[0](st.glob)
         st.stack = None
-        trained, loss_k, prios_k = fns[1](stack, batched)
+        if st.obj is not None:
+            key = (E, st.obj.use_h)
+            rfn = (self._sweep_sparse_obj.get(key)
+                   or self._build_sweep_sparse_obj(*key))[0]
+            prox = jnp.asarray(st.obj.prox)
+            if st.obj.use_h:
+                # pad rows gather user 0's h — zero-weight, discarded
+                h_rows = jax.tree.map(
+                    lambda hh: hh[np.arange(E)[:, None], rows], st.h)
+                trained, loss_k, prios_k = rfn(stack, batched, prox,
+                                               h_rows)
+            else:
+                trained, loss_k, prios_k = rfn(stack, batched, prox)
+        else:
+            trained, loss_k, prios_k = fns[1](stack, batched)
         if self._sparse_priority == "stale":
             cache = self._sweep_stale_prios.get(E)
             if cache is None:
@@ -1414,8 +2069,8 @@ class HostBackend(Backend):
         replays the exact permutations the uninterrupted run drew."""
         return [[generator_state(g) for g in lane] for lane in st.rngs]
 
-    def sweep_restore(self, glob, stream_states,
-                      seeds: Sequence[int]) -> SweepState:
+    def sweep_restore(self, glob, stream_states, seeds: Sequence[int],
+                      objectives=None, objective_state=None) -> SweepState:
         """Rebuild a ``SweepState`` from checkpoint payload: ``glob``
         the host copy of the (E, ...) stacked lane globals,
         ``stream_states`` the matching ``sweep_stream_states``
@@ -1438,7 +2093,11 @@ class HostBackend(Backend):
         for lane_rngs, lane_states in zip(rngs, stream_states):
             for gen, gs in zip(lane_rngs, lane_states):
                 restore_generator(gen, gs)
-        return SweepState(num_lanes=E, glob=g, stack=stack, rngs=rngs)
+        st = SweepState(num_lanes=E, glob=g, stack=stack, rngs=rngs)
+        self._attach_sweep_objective(st, objectives,
+                                     jax.tree.map(lambda p: p[0], g),
+                                     payload=objective_state)
+        return st
 
     def sweep_global(self, st: SweepState, e: int):
         """Lane e's current global params (for eval / extraction)."""
@@ -1519,7 +2178,7 @@ class SiloBackend(Backend):
                            priorities=priorities, local_handle=local)
 
     def merge(self, state, train_result, winners, merge_ctx=None,
-              fault_ctx=None):
+              fault_ctx=None, attempts=None):
         if merge_ctx is not None:
             raise ValueError(
                 "SiloBackend implements only the digital cross-pod "

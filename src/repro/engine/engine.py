@@ -156,6 +156,20 @@ class FLEngine:
                        if spec.faults is not None else None)
         self._init_params = init_params
         self.state = backend.init_state(init_params)
+        obj = spec.objective
+        if obj is not None and not obj.is_plain:
+            if not backend.objective_active():
+                raise ValueError(
+                    "spec.objective is non-plain but the backend was "
+                    "built without it; construct HostBackend with "
+                    "objective=spec.objective (build_host_engine wires "
+                    "this automatically)")
+            if self.strategy.trains_before_selection:
+                raise ValueError(
+                    "non-plain objectives need the full-cohort fused/"
+                    "sparse round programs; trains_before_selection "
+                    f"strategy {spec.strategy!r} runs partial-cohort "
+                    "rounds")
 
     # ------------------------------------------------------------------
     @property
@@ -289,14 +303,19 @@ class FLEngine:
             for u in rf.stragglers:
                 faults.push_stale(u, self.backend.extract_local(tr, u),
                                   self.backend.num_examples(u))
-        if merged_now or stale_in:
+        # FedDyn's h-state is keyed to the round's ATTEMPT winners (they
+        # trained, so their local h advanced even if the channel dropped
+        # the upload) — such rounds still dispatch the merge, whose
+        # all-zero-weight guard keeps the global while h updates
+        needs_h = self.backend.objective_needs_h()
+        if merged_now or stale_in or (winners and needs_h):
             fault_ctx = self._lane_fault_ctx(spec, rf, stale_in,
                                              merged_now)
             self.state = self.backend.merge(
                 self.state, tr, merged_now,
                 merge_ctx=self._lane_merge_ctx(spec, self.channel, t,
                                                self.num_users),
-                fault_ctx=fault_ctx)
+                fault_ctx=fault_ctx, attempts=winners)
             if fault_ctx is not None:
                 history.quarantined_updates += int(fault_ctx.n_quarantined)
         if winners:
@@ -367,6 +386,7 @@ class FLEngine:
             # the clients so continued per-round training picks up the
             # stream where a pure per-round run would be
             self.backend.sweep_adopt_streams(st, 0)
+            self.backend.adopt_sweep_objective(st)
             return result.histories[0]
 
         # per-lane path: silo / stacked / ragged backends and
@@ -417,6 +437,9 @@ class FLEngine:
             # sparse "stale" runs carry last-trained Eq. 2 priorities
             # across rounds; None everywhere else
             "priority_cache": self.backend.priority_cache_state(),
+            # server-opt moments + FedDyn h (DESIGN.md §10); None for
+            # plain objectives
+            "objective": self.backend.objective_state(),
         }
 
     def _load_run_payload(self, payload, fp):
@@ -443,6 +466,7 @@ class FLEngine:
         self.backend.restore_client_streams(payload["client_streams"])
         self.backend.restore_priority_cache(
             payload.get("priority_cache"))
+        self.backend.restore_objective_state(payload.get("objective"))
         return payload["history"], payload["round"] + 1
 
     # ------------------------------------------------------- sweep path
@@ -628,14 +652,19 @@ class FLEngine:
             quarantine=fs.quarantine, clip_norm=fs.clip_norm)
 
     def _dispatch_sweep_merge(self, lanes, st, tr, merged_all, pos_all,
-                              rfs, stales, lead_faults, k_pad, t):
+                              rfs, stales, lead_faults, k_pad, t,
+                              attempts=None):
         """One compact (E, k_pad) merge dispatch shared by the dense
         and sparse sweep loops. ``merged_all[e]`` are lane e's merge
         candidates (user ids, delivery order); ``pos_all[e]`` their row
         indices into the trained stack (== the user ids on the dense
-        sweep, compact positions on the sparse one). Routes through the
-        robust-guard, AirComp, or plain digital sweep merge; returns
-        the (E,) quarantine counts, or None off the fault path."""
+        sweep, compact positions on the sparse one). ``attempts`` is
+        the per-lane attempt-winner (uids, positions) pair for the
+        objective merge's FedDyn h scatter (pre-channel-gate — the
+        attempt trained even when the upload dropped). Routes through
+        the robust-guard, AirComp, or plain digital sweep merge;
+        returns the (E,) quarantine counts, or None off the fault
+        path."""
         backend, E = self.backend, len(lanes)
         idx = np.zeros((E, k_pad), np.int32)
         w = np.zeros((E, k_pad), np.float32)
@@ -650,7 +679,7 @@ class FLEngine:
                                             lead_faults, idx)
         backend.sweep_merge(st, tr, idx, w,
                             merge_ctx=self._sweep_merge_ctx(lanes, t),
-                            uids=uids)
+                            uids=uids, attempts=attempts)
         return None
 
     def _sweep_payload(self, fp, t, st, stream_snap, counters, lanes):
@@ -660,6 +689,9 @@ class FLEngine:
             "glob": jax.device_get(st.glob),
             "client_streams": stream_snap,
             "counters": counters.state_dict(),
+            # sweep objective state (m/v/h with the lane axis); None
+            # for all-plain sweeps
+            "objective": self.backend.sweep_objective_state(st),
             "lanes": [{
                 "history": lane.history,
                 "engine_rng": generator_state(lane.rng),
@@ -721,6 +753,7 @@ class FLEngine:
             E, U, np.array([l.spec.counter_threshold for l in lanes]))
         fp = run_fingerprint([l.spec for l in lanes], U)
         seeds = [l.spec.seed for l in lanes]
+        objs = [l.spec.objective for l in lanes]
         t0 = time.time()
         start, st = 0, None
         if checkpoint_dir is not None:
@@ -728,11 +761,12 @@ class FLEngine:
             if payload is not None:
                 start = self._load_sweep_payload(payload, fp, lanes,
                                                  counters)
-                st = backend.sweep_restore(payload["glob"],
-                                           payload["client_streams"],
-                                           seeds)
+                st = backend.sweep_restore(
+                    payload["glob"], payload["client_streams"], seeds,
+                    objectives=objs,
+                    objective_state=payload.get("objective"))
         if st is None:
-            st = backend.sweep_init(init_state, seeds)
+            st = backend.sweep_init(init_state, seeds, objectives=objs)
         tr = backend.sweep_train(st, backend.sweep_batches(st), need_prio)
         for t in range(start, rounds):
             last = t + 1 >= rounds
@@ -782,11 +816,12 @@ class FLEngine:
                            (rf.merged_now if rf is not None else d)]
                           for rf, d in zip(rfs, delivered_all)]
             # dense sweep: user ids ARE the row indices into the
-            # (E, U, ...) trained stack
+            # (E, U, ...) trained stack (for attempts too)
             k_pad = backend._k_pad(max(len(m) for m in merged_all))
             nq = self._dispatch_sweep_merge(
                 lanes, st, tr, merged_all, merged_all, rfs, stales,
-                lead_faults, k_pad, t)
+                lead_faults, k_pad, t,
+                attempts=(winners_all, winners_all))
             next_tr = None
             if not last:
                 if next_batched is None:
@@ -849,8 +884,10 @@ class FLEngine:
         counters = SweepFairnessCounter(
             E, U, np.array([l.spec.counter_threshold for l in lanes]))
         seeds = [l.spec.seed for l in lanes]
+        objs = [l.spec.objective for l in lanes]
         t0 = time.time()
-        st = backend.sweep_sparse_init(init_state, seeds)
+        st = backend.sweep_sparse_init(init_state, seeds,
+                                       objectives=objs)
         for t in range(rounds):
             prios, pre_losses = backend.sweep_sparse_priorities(
                 st, need_prio)
@@ -884,13 +921,16 @@ class FLEngine:
                            (rf.merged_now if rf is not None else d)]
                           for rf, d in zip(rfs, delivered_all)]
             # sparse sweep: row indices are compact DELIVERY positions
-            # into the (E, K_max, ...) winner stack
+            # into the (E, K_max, ...) winner stack; a lane's attempts
+            # ARE its trained rows, in order
             pos_all = [[winners_all[e].index(u) for u in merged_all[e]]
                        for e in range(E)]
+            att_pos = [list(range(len(ws))) for ws in winners_all]
             k_pad = int(np.shape(tr.priorities)[1])       # = k_max
             nq = self._dispatch_sweep_merge(
                 lanes, st, tr, merged_all, pos_all, rfs, stales,
-                lead_faults, k_pad, t)
+                lead_faults, k_pad, t,
+                attempts=(winners_all, att_pos))
             counters.update(winners_all)
             losses64 = (np.asarray(pre_losses, np.float64)
                         if pre_losses is not None
@@ -962,5 +1002,6 @@ def build_host_engine(spec: ExperimentSpec, init_params, loss_fn,
         loss_fn, user_data, lr=spec.lr, batch_size=spec.batch_size,
         local_epochs=spec.local_epochs, seed=spec.seed,
         prefer_vmap=prefer_vmap, round_mode=mode, mesh=mesh,
-        k_max=spec.k_per_round, sparse_priority=spec.sparse_priority)
+        k_max=spec.k_per_round, sparse_priority=spec.sparse_priority,
+        objective=spec.objective)
     return FLEngine(spec, backend, init_params, eval_fn)

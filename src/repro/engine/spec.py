@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Optional, Sequence
 from repro.channel.spec import ChannelSpec
 from repro.core.csma import CSMAConfig
 from repro.faults.spec import FaultSpec
+from repro.objectives.spec import ObjectiveSpec
 
 #: Eq. 1 merge implementations the backends know how to build
 MERGE_BACKENDS = ("fedavg", "aircomp")
@@ -82,6 +83,13 @@ class ExperimentSpec:
     #: bit-identical to fused; "stale" = cached, O(K) per round).
     #: Ignored outside round_mode="sparse".
     sparse_priority: str = "prepass"
+    # objectives subsystem (DESIGN.md §10) — None (or a plain spec)
+    # keeps the untouched pre-registry FedAvg programs. Deliberately
+    # NOT sweep-shared: the objective is a sweep AXIS, so one run_sweep
+    # compares selection strategies across optimizers; lanes with
+    # different objectives share one superset program, inert lanes
+    # passing through bitwise.
+    objective: Optional[ObjectiveSpec] = None
     # local training (consumed by backend factories)
     lr: float = 1e-2
     batch_size: int = 32
@@ -110,6 +118,26 @@ class ExperimentSpec:
                 "analog AirComp superposition cannot inspect or mask "
                 "individual updates mid-air; use merge_backend='fedavg' "
                 "or restrict faults to crash/outage/retry modes")
+        if self.objective is not None and not self.objective.is_plain:
+            if self.merge_backend == "aircomp":
+                raise ValueError(
+                    "server aggregators / FedDyn h-state are digital-only: "
+                    "the analog AirComp superposition delivers a noisy "
+                    "average the server-opt step cannot be folded into; "
+                    "use merge_backend='fedavg' with a non-plain objective")
+            if self.faults is not None and self.faults.merge_guarded:
+                raise ValueError(
+                    "the robust merge guard and non-plain objectives are "
+                    "mutually exclusive for now (the guarded stale-merge "
+                    "path bypasses the server-opt/h update); restrict "
+                    "faults to crash/outage/retry modes (quarantine=False, "
+                    "clip_norm=0, corrupt_prob=0, straggle_prob=0) or use "
+                    "a plain objective")
+            if self.round_mode in ("stacked", "ragged"):
+                raise ValueError(
+                    "non-plain objectives compile into the fused / sparse "
+                    "/ sweep device programs only; round_mode="
+                    f"{self.round_mode!r} is the uncompiled fallback path")
 
     def slot_seconds(self) -> float:
         """Wall-clock length of one contention slot."""
@@ -121,6 +149,9 @@ class ExperimentSpec:
 #: ExperimentSpec fields that must agree across the cells of one sweep —
 #: ``rounds`` because the lanes advance in lockstep, the rest because
 #: they configure the ONE backend / merge program every lane shares.
+#: ``objective`` is deliberately absent: lanes may mix objectives (it
+#: is a sweep axis); the backend compiles one superset program from the
+#: union of their structural flags (DESIGN.md §10).
 SWEEP_SHARED_FIELDS = ("rounds", "lr", "batch_size", "local_epochs",
                        "merge_backend", "faults", "round_mode",
                        "sparse_priority")

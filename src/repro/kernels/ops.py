@@ -144,6 +144,30 @@ def robust_combine(stacked, weights, scales, global_ref,
     return ref.robust_combine_ref(stacked, w, s, global_ref)
 
 
+def server_opt_combine(avg, old, m, v, consts, use_kernel=True,
+                       interpret=None):
+    """Server aggregator step on the pseudo-gradient ``d = old - avg``
+    (objectives subsystem, DESIGN.md §10).
+
+    avg: the Eq. 1 merged average; old: the round-start global; m, v:
+    server-opt state (same shape); consts: (5,) f32 ``[kind, beta1,
+    beta2, server_lr, eps]`` — kind 0 identity / 1 FedAvgM / 2 FedAdam.
+    Returns ``(new_global, new_m, new_v)``.
+
+    Kind 0, and kind 1 with ``beta1 == 0, server_lr == 1``, take a
+    bit-level passthrough branch (output bitwise == avg) — the
+    objectives-inert transparency contract pinned by the winner-pin
+    twin lanes.  vmap-safe like every wrapper here; the sweep merge
+    vmaps it over the lane axis with per-lane consts rows.
+    """
+    c = jnp.asarray(consts, jnp.float32)
+    run, interp = _mode(use_kernel, interpret)
+    if run:
+        from repro.kernels.server_opt import server_opt_pallas
+        return server_opt_pallas(avg, old, m, v, c, interpret=interp)
+    return ref.server_opt_combine_ref(avg, old, m, v, c)
+
+
 def fused_sgd(param, grad, lr, use_kernel=True, interpret=None):
     run, interp = _mode(use_kernel, interpret)
     if run:

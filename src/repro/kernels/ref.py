@@ -100,6 +100,45 @@ def robust_combine_ref(stacked, weights, scales, global_ref):
     return jnp.sum(terms, axis=0).astype(stacked.dtype)
 
 
+def server_opt_combine_ref(avg, old, m, v, consts):
+    """Server aggregator step on the pseudo-gradient, jnp oracle.
+
+    avg: (...) the Eq. 1 merged average; old: (...) the round-start
+    global; m, v: (...) server-opt state; consts: (5,) f32
+    ``[kind, beta1, beta2, server_lr, eps]`` with kind 0 = identity
+    (plain FedAvg), 1 = momentum (FedAvgM), 2 = adam (FedAdam, no bias
+    correction).  Returns ``(new_global, new_m, new_v)``.
+
+    The update acts on ``d = old - avg`` (one round of Eq. 1 descent is
+    ``old - d``), so kind 1 is EXACTLY ``optim.sgd.sgd_momentum_update``
+    applied server-side: ``m' = beta1*m + d; out = old - server_lr*m'``.
+    Kind 2: ``m' = beta1*m + (1-beta1)*d; v' = beta2*v + (1-beta2)*d²;
+    out = old - server_lr * m' / (sqrt(v') + eps)``.
+
+    Exactness contract (the objectives-inert twin lanes in
+    tools/check_winner_pins.py ride on it): kind 0, and kind 1 with
+    ``beta1 == 0 and server_lr == 1``, take an explicit passthrough
+    branch — the output is bitwise ``avg`` (the algebraic route
+    ``old - (old - avg)`` is NOT an IEEE-754 identity).  Kind 2 has no
+    inert setting: the eps damping keeps the step off the average even
+    at beta1 = beta2 = 0.
+    """
+    c = consts.astype(jnp.float32)
+    kind, b1, b2, slr, eps = c[0], c[1], c[2], c[3], c[4]
+    a = avg.astype(jnp.float32)
+    o = old.astype(jnp.float32)
+    mm = m.astype(jnp.float32)
+    vv = v.astype(jnp.float32)
+    d = o - a
+    scale1 = jnp.where(kind == 2.0, 1.0 - b1, 1.0)
+    nm = jnp.where(kind == 0.0, mm, b1 * mm + scale1 * d)
+    nv = jnp.where(kind == 2.0, b2 * vv + (1.0 - b2) * d * d, vv)
+    step = jnp.where(kind == 2.0, nm / (jnp.sqrt(nv) + eps), nm)
+    inert = (kind == 0.0) | ((kind == 1.0) & (b1 == 0.0) & (slr == 1.0))
+    out = jnp.where(inert, a, o - slr * step)
+    return (out.astype(avg.dtype), nm.astype(m.dtype), nv.astype(v.dtype))
+
+
 def fused_sgd_ref(param, grad, lr):
     """param - lr * grad, computed in f32, cast back."""
     return (param.astype(jnp.float32)

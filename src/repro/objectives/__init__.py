@@ -1,0 +1,16 @@
+"""Objectives subsystem: registered local objectives (FedAvg / FedProx /
+FedDyn) + server aggregators (FedAvg / FedAvgM / FedAdam) compiled into
+HostBackend's fused, winner-sparse, and sweep programs (DESIGN.md §10)."""
+from repro.objectives.local import objective_epoch_scan
+from repro.objectives.server import (ObjectiveTable, build_objective_table)
+from repro.objectives.spec import (LOCAL_OBJECTIVES, SERVER_AGGREGATORS,
+                                   LocalObjective, ObjectiveSpec,
+                                   ServerAggregator, register_local,
+                                   register_server)
+
+__all__ = [
+    "ObjectiveSpec", "ObjectiveTable", "build_objective_table",
+    "objective_epoch_scan", "LocalObjective", "ServerAggregator",
+    "register_local", "register_server",
+    "LOCAL_OBJECTIVES", "SERVER_AGGREGATORS",
+]

@@ -1,0 +1,450 @@
+"""Objectives subsystem tests (DESIGN.md §10).
+
+Covers the PR-9 contracts:
+
+  * ObjectiveSpec validation, the registry, and the spec-level
+    exclusions (aircomp, guarded-merge faults, uncompiled round modes);
+  * the ``server_opt_combine`` kernel law: kind 1 IS the
+    ``optim.sgd.sgd_momentum_update`` law on the pseudo-gradient, kind 2
+    is FedAdam (Reddi et al. 2021, no bias correction), kind 0 and the
+    inert kind-1 setting are bit-level passthroughs; Pallas interpret
+    parity against the jnp oracle, including vmap over a lane axis;
+  * bit-transparency: inert specs — ``fedprox(mu=0)``,
+    ``feddyn(alpha=0)``, ``fedavgm(beta=0, server_lr=1)`` — produce
+    bit-identical winners / merged globals to ``objective=None`` on the
+    fused, sparse, and sweep paths (no new rng streams exist);
+  * active semantics: fedprox/feddyn/fedavgm/fedadam change the
+    trajectory; FedDyn's first round (h ≡ 0) equals FedProx with
+    ``mu = alpha`` and diverges after the first h update;
+  * fused/sparse parity with active objectives, and mixed-objective
+    sweep lanes bit-equal to their sequential single runs;
+  * checkpoint/resume: m/v/h ride the run payload, a resumed run is
+    bit-identical, and a changed objective refuses to resume.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st  # noqa: F401
+
+from repro.engine import ExperimentSpec, SweepSpec, build_host_engine
+from repro.faults import FaultSpec
+from repro.kernels import ops, ref
+from repro.objectives import (LOCAL_OBJECTIVES, SERVER_AGGREGATORS,
+                              ObjectiveSpec, build_objective_table)
+from repro.optim.sgd import sgd_momentum_init, sgd_momentum_update
+
+U, N_PER, DIM = 8, 32, 6
+
+
+def make_data(num_users=U, n=N_PER, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"x": rng.normal(size=(n, d)).astype(np.float32),
+             "y": rng.integers(0, 2, size=(n,)).astype(np.int32)}
+            for _ in range(num_users)]
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((logits - batch["y"]) ** 2)
+
+
+def init_params(d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(d,)).astype(np.float32) * 0.1,
+            "b": np.zeros((), np.float32)}
+
+
+DATA = make_data()
+
+
+def make_spec(rounds=5, strategy="priority-distributed", seed=7, **kw):
+    # local_epochs=2: with a single local step the proximal term is
+    # identically zero (w == w_global at step 1), making FedProx
+    # trivially equal FedAvg — two epochs give the local models real
+    # drift so the active-semantics tests bite.
+    kw.setdefault("local_epochs", 2)
+    return ExperimentSpec(strategy=strategy, rounds=rounds,
+                          k_per_round=3, seed=seed, **kw)
+
+
+def run_spec(spec, round_mode=None):
+    eng = build_host_engine(spec, init_params(), loss_fn, DATA,
+                            round_mode=round_mode)
+    hist = eng.run()
+    return hist, jax.device_get(eng.global_params)
+
+
+def trees_equal(a, b):
+    return all(np.array_equal(x, y) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# -------------------------------------------------------- ObjectiveSpec
+
+def test_objective_spec_validation():
+    ObjectiveSpec()                       # plain default is valid
+    ObjectiveSpec(local="fedprox", mu=0.1)
+    ObjectiveSpec(local="feddyn", alpha=0.1, aggregator="fedadam")
+    with pytest.raises(ValueError, match="unknown local objective"):
+        ObjectiveSpec(local="scaffold")
+    with pytest.raises(ValueError, match="unknown server aggregator"):
+        ObjectiveSpec(aggregator="fedyogi")
+    with pytest.raises(ValueError):
+        ObjectiveSpec(local="fedprox", mu=-0.1)
+    with pytest.raises(ValueError):
+        ObjectiveSpec(local="feddyn", alpha=-1.0)
+    with pytest.raises(ValueError):
+        ObjectiveSpec(aggregator="fedavgm", server_lr=0.0)
+    with pytest.raises(ValueError):
+        ObjectiveSpec(aggregator="fedavgm", beta=1.0)
+    with pytest.raises(ValueError):
+        ObjectiveSpec(aggregator="fedadam", eps=0.0)
+
+
+def test_objective_registry_contents():
+    assert set(LOCAL_OBJECTIVES) >= {"fedavg", "fedprox", "feddyn"}
+    assert set(SERVER_AGGREGATORS) >= {"fedavg", "fedavgm", "fedadam"}
+    assert LOCAL_OBJECTIVES["feddyn"].uses_h
+    assert not LOCAL_OBJECTIVES["fedprox"].uses_h
+    assert SERVER_AGGREGATORS["fedavg"].kind == 0
+    assert SERVER_AGGREGATORS["fedavgm"].kind == 1
+    assert SERVER_AGGREGATORS["fedadam"].kind == 2
+
+
+def test_objective_structural_flags():
+    plain = ObjectiveSpec()
+    assert plain.is_plain and not plain.uses_h and not plain.uses_server
+    prox = ObjectiveSpec(local="fedprox", mu=0.3)
+    assert prox.prox_coeff == pytest.approx(0.3)
+    assert not prox.uses_h and not prox.is_plain
+    dyn = ObjectiveSpec(local="feddyn", alpha=0.2)
+    assert dyn.uses_h and dyn.alpha_coeff == pytest.approx(0.2)
+    # alpha on a non-feddyn local never reaches the merge program
+    assert ObjectiveSpec(local="fedprox", alpha=0.5).alpha_coeff == 0.0
+    srv = ObjectiveSpec(aggregator="fedadam")
+    assert srv.uses_server
+    np.testing.assert_allclose(
+        srv.server_consts(),
+        np.asarray([2.0, 0.9, 0.99, 1.0, 1e-3], np.float32))
+
+
+def test_objective_table_union_flags():
+    assert build_objective_table([None, ObjectiveSpec()]) is None
+    tab = build_objective_table([
+        None, ObjectiveSpec(local="fedprox", mu=0.1),
+        ObjectiveSpec(local="feddyn", alpha=0.2, aggregator="fedavgm")])
+    assert tab is not None
+    assert tab.use_local and tab.use_h and tab.use_srv
+    np.testing.assert_allclose(tab.prox, [0.0, 0.1, 0.2])
+    np.testing.assert_allclose(tab.alpha, [0.0, 0.0, 0.2])
+    assert tab.consts.shape == (3, 5)
+    assert tab.consts[2, 0] == 1.0 and tab.consts[0, 0] == 0.0
+
+
+def test_spec_level_exclusions():
+    active = ObjectiveSpec(local="fedprox", mu=0.1)
+    with pytest.raises(ValueError, match="digital-only"):
+        make_spec(objective=active, merge_backend="aircomp")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        make_spec(objective=active, faults=FaultSpec())   # quarantine on
+    with pytest.raises(ValueError, match="fused / sparse / sweep"):
+        make_spec(objective=active, round_mode="stacked")
+    with pytest.raises(ValueError, match="fused / sparse / sweep"):
+        make_spec(objective=active, round_mode="ragged")
+    # a PLAIN spec composes with everything (dispatches to old programs)
+    make_spec(objective=ObjectiveSpec(), merge_backend="aircomp")
+    make_spec(objective=ObjectiveSpec(), faults=FaultSpec())
+    # failure-only faults compose with active objectives
+    make_spec(objective=active,
+              faults=FaultSpec(quarantine=False, crash_prob=0.2))
+
+
+# ------------------------------------------- server_opt_combine kernel
+
+def _opt_case(shape=(5, 7), seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda: rng.normal(size=shape).astype(np.float32)
+    return mk(), mk(), mk(), np.abs(mk())
+
+
+KINDS = [
+    np.asarray([0, 0.0, 0.0, 1.0, 1e-3], np.float32),
+    np.asarray([1, 0.9, 0.0, 0.5, 1e-3], np.float32),
+    np.asarray([2, 0.9, 0.99, 0.1, 1e-3], np.float32),
+]
+
+
+@pytest.mark.parametrize("consts", KINDS, ids=["identity", "momentum",
+                                               "adam"])
+@pytest.mark.parametrize("shape", [(4, 4), (3, 130), (257,), ()])
+def test_server_opt_interpret_parity(consts, shape):
+    # fused-vs-unfused fma contraction: 1-ulp tolerance on the active
+    # kinds (same idiom as test_kernels); the inert passthrough is
+    # checked BITWISE in test_server_opt_inert_is_bitwise_passthrough
+    avg, old, m, v = _opt_case(shape, seed=int(consts[0]) + 1)
+    want = ref.server_opt_combine_ref(avg, old, m, v, consts)
+    got = ops.server_opt_combine(avg, old, m, v, consts,
+                                 interpret=True)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_server_opt_vmap_lane_parity():
+    """The sweep merge vmaps the op over the lane axis with per-lane
+    consts rows — interpret mode must match the per-lane oracle."""
+    E = 3
+    consts = np.stack(KINDS)
+    avg, old, m, v = (np.stack(x) for x in zip(
+        *[_opt_case((6, 9), seed=e) for e in range(E)]))
+    got = jax.vmap(lambda a, o, mm, vv, c: ops.server_opt_combine(
+        a, o, mm, vv, c, interpret=True))(avg, old, m, v, consts)
+    for e in range(E):
+        want = ref.server_opt_combine_ref(avg[e], old[e], m[e], v[e],
+                                          consts[e])
+        for a, b in zip(want, got):
+            np.testing.assert_allclose(np.asarray(a),
+                                       np.asarray(b)[e],
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_server_opt_momentum_is_sgd_momentum_law():
+    """kind 1 on the pseudo-gradient d = old - avg IS the
+    optim.sgd.sgd_momentum_update law (m' = β·m + d, p' = p - lr·m')."""
+    avg, old, m, _ = _opt_case((8, 3), seed=3)
+    consts = np.asarray([1, 0.9, 0.0, 0.5, 1e-3], np.float32)
+    out, nm, nv = ref.server_opt_combine_ref(avg, old, m,
+                                             np.zeros_like(m), consts)
+    d = old - avg
+    want_p, want_m = sgd_momentum_update({"p": jnp.asarray(old)},
+                                         {"p": jnp.asarray(d)},
+                                         {"p": jnp.asarray(m)},
+                                         lr=0.5, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_p["p"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(nm), np.asarray(want_m["p"]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(nv), np.zeros_like(m))
+
+
+def test_server_opt_adam_law():
+    avg, old, m, v = _opt_case((4, 6), seed=4)
+    b1, b2, slr, eps = 0.9, 0.99, 0.1, 1e-3
+    consts = np.asarray([2, b1, b2, slr, eps], np.float32)
+    out, nm, nv = ref.server_opt_combine_ref(avg, old, m, v, consts)
+    d = old - avg
+    wm = b1 * m + (1 - b1) * d
+    wv = b2 * v + (1 - b2) * d * d
+    wout = old - slr * wm / (np.sqrt(wv) + eps)
+    np.testing.assert_allclose(np.asarray(nm), wm, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(nv), wv, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), wout, rtol=1e-5)
+
+
+def test_server_opt_inert_is_bitwise_passthrough():
+    avg, old, m, v = _opt_case((3, 33), seed=5)
+    for consts in (np.asarray([0, 0.9, 0.99, 0.5, 1e-3], np.float32),
+                   np.asarray([1, 0.0, 0.0, 1.0, 1e-3], np.float32)):
+        out, nm, nv = ref.server_opt_combine_ref(avg, old, m, v, consts)
+        assert np.array_equal(np.asarray(out), avg)     # BITWISE
+        out2, _, _ = ops.server_opt_combine(avg, old, m, v, consts,
+                                            interpret=True)
+        assert np.array_equal(np.asarray(out2), avg)
+    # the near-inert momentum setting (slr != 1) is NOT a passthrough
+    consts = np.asarray([1, 0.0, 0.0, 0.5, 1e-3], np.float32)
+    out, _, _ = ref.server_opt_combine_ref(avg, old, m, v, consts)
+    assert not np.array_equal(np.asarray(out), avg)
+
+
+# -------------------------------------------------- bit-transparency
+
+INERT_SPECS = [
+    ObjectiveSpec(),
+    ObjectiveSpec(local="fedprox", mu=0.0),
+    ObjectiveSpec(local="feddyn", alpha=0.0),
+    ObjectiveSpec(aggregator="fedavgm", beta=0.0, server_lr=1.0),
+    ObjectiveSpec(local="feddyn", alpha=0.0, aggregator="fedavgm",
+                  beta=0.0, server_lr=1.0),
+]
+
+
+@pytest.mark.parametrize("mode", ["fused", "sparse"])
+def test_inert_objective_bit_transparent(mode):
+    h_ref, g_ref = run_spec(make_spec(), round_mode=mode)
+    for obj in INERT_SPECS:
+        h, g = run_spec(make_spec(objective=obj), round_mode=mode)
+        assert h.winners == h_ref.winners, obj
+        assert trees_equal(g, g_ref), obj
+
+
+def test_inert_objective_sweep_bit_transparent():
+    """Mixed inert lanes share one superset program with a plain lane —
+    every lane must still be bitwise the plain sweep."""
+    base = [make_spec(seed=s) for s in (7, 8)]
+    e0 = build_host_engine(base[0], init_params(), loss_fn, DATA)
+    r0 = e0.run_sweep(SweepSpec(specs=base * len(INERT_SPECS)))
+    specs = [make_spec(seed=b.seed, objective=obj)
+             for obj in INERT_SPECS for b in base]
+    e1 = build_host_engine(specs[0], init_params(), loss_fn, DATA)
+    r1 = e1.run_sweep(SweepSpec(specs=specs))
+    for e in range(len(specs)):
+        assert r1.histories[e].winners == r0.histories[e].winners
+        assert trees_equal(r1.lane_params(e), r0.lane_params(e))
+
+
+# ---------------------------------------------------- active semantics
+
+ACTIVE_SPECS = [
+    ObjectiveSpec(local="fedprox", mu=0.1),
+    ObjectiveSpec(local="feddyn", alpha=0.1),
+    ObjectiveSpec(aggregator="fedavgm", beta=0.9, server_lr=0.5),
+    ObjectiveSpec(aggregator="fedadam", server_lr=0.1),
+    ObjectiveSpec(local="feddyn", alpha=0.05, aggregator="fedavgm",
+                  beta=0.5, server_lr=0.8),
+]
+
+
+@pytest.mark.parametrize("obj", ACTIVE_SPECS,
+                         ids=[f"{o.local}/{o.aggregator}"
+                              for o in ACTIVE_SPECS])
+def test_active_objective_changes_globals(obj):
+    _, g_ref = run_spec(make_spec())
+    _, g = run_spec(make_spec(objective=obj))
+    assert not trees_equal(g, g_ref)
+
+
+@pytest.mark.parametrize("obj", ACTIVE_SPECS,
+                         ids=[f"{o.local}/{o.aggregator}"
+                              for o in ACTIVE_SPECS])
+def test_active_objective_fused_sparse_parity(obj):
+    """The contention-first sparse path must stay bit-identical to the
+    fused path with active objectives (shared gather/scatter laws)."""
+    hf, gf = run_spec(make_spec(objective=obj), round_mode="fused")
+    hs, gs = run_spec(make_spec(objective=obj), round_mode="sparse")
+    assert hf.winners == hs.winners
+    assert trees_equal(gf, gs)
+
+
+def test_feddyn_first_round_is_fedprox():
+    """With h ≡ 0 FedDyn's first-round gradient law IS FedProx with
+    mu = alpha, so the round-1 globals are bit-equal; the first h
+    update then splits the trajectories."""
+    a = 0.1
+    _, g_dyn = run_spec(make_spec(rounds=1,
+                                  objective=ObjectiveSpec(
+                                      local="feddyn", alpha=a)))
+    _, g_prox = run_spec(make_spec(rounds=1,
+                                   objective=ObjectiveSpec(
+                                       local="fedprox", mu=a)))
+    assert trees_equal(g_dyn, g_prox)
+    _, g_dyn4 = run_spec(make_spec(rounds=4,
+                                   objective=ObjectiveSpec(
+                                       local="feddyn", alpha=a)))
+    _, g_prox4 = run_spec(make_spec(rounds=4,
+                                    objective=ObjectiveSpec(
+                                        local="fedprox", mu=a)))
+    assert not trees_equal(g_dyn4, g_prox4)
+
+
+@pytest.mark.parametrize("mode", ["fused", "sparse"])
+def test_mixed_objective_sweep_matches_sequential(mode):
+    """Each lane of a mixed-objective sweep is bitwise its sequential
+    single run — the superset program adds nothing to any lane."""
+    objs = [None, ObjectiveSpec(local="fedprox", mu=0.1),
+            ObjectiveSpec(local="feddyn", alpha=0.1,
+                          aggregator="fedadam", server_lr=0.1),
+            ObjectiveSpec(aggregator="fedavgm", server_lr=0.5)]
+    specs = [make_spec(objective=o, round_mode=mode) for o in objs]
+    eng = build_host_engine(specs[0], init_params(), loss_fn, DATA)
+    res = eng.run_sweep(SweepSpec(specs=specs))
+    for e, sp in enumerate(specs):
+        h_seq, g_seq = run_spec(sp, round_mode=mode)
+        assert res.histories[e].winners == h_seq.winners
+        assert trees_equal(res.lane_params(e), g_seq)
+
+
+def test_objective_with_failure_faults_runs():
+    """Active objectives compose with the failure-only fault modes
+    (crash / outage / HARQ) — dropped rounds still advance h/m/v."""
+    obj = ObjectiveSpec(local="feddyn", alpha=0.1, aggregator="fedavgm",
+                        beta=0.5, server_lr=0.8)
+    flt = FaultSpec(quarantine=False, crash_prob=0.4, outage_prob=0.3,
+                    max_retries=1)
+    h, g = run_spec(make_spec(rounds=6, objective=obj, faults=flt))
+    assert len(h.winners) == 6
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(g))
+
+
+# ------------------------------------------------- checkpoint / resume
+
+def test_run_checkpoint_resume_objective_state():
+    """Sparse single-run path: m/v/h ride the run payload and a fresh
+    engine resumes bit-identically."""
+    spec = make_spec(rounds=6, round_mode="sparse",
+                     objective=ObjectiveSpec(
+                         local="feddyn", alpha=0.1,
+                         aggregator="fedadam", server_lr=0.1))
+    h_ref, g_ref = run_spec(spec)
+    with tempfile.TemporaryDirectory() as d:
+        e1 = build_host_engine(spec, init_params(), loss_fn, DATA)
+        e1.run(checkpoint_dir=d, checkpoint_every=2)
+        e2 = build_host_engine(spec, init_params(), loss_fn, DATA)
+        h2 = e2.run(checkpoint_dir=d)
+        assert h2.winners == h_ref.winners
+        assert trees_equal(g_ref, jax.device_get(e2.global_params))
+
+
+def test_sweep_checkpoint_resume_objective_state():
+    """Fused sweep with mixed objectives: lane m/v/h stacks resume
+    bit-identically from a mid-sweep checkpoint."""
+    specs = [make_spec(rounds=6, seed=7),
+             make_spec(rounds=6, seed=8,
+                       objective=ObjectiveSpec(local="fedprox", mu=0.1)),
+             make_spec(rounds=6, seed=9,
+                       objective=ObjectiveSpec(
+                           local="feddyn", alpha=0.1,
+                           aggregator="fedavgm", server_lr=0.5))]
+    sw = SweepSpec(specs=specs)
+    e_ref = build_host_engine(specs[0], init_params(), loss_fn, DATA)
+    r_ref = e_ref.run_sweep(sw)
+    with tempfile.TemporaryDirectory() as d:
+        e1 = build_host_engine(specs[0], init_params(), loss_fn, DATA)
+        e1.run_sweep(sw, checkpoint_dir=d, checkpoint_every=2)
+        e2 = build_host_engine(specs[0], init_params(), loss_fn, DATA)
+        r2 = e2.run_sweep(sw, checkpoint_dir=d)
+        for ha, hb in zip(r_ref.histories, r2.histories):
+            assert ha.winners == hb.winners
+        assert trees_equal(jax.device_get(r_ref.final_globals),
+                           jax.device_get(r2.final_globals))
+
+
+def test_resume_rejects_objective_change():
+    spec = make_spec(rounds=4,
+                     objective=ObjectiveSpec(local="fedprox", mu=0.1))
+    with tempfile.TemporaryDirectory() as d:
+        e1 = build_host_engine(spec, init_params(), loss_fn, DATA)
+        e1.run(checkpoint_dir=d, checkpoint_every=2)
+        other = make_spec(rounds=4,
+                          objective=ObjectiveSpec(local="fedprox",
+                                                  mu=0.2))
+        e2 = build_host_engine(other, init_params(), loss_fn, DATA)
+        with pytest.raises(ValueError, match="different"):
+            e2.run(checkpoint_dir=d)
+
+
+def test_engine_requires_objective_backend():
+    """A non-plain spec on an engine whose backend wasn't built with
+    the objective refuses loudly (build_host_engine wires it)."""
+    from repro.engine import FLEngine, HostBackend
+    spec = make_spec(objective=ObjectiveSpec(local="fedprox", mu=0.1))
+    backend = HostBackend(loss_fn, DATA, lr=spec.lr,
+                          batch_size=spec.batch_size,
+                          local_epochs=spec.local_epochs,
+                          k_max=spec.k_per_round, seed=spec.seed)
+    with pytest.raises(ValueError, match="objective"):
+        FLEngine(spec, backend, init_params())

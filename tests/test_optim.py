@@ -1,0 +1,81 @@
+"""Unit coverage for ``repro.optim.sgd`` (the paper's local optimizer
+plus the momentum law the server-opt kernel's kind-1 branch mirrors —
+see tests/test_objectives.py for the cross-check against
+``server_opt_combine``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.sgd import (sgd_momentum_init, sgd_momentum_update,
+                             sgd_update)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 3)).astype(np.float32),
+            "b": rng.normal(size=(3,)).astype(np.float32)}
+
+
+def test_sgd_update_law():
+    p, g = _tree(0), _tree(1)
+    out = sgd_update(p, g, lr=0.1, use_kernel=False)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   p[k] - 0.1 * g[k], rtol=1e-6)
+
+
+def test_momentum_init_zeros_like():
+    p = _tree(0)
+    m = sgd_momentum_init(p)
+    assert jax.tree.structure(m) == jax.tree.structure(p)
+    for k in p:
+        assert m[k].shape == p[k].shape and m[k].dtype == p[k].dtype
+        assert np.array_equal(np.asarray(m[k]), np.zeros_like(p[k]))
+
+
+def test_momentum_update_law():
+    """new_m = momentum * m + g; new_p = p - lr * new_m."""
+    p, g, m = _tree(0), _tree(1), _tree(2)
+    new_p, new_m = sgd_momentum_update(p, g, m, lr=0.05, momentum=0.9)
+    for k in p:
+        want_m = 0.9 * m[k] + g[k]
+        np.testing.assert_allclose(np.asarray(new_m[k]), want_m,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_p[k]),
+                                   p[k] - 0.05 * want_m, rtol=1e-6)
+
+
+def test_momentum_zero_is_plain_sgd():
+    p, g = _tree(0), _tree(1)
+    m0 = sgd_momentum_init(p)
+    new_p, new_m = sgd_momentum_update(p, g, m0, lr=0.1, momentum=0.0)
+    plain = sgd_update(p, g, lr=0.1, use_kernel=False)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(new_p[k]),
+                                   np.asarray(plain[k]), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(new_m[k]), g[k])
+
+
+def test_momentum_accumulates_across_steps():
+    """Two steps with a constant gradient: m_2 = (1 + β)·g, so the
+    second step moves farther than the first."""
+    p, g = _tree(0), _tree(1)
+    m = sgd_momentum_init(p)
+    p1, m1 = sgd_momentum_update(p, g, m, lr=0.1, momentum=0.9)
+    p2, m2 = sgd_momentum_update(p1, g, m1, lr=0.1, momentum=0.9)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(m2[k]), 1.9 * g[k],
+                                   rtol=1e-6)
+        step1 = np.abs(np.asarray(p1[k]) - p[k])
+        step2 = np.abs(np.asarray(p2[k]) - np.asarray(p1[k]))
+        assert (step2 >= step1 - 1e-7).all()
+
+
+def test_momentum_preserves_tree_structure():
+    p = {"outer": {"w": np.ones((2, 2), np.float32)},
+         "b": np.zeros((2,), np.float32)}
+    g = jax.tree.map(np.ones_like, p)
+    m = sgd_momentum_init(p)
+    new_p, new_m = sgd_momentum_update(p, g, m, lr=0.1)
+    assert jax.tree.structure(new_p) == jax.tree.structure(p)
+    assert jax.tree.structure(new_m) == jax.tree.structure(p)

@@ -148,6 +148,60 @@ def _scenario_winners():
                 raise SystemExit(
                     f"FAIL: winner-sparse lane {key} merged globals "
                     "are not bit-equal to the fused reference")
+
+    # objectives-inert twins (PR 9): inert ObjectiveSpecs — fedprox at
+    # mu=0, feddyn at alpha=0, fedavgm at beta=0 / server_lr=1 — must
+    # be the objective=None program EXACTLY: objectives draw no rng
+    # streams (all optimizer state is zero-init), the proximal term
+    # rides a bit-level where-guard, the h subtraction of exact +0.0 is
+    # an IEEE identity, and the server-opt step takes its explicit
+    # passthrough branch (DESIGN.md §10). fedadam has NO inert twin —
+    # the eps damping keeps its step off the average. Pinned under
+    # .../objective-inert, .../feddyn-inert and .../objective-inert-
+    # sparse so a regression in any guard (a stray -0.0 flip, the h
+    # scatter firing at alpha=0, the superset sweep program perturbing
+    # a plain lane) can't slip through. random-centralized sits these
+    # lanes out: it trains only the selected K_t (partial cohort), which
+    # non-plain objectives reject at engine construction.
+    from repro.objectives import ObjectiveSpec
+
+    obj_lanes = [(i, sp) for i, sp in enumerate(specs)
+                 if sp.strategy != "random-centralized"]
+
+    def _objective_twin(tag, obj, reference, round_mode=None):
+        tw = [ExperimentSpec(rounds=ROUNDS, strategy=sp.strategy,
+                             seed=sp.seed, objective=obj,
+                             round_mode=round_mode)
+              for _, sp in obj_lanes]
+        eng = build_host_engine(tw[0], params, loss_fn, user_data)
+        res = eng.run_sweep(tw)
+        for e, (ref_e, sp) in enumerate(obj_lanes):
+            key = f"{sp.strategy}/seed{sp.seed}"
+            winners[f"{key}/{tag}"] = res.histories[e].winners
+            if res.histories[e].winners != winners[key]:
+                raise SystemExit(
+                    f"FAIL: {tag} lane {key} diverged from the "
+                    "plain-objective reference winners — an inert "
+                    "ObjectiveSpec is no longer bit-transparent")
+            for a, b in zip(jax.tree.leaves(reference.lane_params(ref_e)),
+                            jax.tree.leaves(res.lane_params(e))):
+                if not np.array_equal(np.asarray(a), np.asarray(b)):
+                    raise SystemExit(
+                        f"FAIL: {tag} lane {key} merged globals are "
+                        "not bit-equal to the plain-objective "
+                        "reference")
+
+    _objective_twin("objective-inert",
+                    ObjectiveSpec(local="fedprox", mu=0.0,
+                                  aggregator="fedavgm", beta=0.0,
+                                  server_lr=1.0), result)
+    _objective_twin("feddyn-inert",
+                    ObjectiveSpec(local="feddyn", alpha=0.0), result)
+    _objective_twin("objective-inert-sparse",
+                    ObjectiveSpec(local="feddyn", alpha=0.0,
+                                  aggregator="fedavgm", beta=0.0,
+                                  server_lr=1.0),
+                    result_sp, round_mode="sparse")
     return winners
 
 

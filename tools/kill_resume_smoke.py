@@ -1,15 +1,26 @@
 #!/usr/bin/env python
 """CI guard: kill-and-resume bit-identity for checkpointed sweeps
-(DESIGN.md §8).
+(DESIGN.md §8, §10).
 
-Spawns a child process that runs a checkpointed fault+channel sweep
-(``checkpoint_every=1``), SIGTERMs it as soon as the first checkpoint
-hits disk (a genuine mid-sweep kill — the child never finishes), then
-resumes from the orphaned checkpoint in-process and compares against an
-uninterrupted run of the same sweep: winner sequences, fault counters
-and merged globals must match bit-for-bit.
+For each scenario, spawns a child process that runs a checkpointed
+sweep (``checkpoint_every=1``), SIGTERMs it as soon as the first
+checkpoint hits disk (a genuine mid-sweep kill — the child never
+finishes), then resumes from the orphaned checkpoint in-process and
+compares against an uninterrupted run of the same sweep: winner
+sequences, fault counters and merged globals must match bit-for-bit.
 
-    PYTHONPATH=src python tools/kill_resume_smoke.py
+Scenarios:
+
+  faults      fault+channel sweep (crash/straggle/corrupt/outage +
+              HARQ retries + robust merge guard) — the PR-7 contract;
+  objectives  FedDyn + FedAvgM lanes under failure-only faults
+              (crash/outage/HARQ, quarantine off — the guarded merge
+              excludes non-plain objectives) + channel: the resumed
+              run must restore the server-opt m/v and per-user h
+              stacks, not just the globals — the PR-9 contract.
+
+    PYTHONPATH=src python tools/kill_resume_smoke.py               # all
+    PYTHONPATH=src python tools/kill_resume_smoke.py --scenario faults
 
 Exit 0 on bit-identity, 1 on divergence.
 """
@@ -25,10 +36,11 @@ REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
 ROUNDS = 8
+SCENARIOS = ("faults", "objectives")
 
 
-def _scenario():
-    """One deterministic fault+channel sweep — child and parent must
+def _scenario(name: str):
+    """One deterministic checkpointed sweep — child and parent must
     build the identical program."""
     import numpy as np
     import jax.numpy as jnp
@@ -47,31 +59,48 @@ def _scenario():
 
     params = {"w": jnp.zeros((8,), jnp.float32),
               "b": jnp.zeros((), jnp.float32)}
-    faults = FaultSpec(crash_prob=0.2, straggle_prob=0.3,
-                       corrupt_prob=0.2, outage_prob=0.2,
-                       max_retries=1, clip_norm=2.0)
     ch = ChannelSpec(per_model="waterfall")
-    sw = SweepSpec(specs=[
-        ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=5,
-                       faults=faults, channel=ch),
-        ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=6,
-                       strategy="random-distributed", faults=faults,
-                       channel=ch),
-    ])
+    if name == "faults":
+        faults = FaultSpec(crash_prob=0.2, straggle_prob=0.3,
+                           corrupt_prob=0.2, outage_prob=0.2,
+                           max_retries=1, clip_norm=2.0)
+        sw = SweepSpec(specs=[
+            ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=5,
+                           faults=faults, channel=ch),
+            ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=6,
+                           strategy="random-distributed", faults=faults,
+                           channel=ch),
+        ])
+    elif name == "objectives":
+        from repro.objectives import ObjectiveSpec
+        # failure-only modes: the robust merge guard (quarantine /
+        # clip / corrupt / straggle) excludes non-plain objectives
+        faults = FaultSpec(quarantine=False, crash_prob=0.2,
+                           outage_prob=0.2, max_retries=1)
+        obj = ObjectiveSpec(local="feddyn", alpha=0.1,
+                            aggregator="fedavgm", beta=0.5,
+                            server_lr=0.8)
+        sw = SweepSpec(specs=[
+            ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=5,
+                           local_epochs=2, faults=faults, channel=ch,
+                           objective=obj),
+            ExperimentSpec(rounds=ROUNDS, k_per_round=3, seed=6,
+                           local_epochs=2,
+                           strategy="random-distributed", faults=faults,
+                           channel=ch, objective=obj),
+        ])
+    else:
+        raise SystemExit(f"unknown scenario {name!r}; known: {SCENARIOS}")
     engine = build_host_engine(sw.specs[0], params, loss_fn, data)
     return engine, sw
 
 
-def _child(ckpt_dir: str) -> None:
-    engine, sw = _scenario()
+def _child(name: str, ckpt_dir: str) -> None:
+    engine, sw = _scenario(name)
     engine.run_sweep(sw, checkpoint_dir=ckpt_dir, checkpoint_every=1)
 
 
-def main() -> int:
-    if "--child" in sys.argv:
-        _child(sys.argv[sys.argv.index("--child") + 1])
-        return 0
-
+def _run_scenario(name: str) -> int:
     import tempfile
 
     import jax
@@ -81,31 +110,32 @@ def main() -> int:
     with tempfile.TemporaryDirectory() as ckpt_dir:
         child = subprocess.Popen(
             [sys.executable, os.path.abspath(__file__), "--child",
-             ckpt_dir],
+             ckpt_dir, "--scenario", name],
             cwd=REPO, stdout=subprocess.DEVNULL,
             stderr=subprocess.STDOUT)
         path = checkpoint_path(ckpt_dir)
         deadline = time.time() + 300
         while not os.path.exists(path):
             if child.poll() is not None:
-                print("FAIL: child exited before writing a checkpoint "
-                      f"(rc={child.returncode})")
+                print(f"FAIL[{name}]: child exited before writing a "
+                      f"checkpoint (rc={child.returncode})")
                 return 1
             if time.time() > deadline:
                 child.kill()
-                print("FAIL: no checkpoint after 300s")
+                print(f"FAIL[{name}]: no checkpoint after 300s")
                 return 1
             time.sleep(0.05)
         child.send_signal(signal.SIGTERM)
         rc = child.wait()
-        print(f"killed child mid-sweep (rc={rc}), checkpoint on disk")
+        print(f"[{name}] killed child mid-sweep (rc={rc}), "
+              "checkpoint on disk")
 
         # reference: the same sweep, uninterrupted
-        engine_ref, sw = _scenario()
+        engine_ref, sw = _scenario(name)
         ref = engine_ref.run_sweep(sw)
 
         # resume from the orphaned checkpoint with a FRESH engine
-        engine_res, sw2 = _scenario()
+        engine_res, sw2 = _scenario(name)
         res = engine_res.run_sweep(sw2, checkpoint_dir=ckpt_dir)
 
         for e, (ha, hb) in enumerate(zip(ref.histories, res.histories)):
@@ -116,18 +146,34 @@ def main() -> int:
                         ha.quarantined_updates, ha.stale_merges)
                     != (hb.retries, hb.dropped_clients,
                         hb.quarantined_updates, hb.stale_merges)):
-                print(f"FAIL: lane {e} history diverged after resume")
+                print(f"FAIL[{name}]: lane {e} history diverged after "
+                      "resume")
                 return 1
             for a, b in zip(jax.tree.leaves(ref.lane_params(e)),
                             jax.tree.leaves(res.lane_params(e))):
                 if not np.array_equal(np.asarray(a), np.asarray(b)):
-                    print(f"FAIL: lane {e} resumed globals are not "
-                          "bit-equal to the uninterrupted run")
+                    print(f"FAIL[{name}]: lane {e} resumed globals are "
+                          "not bit-equal to the uninterrupted run")
                     return 1
-        print(f"OK: resumed sweep bit-identical to uninterrupted run "
-              f"({len(sw)} lanes x {ROUNDS} rounds, "
-              f"fault counters matched)")
+        print(f"OK[{name}]: resumed sweep bit-identical to "
+              f"uninterrupted run ({len(sw)} lanes x {ROUNDS} rounds)")
         return 0
+
+
+def main() -> int:
+    if "--child" in sys.argv:
+        name = (sys.argv[sys.argv.index("--scenario") + 1]
+                if "--scenario" in sys.argv else "faults")
+        _child(name, sys.argv[sys.argv.index("--child") + 1])
+        return 0
+
+    names = ((sys.argv[sys.argv.index("--scenario") + 1],)
+             if "--scenario" in sys.argv else SCENARIOS)
+    for name in names:
+        rc = _run_scenario(name)
+        if rc:
+            return rc
+    return 0
 
 
 if __name__ == "__main__":
