@@ -9,6 +9,10 @@ everyone increments the denominator by |K^t|.
 The state is intentionally per-user-maintainable (a user only needs its
 own upload count and the running total announced implicitly by the
 broadcasts) — that is what keeps the scheme distributed.
+
+Part of the numpy bit-reproducible reference path — reprolint:
+reference-path (no jax imports; the refrain mask feeds the pinned
+winner sequences).
 """
 from __future__ import annotations
 

@@ -28,6 +28,10 @@ collision — only happens if its airtime completes by
 ``max_sim_slots``; otherwise the round freezes at exactly the cap, so
 ``elapsed_slots <= max_sim_slots`` always and no delivery can finish
 past the horizon.
+
+Part of the numpy bit-reproducible reference path — reprolint:
+reference-path (no jax imports: the winner sequences pinned by
+tools/check_winner_pins.py are produced by this event loop).
 """
 from __future__ import annotations
 

@@ -34,6 +34,7 @@ tests/test_sweep.py are derived under these rules):
     (STREAM_FAULTS, 2)      update-corruption outcomes
     (STREAM_FAULTS, 3)      channel burst-outage process
     (STREAM_FAULTS, 4)      HARQ retransmission backoff + outcome draws
+    (STREAM_DATA, 1)        synthetic dataset test-split stream
 
 The channel streams (PR 6) are spawn children like every other stream,
 so enabling a ``ChannelSpec`` consumes NO draw from the engine /
@@ -49,6 +50,20 @@ nothing — every piece of optimizer state (server-opt m/v, FedDyn
 per-user h) is zero-initialized — so an ``ObjectiveSpec`` can never
 move any stream above, which is what makes the inert-objective
 winner-pin twins bit-exact.
+
+The data stream (PR 10) lives in the DATASET seed domain, not the
+experiment seed domain: ``data/synthetic.py`` keys its generation on a
+dataset seed shared across sweep cells. Its test split used to be
+``default_rng(seed + 1)`` — the arithmetic-derived form of the PR-4
+bug class (dataset seeds s and s+1 would share the s test / s+1 train
+stream); ``data_stream_rng`` replaces it with a spawn child. The
+train-side stream stays ``default_rng(seed)`` on purpose: it is the
+raw-entropy root, provably disjoint from every spawn child, and the
+winner-pin reference sequences are derived from the data it produces.
+
+This module is part of the numpy bit-reproducible reference path —
+reprolint: reference-path (RL501 forbids jax imports here), and the
+only module allowed to construct SeedSequence spawn material (RL101).
 """
 from __future__ import annotations
 
@@ -61,6 +76,7 @@ STREAM_STRATEGY = 1
 STREAM_CLIENT = 2
 STREAM_CHANNEL = 3
 STREAM_FAULTS = 4
+STREAM_DATA = 5
 
 
 def child_seq(seed, *path: int) -> np.random.SeedSequence:
@@ -143,6 +159,17 @@ def fault_outage_rng(seed) -> np.random.Generator:
 def fault_retry_rng(seed) -> np.random.Generator:
     """HARQ retransmission stream (backoff + outcome draws)."""
     return np.random.default_rng(child_seq(seed, STREAM_FAULTS, 4))
+
+
+def data_stream_rng(seed, substream: int) -> np.random.Generator:
+    """Dataset-domain stream ``substream`` of one DATASET seed (keyed
+    on the dataset seed, not the experiment seed — sweep cells share
+    one dataset). Substream 0 is reserved for the train/template
+    stream, which currently stays on the raw-entropy root
+    ``default_rng(seed)`` for winner-pin stability; substream 1 is the
+    test split (replaces the arithmetic-derived ``seed + 1``)."""
+    return np.random.default_rng(child_seq(seed, STREAM_DATA,
+                                           int(substream)))
 
 
 def entropy_u64(seed) -> int:

@@ -3,6 +3,10 @@
 IID: random equal split. Non-IID: the McMahan et al. [9] pathological
 split the paper uses — sort by label, cut into ``2 * num_users`` shards,
 deal each user 2 shards, so each user sees ~2 classes.
+
+Part of the numpy bit-reproducible reference path — reprolint:
+reference-path (no jax imports; partitions decide every user's data
+and hence the pinned reference sequences).
 """
 from __future__ import annotations
 

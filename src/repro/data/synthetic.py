@@ -11,6 +11,10 @@ strategy ordering (paper Figs. 2-5) is observable. If a real
 ``make_token_stream`` generates per-user topic-skewed Zipf token
 sequences for the federated LLM-finetune examples (non-IID in topic
 space, mirroring the paper's label-skew).
+
+Part of the numpy bit-reproducible reference path — reprolint:
+reference-path (no jax imports; reference data sequences feed the
+winner-pin guard).
 """
 from __future__ import annotations
 
@@ -18,6 +22,8 @@ import os
 from typing import Tuple
 
 import numpy as np
+
+from repro.core.rngs import data_stream_rng
 
 _SPECS = {
     "fashion": dict(shape=(28, 28, 1), classes=10),
@@ -95,7 +101,10 @@ def make_classification_dataset(
         return np.clip(x, 0.0, 1.0), y
 
     x_tr, y_tr = gen(n_train, rng)
-    x_te, y_te = gen(n_test, np.random.default_rng(seed + 1))
+    # test split draws from its own spawn child — the old `seed + 1`
+    # stream collided with dataset seed s+1's train stream (the PR-4
+    # correlated-stream bug class, now reprolint RL102)
+    x_te, y_te = gen(n_test, data_stream_rng(seed, 1))
     return (x_tr, y_tr), (x_te, y_te)
 
 

@@ -754,7 +754,7 @@ class FLEngine:
         fp = run_fingerprint([l.spec for l in lanes], U)
         seeds = [l.spec.seed for l in lanes]
         objs = [l.spec.objective for l in lanes]
-        t0 = time.time()
+        t0 = time.perf_counter()
         start, st = 0, None
         if checkpoint_dir is not None:
             payload = load_fl_checkpoint(checkpoint_dir)
@@ -860,7 +860,7 @@ class FLEngine:
         result = SweepResult(
             histories=[l.history for l in lanes],
             specs=[l.spec for l in lanes], labels=labels,
-            overlap=overlap, wall_s=time.time() - t0,
+            overlap=overlap, wall_s=time.perf_counter() - t0,
             final_globals=st.glob)
         return result, st, counters
 
@@ -885,7 +885,7 @@ class FLEngine:
             E, U, np.array([l.spec.counter_threshold for l in lanes]))
         seeds = [l.spec.seed for l in lanes]
         objs = [l.spec.objective for l in lanes]
-        t0 = time.time()
+        t0 = time.perf_counter()
         st = backend.sweep_sparse_init(init_state, seeds,
                                        objectives=objs)
         for t in range(rounds):
@@ -962,7 +962,7 @@ class FLEngine:
         result = SweepResult(
             histories=[l.history for l in lanes],
             specs=[l.spec for l in lanes], labels=labels,
-            overlap=False, wall_s=time.time() - t0,
+            overlap=False, wall_s=time.perf_counter() - t0,
             final_globals=st.glob)
         return result, st, counters
 

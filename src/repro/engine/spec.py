@@ -39,7 +39,7 @@ ROUND_MODES = ("fused", "stacked", "ragged", "sparse")
 SPARSE_PRIORITY_MODES = ("prepass", "stale")
 
 
-@dataclass
+@dataclass(frozen=True)
 class ExperimentSpec:
     # round structure
     k_per_round: int = 2          # |K^t|
@@ -156,8 +156,21 @@ SWEEP_SHARED_FIELDS = ("rounds", "lr", "batch_size", "local_epochs",
                        "merge_backend", "faults", "round_mode",
                        "sparse_priority")
 
+#: The complementary classification: fields each sweep cell may set
+#: independently (selection-layer knobs, per-cell randomness, opt-in
+#: subsystems handled per lane). Every ExperimentSpec field MUST
+#: appear in exactly one of SWEEP_SHARED_FIELDS / PER_LANE_FIELDS —
+#: reprolint RL302 machine-enforces the partition, so a new knob
+#: cannot land without a decision on how the sweep path treats it
+#: (and, via the repr-based run_fingerprint, without being covered by
+#: resume validation — RL303/RL304).
+PER_LANE_FIELDS = ("k_per_round", "eval_every", "strategy",
+                   "strategy_options", "cw_base", "use_counter",
+                   "counter_threshold", "csma", "contention_backend",
+                   "channel", "slot_duration_s", "objective", "seed")
 
-@dataclass
+
+@dataclass(frozen=True)
 class SweepSpec:
     """E experiment cells destined for one ``FLEngine.run_sweep`` call.
 
@@ -185,7 +198,7 @@ class SweepSpec:
         if self.labels is not None and len(self.labels) != len(self.specs):
             raise ValueError(
                 f"{len(self.labels)} labels for {len(self.specs)} cells")
-        self.rounds = lead.rounds
+        object.__setattr__(self, "rounds", lead.rounds)
 
     def __len__(self):
         return len(self.specs)

@@ -209,16 +209,16 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     lowered, pstruct = build_lowered(cfg, shape, mesh)
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     if lower_only:
         return {"arch": arch, "shape": shape_name,
                 "mesh": "multi" if multi_pod else "single",
                 "status": "lowered", "lower_s": round(t_lower, 1)}
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

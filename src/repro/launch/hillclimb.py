@@ -74,7 +74,7 @@ def measure(arch, shape_name, levers, multi_pod=False):
     cfg, cache_hd, bounded, moe_ff = apply_levers(cfg, levers)
     mesh = make_production_mesh(multi_pod=multi_pod)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, _ = build_lowered(cfg, shape, mesh,
                                cache_shard_head_dim=cache_hd,
                                bounded_cache=bounded, moe_ff_shard=moe_ff)
@@ -95,7 +95,7 @@ def measure(arch, shape_name, levers, multi_pod=False):
         "per_device_bytes_total": int(per_dev_bytes),
         "per_device_gib": round(per_dev_bytes / 2**30, 2),
         "temp_gib": round(mem.temp_size_in_bytes / 2**30, 2),
-        "wall_s": round(time.time() - t0, 1),
+        "wall_s": round(time.perf_counter() - t0, 1),
     }
 
 
@@ -141,7 +141,7 @@ def measure_fl_silo(arch, variant="merge", extra_levers=()):
     a_sh = NamedSharding(mesh, P())
     out_sh = (NamedSharding(mesh, P()), pshard, NamedSharding(mesh, P()))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         lowered = jax.jit(step, in_shardings=(pshard, bshard, a_sh),
                           out_shardings=out_sh).lower(
@@ -162,7 +162,7 @@ def measure_fl_silo(arch, variant="merge", extra_levers=()):
         "collectives": coll,
         "hlo_flops_per_device": float(cost.get("flops", 0.0)),
         "per_device_gib": round(per_dev / 2**30, 2),
-        "wall_s": round(time.time() - t0, 1),
+        "wall_s": round(time.perf_counter() - t0, 1),
     }
 
 

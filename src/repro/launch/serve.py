@@ -50,21 +50,21 @@ def main():
     prefill = jax.jit(lambda p, c, t: forward(p, t, cfg, caches=c, **extra))
     step = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, caches, _ = prefill(params, caches, prompts)
     next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     out = [next_tok]
     offset = S + (cfg.num_prefix_tokens if cfg.family == "vlm" else 0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(G - 1):
         logits, caches = step(params, caches, next_tok,
                               jnp.int32(offset + i))
         next_tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)
         out.append(next_tok)
     jax.block_until_ready(next_tok)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
 
     gen = np.stack([np.asarray(t) for t in out], axis=1)
     print(f"arch={args.arch} (reduced) batch={B} prompt={S} gen={G}")

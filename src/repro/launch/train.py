@@ -129,7 +129,7 @@ def main():
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     engine = (build_llm_engine(args) if args.arch
               else build_paper_engine(args))
     if args.sweep_seeds > 1:
@@ -149,7 +149,7 @@ def main():
         hist = engine.run(verbose=args.verbose)
         final_params = engine.global_params
         extra = {}
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     summary = {
         "strategy": args.strategy,

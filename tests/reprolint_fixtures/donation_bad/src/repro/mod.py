@@ -1,0 +1,35 @@
+"""Seeded donation-safety violations (parsed, never imported)."""
+import jax
+
+
+def step(stack, g):
+    return stack + g
+
+
+def bad_local_read(stack, g):
+    f = jax.jit(step, donate_argnums=(0,))
+    out = f(stack, g)
+    return stack.sum() + out          # donated 'stack' read -> RL401
+
+
+def ok_rebind(stack, g):
+    f = jax.jit(step, donate_argnums=0)
+    stack = f(stack, g)               # rebound: poison cleared
+    return stack
+
+
+class Merger:
+    def __init__(self):
+        self._merge = jax.jit(step, donate_argnums=0)
+
+    def round(self, stack, g):
+        out = self._merge(stack, g)
+        return out, stack             # donated 'stack' read -> RL401
+
+
+def bad_jit_in_loop(xs):
+    outs = []
+    for x in xs:
+        f = jax.jit(step)             # retrace hazard -> RL402
+        outs.append(f(x, x))
+    return outs

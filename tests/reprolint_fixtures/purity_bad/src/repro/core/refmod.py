@@ -1,0 +1,13 @@
+"""Declared reference module that leaks jax.
+
+Part of the numpy bit-reproducible reference path —
+reprolint: reference-path (fixture; parsed, never imported).
+"""
+import jax                       # -> RL501
+
+import numpy as np
+
+
+def merge(x):
+    import jax.numpy as jnp      # function-local still counts -> RL501
+    return np.asarray(jnp.asarray(x))

@@ -1,0 +1,29 @@
+"""Seeded RNG-discipline violations (RL101/RL102/RL103)."""
+import random
+
+import numpy as np
+
+from repro.core.rngs import child_seq
+
+
+def bad_engine_stream(seed):
+    return np.random.default_rng(seed)                    # RL101
+
+
+def bad_correlated_stream(seed):
+    return np.random.default_rng(seed + 1)                # RL101 + RL102
+
+
+def bad_spawn_material(seed, uid):
+    return np.random.SeedSequence(entropy=1000 * uid)     # RL101 + RL102
+
+
+def bad_child_arithmetic(seed, uid):
+    return child_seq(seed + 7, 0)                         # RL102
+
+
+def bad_global_draws(n):
+    np.random.seed(0)                                     # RL103
+    a = np.random.permutation(n)                          # RL103
+    b = random.randint(0, n)                              # RL103
+    return a, b

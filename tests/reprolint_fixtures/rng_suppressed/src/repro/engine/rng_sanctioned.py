@@ -1,0 +1,15 @@
+"""The same violations as rng_bad, every one inline-suppressed."""
+import numpy as np
+
+
+def sanctioned_stream(seed):
+    return np.random.default_rng(seed)   # reprolint: disable=RL101
+
+
+def sanctioned_derived(seed):
+    # one comment may silence several codes at once
+    return np.random.default_rng(seed + 1)  # reprolint: disable=RL101,RL102
+
+
+def sanctioned_global():
+    np.random.seed(0)   # reprolint: disable=all

@@ -1,0 +1,19 @@
+"""Seeded spec-discipline violations (parsed, never imported)."""
+from dataclasses import dataclass, field
+
+SWEEP_SHARED_FIELDS = ("seed", "rounds")
+PER_LANE_FIELDS = ("hidden",)
+
+
+@dataclass
+class FooSpec:                       # not frozen -> RL301
+    alpha: float = 0.5
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    seed: int = 0
+    rounds: int = 10
+    mystery_knob: float = 1.0        # in neither tuple -> RL302
+    hidden: int = field(default=0, repr=False)   # -> RL303
+# no checkpoint/fl_state.py in this fixture tree -> RL304

@@ -1,0 +1,5 @@
+"""Kernel whose wrapper names an oracle ref.py lacks -> RL202."""
+
+
+def baz_pallas(x, *, interpret=False):
+    return x

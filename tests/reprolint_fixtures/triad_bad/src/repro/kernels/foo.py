@@ -1,0 +1,5 @@
+"""Kernel with NO ops.py dispatch wrapper at all -> RL201."""
+
+
+def foo_pallas(x, *, interpret=False):
+    return x

@@ -1,0 +1,21 @@
+from repro.kernels import ref
+from repro.kernels.bar import bar_pallas
+from repro.kernels.baz import baz_pallas
+from repro.kernels.qux import qux_pallas
+
+
+def bar_combine(x, use_kernel=True, interpret=None):
+    # no ref fallback -> RL202
+    return bar_pallas(x, interpret=bool(interpret))
+
+
+def baz_combine(x, use_kernel=True, interpret=None):
+    if use_kernel:
+        return baz_pallas(x, interpret=bool(interpret))
+    return ref.baz_combine_ref(x)        # not defined in ref.py -> RL202
+
+
+def qux_combine(x, use_kernel=True, interpret=None):
+    if use_kernel:
+        return qux_pallas(x, interpret=bool(interpret))
+    return ref.qux_combine_ref(x)

@@ -1,0 +1,5 @@
+"""Complete wrapper+oracle but no interpret-parity test -> RL203."""
+
+
+def qux_pallas(x, *, interpret=False):
+    return x

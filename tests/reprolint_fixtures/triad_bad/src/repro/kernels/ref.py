@@ -1,0 +1,2 @@
+def qux_combine_ref(x):
+    return x

@@ -1,0 +1,12 @@
+"""Parity coverage for bar/baz (so only qux trips RL203); never
+imported by pytest — parsed by the triad rule only."""
+from repro.kernels.bar import bar_pallas
+from repro.kernels.baz import baz_pallas
+
+
+def check_bar_parity():
+    assert bar_pallas(1, interpret=True) == 1
+
+
+def check_baz_parity():
+    assert baz_pallas(1, interpret=True) == 1

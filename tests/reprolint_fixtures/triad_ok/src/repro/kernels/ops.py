@@ -1,0 +1,8 @@
+from repro.kernels import ref
+from repro.kernels.good import good_pallas
+
+
+def good_combine(x, use_kernel=True, interpret=None):
+    if use_kernel:
+        return good_pallas(x, interpret=bool(interpret))
+    return ref.good_combine_ref(x)

@@ -1,0 +1,2 @@
+def good_combine_ref(x):
+    return x

@@ -1,0 +1,6 @@
+"""Parity coverage for the good kernel (parsed, never imported)."""
+from repro.kernels.good import good_pallas
+
+
+def check_good_parity():
+    assert good_pallas(1, interpret=True) == 1

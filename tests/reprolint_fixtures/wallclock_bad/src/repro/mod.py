@@ -1,0 +1,19 @@
+"""Seeded wall-clock violations (parsed, never imported)."""
+import time
+
+
+def bad_duration():
+    t0 = time.time()              # -> RL601 (reading later subtracted)
+    work = sum(range(10))
+    dt = time.time() - t0         # -> RL601 (direct operand)
+    return work, dt
+
+
+def bad_deadline(deadline):
+    while time.time() < deadline:  # -> RL601 (compare operand)
+        pass
+
+
+def ok_timestamp():
+    stamp = time.time()           # standalone reading: allowed
+    return f"run-{stamp}"

@@ -1,0 +1,210 @@
+"""reprolint rule tests.
+
+Each fixture tree under tests/reprolint_fixtures/ seeds known
+violations (see its README.md); these tests assert the exact
+(path, line, code) set per rule, that the real tree lints clean with
+an EMPTY baseline, and that both suppression layers (inline disable
+comments, context-keyed baseline entries) behave.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.reprolint import cli                       # noqa: E402
+from tools.reprolint.core import RULES, run_paths     # noqa: E402
+
+FIXTURES = Path(__file__).parent / "reprolint_fixtures"
+
+
+def lint_fixture(case, baseline_path=None):
+    root = FIXTURES / case
+    paths = [p for p in ("src", "tests", "tools") if (root / p).exists()]
+    return run_paths(paths, root=root, baseline_path=baseline_path)
+
+
+def located(findings):
+    return {(f.path, f.line, f.code) for f in findings}
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_has_every_documented_rule():
+    from tools.reprolint import rules  # noqa: F401
+    assert set(RULES) == {"RL101", "RL102", "RL103", "RL200", "RL300",
+                          "RL401", "RL402", "RL501", "RL601"}
+    assert RULES["RL200"].scope == "project"
+    assert RULES["RL300"].scope == "project"
+    assert all(RULES[c].scope == "file"
+               for c in RULES if c not in ("RL200", "RL300"))
+
+
+def test_syntax_error_surfaces_as_rl000(tmp_path):
+    (tmp_path / "broken.py").write_text("def oops(:\n")
+    findings, _ = run_paths(["broken.py"], root=tmp_path)
+    assert [f.code for f in findings] == ["RL000"]
+
+
+# --------------------------------------------------------- RNG discipline
+
+def test_rng_rules_fire_with_exact_locations():
+    findings, _ = lint_fixture("rng_bad")
+    mod = "src/repro/engine/rng_misuse.py"
+    assert located(findings) == {
+        (mod, 10, "RL101"),             # default_rng outside rngs.py
+        (mod, 14, "RL101"),
+        (mod, 14, "RL102"),             # seed + 1 (the PR-4 bug class)
+        (mod, 18, "RL101"),
+        (mod, 18, "RL102"),             # entropy=1000 * uid
+        (mod, 22, "RL102"),             # child_seq(seed + 7, ...)
+        (mod, 26, "RL103"),             # np.random.seed
+        (mod, 27, "RL103"),             # np.random.permutation
+        (mod, 28, "RL103"),             # stdlib random.randint
+    }
+
+
+def test_inline_suppression_silences_and_is_counted():
+    findings, stats = lint_fixture("rng_suppressed")
+    assert findings == []
+    assert stats["raw"] == 4            # RL101 x2, RL102, RL103
+    assert stats["suppressed"] == 4
+
+
+# ------------------------------------------------------------ kernel triad
+
+def test_triad_rule_fires_per_missing_leg():
+    findings, _ = lint_fixture("triad_bad")
+    k = "src/repro/kernels"
+    assert located(findings) == {
+        (f"{k}/foo.py", 4, "RL201"),    # no ops.py wrapper
+        (f"{k}/ops.py", 7, "RL202"),    # wrapper without ref fallback
+        (f"{k}/ops.py", 12, "RL202"),   # oracle missing from ref.py
+        (f"{k}/qux.py", 4, "RL203"),    # no interpret-parity test
+    }
+
+
+def test_complete_triad_is_clean():
+    findings, stats = lint_fixture("triad_ok")
+    assert findings == []
+    assert stats["raw"] == 0
+
+
+# ---------------------------------------------------------- spec discipline
+
+def test_spec_rules_fire_with_exact_locations():
+    findings, _ = lint_fixture("spec_bad")
+    mod = "src/repro/engine/spec.py"
+    assert located(findings) == {
+        (mod, 9, "RL301"),              # FooSpec not frozen
+        (mod, 17, "RL302"),             # mystery_knob unclassified
+        (mod, 18, "RL303"),             # hidden: field(repr=False)
+        (mod, 14, "RL304"),             # no repr-based run_fingerprint
+    }
+
+
+# --------------------------------------------------------- donation safety
+
+def test_donation_rules_fire_and_rebind_is_clean():
+    findings, _ = lint_fixture("donation_bad")
+    mod = "src/repro/mod.py"
+    assert located(findings) == {
+        (mod, 12, "RL401"),             # local jit donor, read after
+        (mod, 27, "RL401"),             # self._merge donor, read after
+        (mod, 33, "RL402"),             # jax.jit inside for body
+    }
+    # ok_rebind (stack = f(stack, g); return stack) must NOT fire:
+    assert all(f.line not in (17, 18) for f in findings)
+
+
+# ----------------------------------------------------- reference purity
+
+def test_reference_marker_module_may_not_import_jax():
+    findings, _ = lint_fixture("purity_bad")
+    mod = "src/repro/core/refmod.py"
+    assert located(findings) == {
+        (mod, 6, "RL501"),              # top-level import jax
+        (mod, 12, "RL501"),             # function-local import counts
+    }
+
+
+# ------------------------------------------------------ wall-clock hygiene
+
+def test_wallclock_flags_durations_not_timestamps():
+    findings, _ = lint_fixture("wallclock_bad")
+    mod = "src/repro/mod.py"
+    assert located(findings) == {
+        (mod, 6, "RL601"),              # t0 reading later subtracted
+        (mod, 8, "RL601"),              # time.time() - t0 directly
+        (mod, 13, "RL601"),             # time.time() < deadline
+    }
+
+
+# ----------------------------------------------------------- baseline layer
+
+def test_baseline_absorbs_by_context_and_reports_stale(tmp_path):
+    findings, _ = lint_fixture("wallclock_bad")
+    src = FIXTURES / "wallclock_bad" / "src/repro/mod.py"
+    lines = src.read_text().splitlines()
+    entries = [{"path": f.path, "code": f.code,
+                "context": lines[f.line - 1].strip()} for f in findings]
+
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(entries))
+    absorbed, stats = lint_fixture("wallclock_bad", baseline_path=baseline)
+    assert absorbed == []
+    assert stats["baselined"] == len(entries) == 3
+    assert stats["stale_baseline"] == []
+
+    # an entry whose finding no longer exists must be reported stale
+    entries.append({"path": "src/repro/mod.py", "code": "RL601",
+                    "context": "gone = time.time() - t0"})
+    baseline.write_text(json.dumps(entries))
+    _, stats = lint_fixture("wallclock_bad", baseline_path=baseline)
+    assert len(stats["stale_baseline"]) == 1
+    rc = cli.main(["--root", str(FIXTURES / "wallclock_bad"),
+                   "--baseline", str(baseline), "src"])
+    assert rc == 1                       # stale baseline fails CI
+
+
+# -------------------------------------------------------------- CLI surface
+
+def test_cli_exit_codes_and_rule_listing(capsys):
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ("RL101", "RL200", "RL300", "RL401", "RL501", "RL601"):
+        assert code in out
+
+    ok = cli.main(["--root", str(FIXTURES / "triad_ok"),
+                   "--no-baseline", "src", "tests"])
+    assert ok == 0
+    bad = cli.main(["--root", str(FIXTURES / "wallclock_bad"),
+                    "--no-baseline", "src"])
+    assert bad == 1
+    assert cli.main(["--root", str(FIXTURES), "no_such_dir"]) == 2
+
+
+# --------------------------------------------------------------- real tree
+
+def test_real_tree_is_clean_with_empty_baseline():
+    baseline = REPO_ROOT / "tools" / "reprolint" / "baseline.json"
+    assert json.loads(baseline.read_text()) == []   # stays empty
+    findings, stats = run_paths(["src", "tests", "tools"],
+                                root=REPO_ROOT, baseline_path=baseline)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert stats["stale_baseline"] == []
+    # fixtures are pruned from real runs, so their seeded violations
+    # never count against the tree
+    assert not any("reprolint_fixtures" in f.path
+                   for f in findings)
+
+
+def test_module_entrypoint_runs_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", "src", "tests", "tools"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout

@@ -1,0 +1,3 @@
+# Makes tools/ importable so `python -m tools.reprolint` works from the
+# repo root. The standalone scripts (check_winner_pins.py,
+# kill_resume_smoke.py) are still run directly and do not import this.

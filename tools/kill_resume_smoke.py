@@ -114,13 +114,13 @@ def _run_scenario(name: str) -> int:
             cwd=REPO, stdout=subprocess.DEVNULL,
             stderr=subprocess.STDOUT)
         path = checkpoint_path(ckpt_dir)
-        deadline = time.time() + 300
+        deadline = time.perf_counter() + 300
         while not os.path.exists(path):
             if child.poll() is not None:
                 print(f"FAIL[{name}]: child exited before writing a "
                       f"checkpoint (rc={child.returncode})")
                 return 1
-            if time.time() > deadline:
+            if time.perf_counter() > deadline:
                 child.kill()
                 print(f"FAIL[{name}]: no checkpoint after 300s")
                 return 1

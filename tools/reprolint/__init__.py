@@ -1,0 +1,35 @@
+"""reprolint — AST-level checker for this repo's reproducibility contracts.
+
+The repo's determinism guarantees (DESIGN.md §4, §11) are contracts
+*between* files: rng streams may only be constructed in ``core/rngs.py``,
+every Pallas kernel must ship with a jnp oracle and an interpret-parity
+test, every ``ExperimentSpec`` knob must be classified for the sweep
+path and reach the resume fingerprint, donated device buffers must not
+be touched after the call that consumed them.  CI's winner-pin guard
+catches breakage *after the fact* — when a pin has already moved.
+reprolint proves the contracts hold at lint time, over nothing but the
+stdlib ``ast`` module (no third-party deps, importable under the bare
+CI python).
+
+Usage (from the repo root)::
+
+    python -m tools.reprolint src tests tools
+    python -m tools.reprolint --list-rules
+
+Findings can be silenced two ways:
+
+* inline, for a single sanctioned exception::
+
+      t_epoch = time.time()  # reprolint: disable=RL601
+
+* via ``tools/reprolint/baseline.json`` for grandfathered findings.
+  The target baseline is EMPTY — fix what the linter finds; a baseline
+  entry needs a justifying comment in the PR that adds it.
+
+Rules live in ``tools/reprolint/rules/`` and self-register through
+``@register_rule`` (mirroring the engine's ``@register_strategy``
+registry).  See DESIGN.md §11 for the contract each code enforces and
+how to add a rule.
+"""
+from tools.reprolint.core import (Finding, RULES, register_rule,  # noqa: F401
+                                  run_paths)

@@ -1,0 +1,81 @@
+"""Command line front end: ``python -m tools.reprolint src tests tools``.
+
+Exit codes: 0 clean, 1 findings (or stale baseline entries), 2 bad
+invocation. CI treats anything non-zero as a contract break.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.reprolint.core import RULES, run_paths
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+
+def _list_rules() -> str:
+    from tools.reprolint import rules  # noqa: F401  (trigger registry)
+    width = max(len(c) for c in RULES)
+    lines = []
+    for code in sorted(RULES):
+        r = RULES[code]
+        first = r.doc.splitlines()[0] if r.doc else r.name
+        lines.append(f"{code:<{width}}  [{r.scope:7}] {r.name}: {first}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST-level checker for the repo's reproducibility "
+                    "contracts (DESIGN.md §11).")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to lint (default: src tests "
+                         "tools)")
+    ap.add_argument("--root", default=None,
+                    help="repo root the paths are relative to "
+                         "(default: cwd)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="baseline JSON of grandfathered findings "
+                         "(default: tools/reprolint/baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="findings only, no summary line")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    paths = args.paths or ["src", "tests", "tools"]
+    root = Path(args.root) if args.root else None
+    baseline = None if args.no_baseline else Path(args.baseline)
+    try:
+        findings, stats = run_paths(paths, root=root,
+                                    baseline_path=baseline)
+    except FileNotFoundError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+
+    for f in findings:
+        print(f.render())
+    stale = stats["stale_baseline"]
+    for e in stale:
+        print(f"{e.get('path')}: stale baseline entry for "
+              f"{e.get('code')} ({e.get('context', '')!r}) — the "
+              f"finding is gone, remove it from baseline.json")
+    if not args.quiet:
+        print(f"reprolint: {stats['files']} files, "
+              f"{len(findings)} finding(s), "
+              f"{stats['suppressed']} suppressed inline, "
+              f"{stats['baselined']} baselined, "
+              f"{len(stale)} stale baseline entr(y/ies)")
+    return 1 if findings or stale else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

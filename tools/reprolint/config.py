@@ -1,0 +1,57 @@
+"""Repo-specific knobs for the reprolint rules.
+
+Every whitelist here is part of the reproducibility contract: adding an
+entry is a design decision (say why in the PR), not a convenience.
+"""
+from __future__ import annotations
+
+#: Directory names pruned from file collection. ``reprolint_fixtures``
+#: holds the rule tests' deliberately-violating snippets.
+EXCLUDE_DIR_NAMES = frozenset({
+    "__pycache__", ".git", ".github", "reprolint_fixtures",
+})
+
+#: Modules allowed to CONSTRUCT ``np.random.default_rng`` /
+#: ``SeedSequence`` (RL101). Matched as posix path suffixes.
+#:
+#:   * ``core/rngs.py`` — the one sanctioned derivation point: every
+#:     engine-visible stream is a SeedSequence spawn child built here.
+#:   * ``core/csma.py`` — wraps a Generator around seed material the
+#:     strategy layer already derived via ``core.rngs.strategy_seed``
+#:     (it receives a SeedSequence, it does not invent one).
+#:   * ``data/synthetic.py`` / ``data/partition.py`` — the dataset
+#:     domain: keyed on the DATASET seed (shared across sweep cells),
+#:     deliberately outside the per-experiment spawn tree.  Arithmetic
+#:     seed derivation (RL102) is still flagged inside them.
+RNG_CONSTRUCTION_ALLOWED = (
+    "repro/core/rngs.py",
+    "repro/core/csma.py",
+    "repro/data/synthetic.py",
+    "repro/data/partition.py",
+)
+
+#: Modules that ARE the numpy bit-reproducible reference path (RL501):
+#: the winner sequences pinned by tools/check_winner_pins.py are
+#: derived through these, so they must stay importable — and
+#: bit-stable — without jax.  A module can also self-declare by
+#: putting the literal marker below in its module docstring.
+REFERENCE_MODULES = (
+    "repro/core/rngs.py",
+    "repro/core/csma.py",
+    "repro/core/counter.py",
+    "repro/data/synthetic.py",
+    "repro/data/partition.py",
+)
+
+#: Docstring marker equivalent to a REFERENCE_MODULES entry.
+REFERENCE_MARKER = "reprolint: reference-path"
+
+#: np.random module-level draws that touch numpy's GLOBAL legacy state
+#: (RL103). Generator-instance methods (``rng.choice``) are fine — the
+#: rule only matches calls on the ``numpy.random`` module itself.
+NUMPY_GLOBAL_DRAWS = frozenset({
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "ranf", "sample", "choice", "shuffle", "permutation", "uniform",
+    "normal", "standard_normal", "beta", "binomial", "exponential",
+    "gamma", "geometric", "poisson", "bytes", "get_state", "set_state",
+})

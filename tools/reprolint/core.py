@@ -1,0 +1,300 @@
+"""Rule registry, file model and runner for reprolint.
+
+Mirrors the engine's strategy registry: rules self-register with
+``@register_rule`` and declare their scope —
+
+* ``scope="file"``: called once per file with a ``FileContext``;
+* ``scope="project"``: called once with the whole ``Project`` (for
+  cross-file contracts like the kernel triad).
+
+Suppression layers, innermost first:
+
+1. ``# reprolint: disable=RL601`` (comma-separated codes, or ``all``)
+   on the finding's line;
+2. ``tools/reprolint/baseline.json`` — a list of
+   ``{"path", "code", "context"}`` entries where ``context`` is the
+   stripped source line.  Context-keyed (not line-keyed) so unrelated
+   edits don't invalidate the baseline; each entry absorbs at most one
+   finding and unused entries are reported (a stale baseline is itself
+   a finding — the tree got cleaner, shrink the file).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path, PurePosixPath
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+from tools.reprolint import config
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\s]+?)\s*(?:#|$)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str          # posix path relative to the lint root
+    line: int
+    col: int
+    code: str
+    message: str
+    fixit: str = ""
+
+    def render(self) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+        if self.fixit:
+            s += f"\n    fix: {self.fixit}"
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    scope: str                      # "file" | "project"
+    fn: Callable
+    doc: str
+
+
+#: code -> Rule; populated by the @register_rule decorators at import
+#: time (tools/reprolint/rules/__init__.py imports every rule module).
+RULES: Dict[str, Rule] = {}
+
+
+def register_rule(code: str, name: str, scope: str = "file"):
+    """Register ``fn`` as the checker behind ``code``.
+
+    ``fn`` receives a ``FileContext`` (scope="file") or a ``Project``
+    (scope="project") and yields ``Finding`` objects.
+    """
+    if scope not in ("file", "project"):
+        raise ValueError(f"bad rule scope {scope!r}")
+
+    def deco(fn):
+        if code in RULES:
+            raise ValueError(f"duplicate reprolint rule code {code}")
+        RULES[code] = Rule(code=code, name=name, scope=scope, fn=fn,
+                           doc=(fn.__doc__ or "").strip())
+        return fn
+    return deco
+
+
+class FileContext:
+    """One parsed source file plus its suppression map."""
+
+    def __init__(self, path: Path, rel: PurePosixPath, source: str):
+        self.path = path
+        self.rel = rel
+        self.rel_str = str(rel)
+        self.source = source
+        self.lines = source.splitlines()
+        try:
+            self.tree: Optional[ast.AST] = ast.parse(source,
+                                                     filename=str(path))
+        except SyntaxError as e:
+            self.tree = None
+            self.syntax_error = e
+        self.suppressed: Dict[int, set] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                codes = {c.strip() for c in m.group(1).split(",")
+                         if c.strip()}
+                self.suppressed[i] = codes
+
+    def under(self, part: str) -> bool:
+        """True when directory ``part`` appears on this file's relative
+        path (e.g. ``ctx.under("src")`` / ``ctx.under("tests")``)."""
+        return part in self.rel.parts[:-1]
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        codes = self.suppressed.get(finding.line)
+        return bool(codes) and (finding.code in codes or "all" in codes)
+
+    def finding(self, node, code: str, message: str,
+                fixit: str = "") -> Finding:
+        return Finding(path=self.rel_str,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       code=code, message=message, fixit=fixit)
+
+
+class Project:
+    """All collected files, for cross-file (scope="project") rules."""
+
+    def __init__(self, files: Sequence[FileContext], root: Path):
+        self.files = list(files)
+        self.root = root
+        self.by_rel = {f.rel_str: f for f in self.files}
+
+    def under(self, part: str) -> List[FileContext]:
+        return [f for f in self.files if f.under(part)]
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by several rule modules)
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """name -> fully dotted import target for every import in ``tree``.
+
+    ``import numpy as np``            -> {"np": "numpy"}
+    ``from numpy import random as r`` -> {"r": "numpy.random"}
+    ``from jax import jit``           -> {"jit": "jax.jit"}
+    Relative imports are skipped (they cannot shadow numpy/jax/time).
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted_name(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve ``np.random.default_rng`` -> "numpy.random.default_rng"
+    through the file's import aliases; None for non-name expressions."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    parts.reverse()
+    head = aliases.get(parts[0])
+    if head is not None:
+        parts[0:1] = head.split(".")
+    return ".".join(parts)
+
+
+def referenced_names(node: ast.AST) -> set:
+    """Every identifier a subtree mentions: Name ids, Attribute attrs,
+    and import alias leaves — the loose cross-reference currency of the
+    project rules."""
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            for a in n.names:
+                out.add(a.name.split(".")[-1])
+                if a.asname:
+                    out.add(a.asname)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collection + run
+
+def collect_files(paths: Sequence[str], root: Path) -> List[FileContext]:
+    seen = set()
+    out: List[FileContext] = []
+    for p in paths:
+        base = Path(p)
+        if not base.is_absolute():
+            base = root / base
+        if base.is_file():
+            candidates = [base]
+        elif base.is_dir():
+            candidates = sorted(base.rglob("*.py"))
+        else:
+            raise FileNotFoundError(f"reprolint: no such path: {p}")
+        for f in candidates:
+            if f.suffix != ".py" or f in seen:
+                continue
+            rel_parts = f.relative_to(root).parts if root in f.parents \
+                or f.parent == root else f.parts
+            if any(part in config.EXCLUDE_DIR_NAMES
+                   for part in rel_parts[:-1]):
+                continue
+            seen.add(f)
+            try:
+                rel = PurePosixPath(*f.relative_to(root).parts)
+            except ValueError:
+                rel = PurePosixPath(*f.parts[1:])
+            out.append(FileContext(f, rel, f.read_text()))
+    return out
+
+
+def load_baseline(path: Path) -> List[dict]:
+    if not path.exists():
+        return []
+    entries = json.loads(path.read_text())
+    if not isinstance(entries, list):
+        raise ValueError(f"{path}: baseline must be a JSON list")
+    return entries
+
+
+def run_paths(paths: Sequence[str], root: Optional[Path] = None,
+              baseline_path: Optional[Path] = None):
+    """Lint ``paths`` (files/dirs, relative to ``root``).
+
+    Returns ``(findings, stats)`` — findings that survived inline
+    suppression and the baseline, plus a dict with counters (files,
+    raw/suppressed/baselined finding counts, stale baseline entries).
+    Syntax errors surface as RL000 findings.
+    """
+    # rule modules self-register on first import
+    from tools.reprolint import rules  # noqa: F401
+
+    root = Path.cwd() if root is None else Path(root)
+    files = collect_files(paths, root)
+    project = Project(files, root)
+
+    raw: List[Finding] = []
+    for ctx in files:
+        if ctx.tree is None:
+            e = ctx.syntax_error
+            raw.append(Finding(ctx.rel_str, e.lineno or 1,
+                               (e.offset or 0) + 1, "RL000",
+                               f"syntax error: {e.msg}"))
+            continue
+        for rule in RULES.values():
+            if rule.scope == "file":
+                raw.extend(rule.fn(ctx))
+    for rule in RULES.values():
+        if rule.scope == "project":
+            raw.extend(rule.fn(project))
+
+    suppressed, kept = [], []
+    for f in raw:
+        ctx = project.by_rel.get(f.path)
+        if ctx is not None and ctx.is_suppressed(f):
+            suppressed.append(f)
+        else:
+            kept.append(f)
+
+    entries = load_baseline(baseline_path) if baseline_path else []
+    pool = list(entries)
+    baselined, final = [], []
+    for f in kept:
+        ctx = project.by_rel.get(f.path)
+        context = ctx.line_text(f.line) if ctx else ""
+        hit = next((e for e in pool
+                    if e.get("path") == f.path and e.get("code") == f.code
+                    and e.get("context") == context), None)
+        if hit is not None:
+            pool.remove(hit)
+            baselined.append(f)
+        else:
+            final.append(f)
+
+    final.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    stats = {"files": len(files), "raw": len(raw),
+             "suppressed": len(suppressed), "baselined": len(baselined),
+             "stale_baseline": pool}
+    return final, stats

@@ -1,0 +1,3 @@
+"""Rule modules — importing this package populates the registry."""
+from tools.reprolint.rules import (donation, kernels, purity, rng,  # noqa: F401
+                                   specs, wallclock)

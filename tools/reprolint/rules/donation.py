@@ -1,0 +1,276 @@
+"""Donation-safety rules (RL401/RL402).
+
+The fused round path lives on ``jax.jit(..., donate_argnums=...)``:
+the round-start stack buffer is donated into the call, so the XLA
+runtime reuses its memory for the output. Reading a donated buffer
+after the call returns garbage (or raises under some backends) — and
+the failure is silent on CPU, where donation is a no-op. Similarly, a
+``jax.jit`` constructed inside a loop body builds a fresh cache every
+iteration and retraces forever.
+
+RL401  a NAME passed at a donated position of a jitted callable is
+       read again later in the same function scope without being
+       rebound first.
+RL402  ``jax.jit(...)`` constructed lexically inside a for/while body
+       (retrace hazard — hoist it out, or cache it on self).
+
+Scope and precision: RL401 tracks plain names only (attribute chains
+alias too freely), follows donated callables bound either to a local
+name (``f = jax.jit(g, donate_argnums=0)``) or to ``self.<attr>``
+anywhere in the same class, processes branches with copied state
+(a read in the *other* arm of an ``if`` is not "after" the call), and
+ignores loop back-edges.  ``donate_argnums`` values that are not
+int/tuple literals are skipped — the rule never guesses.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.reprolint.core import (FileContext, dotted_name,
+                                  import_aliases, register_rule)
+
+
+def _is_jax_jit(call: ast.Call, aliases) -> bool:
+    return dotted_name(call.func, aliases) == "jax.jit"
+
+
+def _donated_positions(call: ast.Call) -> Optional[Set[int]]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = set()
+            for e in v.elts:
+                if not (isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)):
+                    return None
+                out.add(e.value)
+            return out
+        return None          # dynamic — cannot reason statically
+    return None
+
+
+def _class_attr_donors(cls: ast.ClassDef, aliases) -> Dict[str, Set[int]]:
+    """self.<attr> -> donated positions, for every ``self.x = jax.jit(
+    ..., donate_argnums=...)`` in the class body (builder methods)."""
+    donors: Dict[str, Set[int]] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Call) and \
+                _is_jax_jit(node.value, aliases):
+            pos = _donated_positions(node.value)
+            if pos is None:
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and \
+                        isinstance(tgt.value, ast.Name) and \
+                        tgt.value.id == "self":
+                    donors[tgt.attr] = donors.get(tgt.attr, set()) | pos
+    return donors
+
+
+class _ScopeSim:
+    """Straight-line simulation of one function body: poisons donated
+    names, flags later reads, unpoisons on rebind."""
+
+    def __init__(self, ctx: FileContext, aliases,
+                 attr_donors: Dict[str, Set[int]]):
+        self.ctx = ctx
+        self.aliases = aliases
+        self.attr_donors = attr_donors
+        self.local_donors: Dict[str, Set[int]] = {}
+        self.poisoned: Dict[str, str] = {}   # name -> donor description
+        self.findings: List = []
+
+    # -- expression pass ---------------------------------------------------
+
+    def _donor_positions(self, call: ast.Call) -> Optional[Set[int]]:
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in self.local_donors:
+            return self.local_donors[f.id]
+        if isinstance(f, ast.Attribute) and \
+                isinstance(f.value, ast.Name) and f.value.id == "self" \
+                and f.attr in self.attr_donors:
+            return self.attr_donors[f.attr]
+        return None
+
+    def _donor_label(self, call: ast.Call) -> str:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id
+        return f"self.{f.attr}"
+
+    def visit_expr(self, expr: Optional[ast.AST]):
+        """Flag reads of poisoned names, then apply this expression's
+        own donations (reads in the same statement are simultaneous
+        with the call, not 'after' it)."""
+        if expr is None:
+            return
+        new_poison: Dict[str, str] = {}
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    node.id in self.poisoned:
+                self.findings.append(self.ctx.finding(
+                    node, "RL401",
+                    f"'{node.id}' is read after being donated to "
+                    f"{self.poisoned[node.id]} — the buffer was "
+                    "handed to XLA and may already be overwritten "
+                    "(silent on CPU, garbage on accelerators)",
+                    "rebind the result (x = f(x)) or drop the donated "
+                    "reference before reuse"))
+            elif isinstance(node, ast.Call):
+                pos = self._donor_positions(node)
+                if pos:
+                    label = self._donor_label(node)
+                    for p in pos:
+                        if p < len(node.args) and \
+                                isinstance(node.args[p], ast.Name):
+                            new_poison[node.args[p].id] = \
+                                f"{label}(donate_argnums={sorted(pos)})"
+                # a fresh jax.jit bound inline — handled at Assign
+        self.poisoned.update(new_poison)
+
+    # -- statement pass ----------------------------------------------------
+
+    def _unbind(self, target: ast.AST):
+        for node in ast.walk(target):
+            if isinstance(node, ast.Name):
+                self.poisoned.pop(node.id, None)
+                self.local_donors.pop(node.id, None)
+
+    def exec_block(self, stmts: Iterable[ast.stmt]):
+        for stmt in stmts:
+            self.exec_stmt(stmt)
+
+    def _branch(self, blocks: List[List[ast.stmt]]):
+        """Run each block from a copy of the current state; merge by
+        union (any branch may have executed)."""
+        start_p = dict(self.poisoned)
+        start_d = dict(self.local_donors)
+        merged_p: Dict[str, str] = {}
+        merged_d: Dict[str, Set[int]] = {}
+        for block in blocks:
+            self.poisoned = dict(start_p)
+            self.local_donors = dict(start_d)
+            self.exec_block(block)
+            merged_p.update(self.poisoned)
+            merged_d.update(self.local_donors)
+        self.poisoned = merged_p
+        self.local_donors = merged_d
+
+    def exec_stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            self.visit_expr(stmt.value)
+            for tgt in stmt.targets:
+                # subscript/attribute WRITE targets still read their base
+                if isinstance(tgt, (ast.Subscript, ast.Attribute)):
+                    self.visit_expr(tgt)
+                else:
+                    self._unbind(tgt)
+            # binding a donor AFTER the unbind pass, so `f = jax.jit(
+            # ..., donate_argnums=...)` survives its own assignment
+            if isinstance(stmt.value, ast.Call) and \
+                    _is_jax_jit(stmt.value, self.aliases):
+                pos = _donated_positions(stmt.value)
+                if pos:
+                    for tgt in stmt.targets:
+                        if isinstance(tgt, ast.Name):
+                            self.local_donors[tgt.id] = pos
+        elif isinstance(stmt, ast.AugAssign):
+            self.visit_expr(stmt.value)
+            self.visit_expr(stmt.target)   # augmented target is a read
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            self.visit_expr(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self.visit_expr(stmt.test)
+            self._branch([stmt.body, stmt.orelse])
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.visit_expr(stmt.iter)
+            self._unbind(stmt.target)
+            self._branch([stmt.body + stmt.orelse, []])
+        elif isinstance(stmt, ast.While):
+            self.visit_expr(stmt.test)
+            self._branch([stmt.body + stmt.orelse, []])
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.visit_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._unbind(item.optional_vars)
+            self.exec_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._branch([stmt.body + stmt.orelse, []])
+            for h in stmt.handlers:
+                self._branch([h.body, []])
+            self.exec_block(stmt.finalbody)
+        elif isinstance(stmt, ast.Delete):
+            for tgt in stmt.targets:
+                self._unbind(tgt)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            self.poisoned.pop(stmt.name, None)   # rebinds the name
+        elif isinstance(stmt, (ast.Assert, ast.Raise)):
+            for child in ast.iter_child_nodes(stmt):
+                self.visit_expr(child)
+        # Pass/Break/Continue/Import/Global/Nonlocal: nothing to track
+
+
+def _function_defs(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+@register_rule("RL401", "donated-read-after-call", scope="file")
+def check_donation_reads(ctx: FileContext):
+    """name read after being passed at a donated position."""
+    if not ctx.under("src"):
+        return
+    aliases = import_aliases(ctx.tree)
+
+    # class-level donor attributes (builder methods jit once, round
+    # methods call per round)
+    attr_by_class: Dict[ast.ClassDef, Dict[str, Set[int]]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ClassDef):
+            attr_by_class[node] = _class_attr_donors(node, aliases)
+
+    def owner_class(fdef) -> Optional[ast.ClassDef]:
+        for cls, _ in attr_by_class.items():
+            if any(f is fdef for f in cls.body):
+                return cls
+        return None
+
+    for fdef in _function_defs(ctx.tree):
+        cls = owner_class(fdef)
+        donors = attr_by_class.get(cls, {}) if cls else {}
+        sim = _ScopeSim(ctx, aliases, donors)
+        sim.exec_block(fdef.body)
+        for f in sim.findings:
+            yield f
+
+
+@register_rule("RL402", "jit-in-loop", scope="file")
+def check_jit_in_loop(ctx: FileContext):
+    """jax.jit constructed inside a loop body (retrace hazard)."""
+    if not ctx.under("src"):
+        return
+    aliases = import_aliases(ctx.tree)
+    loops = [n for n in ast.walk(ctx.tree)
+             if isinstance(n, (ast.For, ast.While, ast.AsyncFor))]
+    for loop in loops:
+        for node in ast.walk(loop):
+            if node is loop:
+                continue
+            if isinstance(node, ast.Call) and _is_jax_jit(node, aliases):
+                yield ctx.finding(
+                    node, "RL402",
+                    "jax.jit constructed inside a loop body — a fresh "
+                    "compilation cache every iteration (retrace "
+                    "hazard)",
+                    "hoist the jit out of the loop (module level, a "
+                    "builder method, or functools.cache)")

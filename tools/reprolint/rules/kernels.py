@@ -1,0 +1,147 @@
+"""Kernel-triad completeness (RL201/RL202/RL203).
+
+Every Pallas kernel in this repo ships as a triad (DESIGN.md §3, §11):
+
+* ``kernels/<mod>.py`` — the kernel body with a public ``*_pallas``
+  entry point;
+* a ``kernels/ops.py`` dispatch wrapper choosing kernel vs oracle
+  through ``_mode()`` (the jit-friendly public surface);
+* a pure-jnp oracle ``kernels/ref.py::*_ref`` — the semantics the
+  kernel is tested against;
+* at least one interpret-parity test under ``tests/`` exercising the
+  kernel body.
+
+A kernel whose oracle or parity test is deleted keeps passing unit
+tests on CPU (the oracle path IS the CPU path), so the gap only
+surfaces on real accelerators — this rule makes it a lint failure
+instead.
+
+RL201  public ``*_pallas`` entry with no ops.py dispatch wrapper.
+RL202  wrapper never falls back to a ``ref.*_ref`` oracle, or the
+       oracle it names is missing from ref.py.
+RL203  no test file under ``tests/`` both references the kernel (entry
+       or wrapper name) and runs interpret mode.
+
+The rule keys on directory shape, not hard-coded paths: any linted
+directory named ``kernels`` containing an ``ops.py`` is checked, so
+the fixture trees under ``tests/reprolint_fixtures/`` exercise it the
+same way the real ``src/repro/kernels/`` does.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from tools.reprolint.core import (FileContext, Project,
+                                  referenced_names, register_rule)
+
+_NON_KERNEL = ("ops.py", "ref.py", "__init__.py")
+
+
+def _public_pallas_defs(ctx: FileContext) -> List[ast.FunctionDef]:
+    return [n for n in ctx.tree.body
+            if isinstance(n, ast.FunctionDef)
+            and n.name.endswith("_pallas")
+            and not n.name.startswith("_")]
+
+
+def _wrapper_for(ops_ctx: FileContext, entry: str) \
+        -> Optional[ast.FunctionDef]:
+    for n in ops_ctx.tree.body:
+        if isinstance(n, ast.FunctionDef) and entry in referenced_names(n):
+            return n
+    return None
+
+
+def _oracle_calls(wrapper: ast.FunctionDef) -> List[str]:
+    out = []
+    for n in ast.walk(wrapper):
+        if isinstance(n, ast.Call):
+            f = n.func
+            name = None
+            if isinstance(f, ast.Attribute) and f.attr.endswith("_ref"):
+                name = f.attr
+            elif isinstance(f, ast.Name) and f.id.endswith("_ref"):
+                name = f.id
+            if name:
+                out.append(name)
+    return out
+
+
+@register_rule("RL200", "kernel-triad", scope="project")
+def check_kernel_triads(project: Project):
+    """Pallas kernel / ref oracle / ops wrapper / parity-test triad
+    completeness (reported as RL201/RL202/RL203)."""
+    groups: Dict[str, List[FileContext]] = defaultdict(list)
+    for ctx in project.files:
+        if ctx.tree is None:
+            continue
+        parts = ctx.rel.parts
+        if len(parts) >= 2 and parts[-2] == "kernels":
+            groups[str(ctx.rel.parent)].append(ctx)
+
+    test_files = [f for f in project.files if f.under("tests")]
+
+    for dirname, members in groups.items():
+        by_name = {ctx.rel.name: ctx for ctx in members}
+        ops_ctx = by_name.get("ops.py")
+        if ops_ctx is None:
+            continue            # not a kernel triad package
+        ref_ctx = by_name.get("ref.py")
+        ref_defs = set()
+        if ref_ctx is not None:
+            ref_defs = {n.name for n in ref_ctx.tree.body
+                        if isinstance(n, ast.FunctionDef)}
+
+        for ctx in members:
+            if ctx.rel.name in _NON_KERNEL:
+                continue
+            for fdef in _public_pallas_defs(ctx):
+                entry = fdef.name
+                wrapper = _wrapper_for(ops_ctx, entry)
+                if wrapper is None:
+                    yield ctx.finding(
+                        fdef, "RL201",
+                        f"kernel entry '{entry}' has no dispatch "
+                        f"wrapper in {dirname}/ops.py",
+                        "add an ops.py wrapper that resolves "
+                        "kernel-vs-oracle via _mode() and calls "
+                        f"{entry} on the kernel branch")
+                    continue
+                oracles = _oracle_calls(wrapper)
+                if not oracles:
+                    yield ops_ctx.finding(
+                        wrapper, "RL202",
+                        f"wrapper '{wrapper.name}' dispatches "
+                        f"'{entry}' but never falls back to a "
+                        "ref.*_ref oracle",
+                        "return ref.<name>_ref(...) on the "
+                        "non-kernel branch — the oracle IS the "
+                        "reference semantics")
+                else:
+                    missing = [o for o in oracles if o not in ref_defs]
+                    if missing:
+                        yield ops_ctx.finding(
+                            wrapper, "RL202",
+                            f"oracle(s) {missing} named by wrapper "
+                            f"'{wrapper.name}' are not defined in "
+                            f"{dirname}/ref.py",
+                            "define the pure-jnp oracle in ref.py "
+                            "(it is the contract the kernel is "
+                            "parity-tested against)")
+                needles = (entry, wrapper.name)
+                has_parity = any(
+                    re.search(r"\binterpret\b", tf.source)
+                    and any(re.search(rf"\b{re.escape(n)}\b", tf.source)
+                            for n in needles)
+                    for tf in test_files)
+                if test_files and not has_parity:
+                    yield ctx.finding(
+                        fdef, "RL203",
+                        f"no interpret-parity test under tests/ "
+                        f"references '{entry}' or '{wrapper.name}'",
+                        "add a test driving the wrapper with "
+                        "interpret=True and comparing bit-for-bit "
+                        "against the ref oracle")

@@ -1,0 +1,56 @@
+"""Reference-path purity (RL501).
+
+numpy is the bit-reproducible reference everywhere (ROADMAP "net
+state"): the winner sequences guarded by tools/check_winner_pins.py
+are derived through a handful of modules that must produce identical
+bits on any machine, with or without an accelerator. A jax import in
+one of those modules either drags device-dependent numerics into the
+reference path or — at minimum — makes the reference unimportable
+where jax is absent.
+
+A module is declared reference-path either by listing in
+``config.REFERENCE_MODULES`` or by carrying the literal marker
+``reprolint: reference-path`` in its module docstring (the
+declare-in-source form the fixtures use).
+
+RL501  a declared reference module imports jax (any form, any depth —
+       function-local imports count; lazy does not mean pure).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint import config
+from tools.reprolint.core import FileContext, register_rule
+
+
+def _is_reference_module(ctx: FileContext) -> bool:
+    if any(ctx.rel_str.endswith(suffix)
+           for suffix in config.REFERENCE_MODULES):
+        return True
+    doc = ast.get_docstring(ctx.tree) or ""
+    return config.REFERENCE_MARKER in doc
+
+
+@register_rule("RL501", "reference-path-purity", scope="file")
+def check_reference_purity(ctx: FileContext):
+    """declared numpy-reference module imports jax."""
+    if not _is_reference_module(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        mods = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            mods = [node.module]
+        for m in mods:
+            if m == "jax" or m.startswith("jax."):
+                yield ctx.finding(
+                    node, "RL501",
+                    f"reference-path module imports {m} — the numpy "
+                    "bit-reproducible path must not depend on jax "
+                    "(winner pins are derived through it)",
+                    "move the jax-consuming code out of the reference "
+                    "module, or undeclare the module (and say why in "
+                    "the PR)")

@@ -1,0 +1,140 @@
+"""RNG-discipline rules (RL101/RL102/RL103).
+
+The selection mechanism is reproducible randomness: Eq. 3 backoff draws
+and Eq. 2 priorities decide every winner, and the PR-4 bug class — two
+consumers seeded from correlated material (``default_rng(spec.seed)``
+twice; ``seed + 1000 * uid``) — silently changes every winner sequence.
+``core/rngs.py`` is the one sanctioned derivation point (SeedSequence
+spawn tree); these rules keep it that way:
+
+RL101  ``np.random.default_rng`` / ``SeedSequence`` constructed in a
+       ``src/`` module outside ``config.RNG_CONSTRUCTION_ALLOWED``.
+RL102  an arithmetic-derived seed (``seed + 1``, ``1000 * uid``) feeds
+       an rng constructor — the correlated-stream bug class itself;
+       flagged even inside whitelisted modules.
+RL103  a draw from numpy's GLOBAL legacy state (``np.random.rand`` …)
+       or stdlib ``random`` in ``src/`` — an untracked stream no spawn
+       path owns.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint import config
+from tools.reprolint.core import (dotted_name, import_aliases,
+                                  register_rule)
+
+_CONSTRUCTORS = ("numpy.random.default_rng", "numpy.random.SeedSequence")
+_ARITH = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv, ast.Mod,
+          ast.Pow, ast.LShift, ast.RShift, ast.BitXor, ast.BitOr,
+          ast.BitAnd)
+
+
+def _is_arithmetic_seed(expr: ast.AST) -> bool:
+    """True for seed expressions derived by arithmetic on names or
+    literals (``seed + 1``, ``1000 * uid + seed``). Structural
+    composition through calls (``tuple(a) + tuple(b)``) is not the
+    hazard and stays allowed."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, _ARITH):
+            operands = (node.left, node.right)
+            if any(isinstance(o, (ast.Name, ast.Constant))
+                   for o in operands):
+                return True
+    return False
+
+
+def _seed_args(call: ast.Call):
+    if call.args:
+        yield call.args[0]
+    for kw in call.keywords:
+        if kw.arg in ("seed", "entropy"):
+            yield kw.value
+
+
+def _allowed_constructor_site(ctx) -> bool:
+    return any(ctx.rel_str.endswith(suffix)
+               for suffix in config.RNG_CONSTRUCTION_ALLOWED)
+
+
+@register_rule("RL101", "rng-construction", scope="file")
+def check_rng_construction(ctx):
+    """rng stream constructed outside the sanctioned modules."""
+    if not ctx.under("src"):
+        return
+    allowed = _allowed_constructor_site(ctx)
+    aliases = import_aliases(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func, aliases)
+        if name in _CONSTRUCTORS and not allowed:
+            yield ctx.finding(
+                node, "RL101",
+                f"{name.split('.')[-1]} constructed outside "
+                "core/rngs.py (spawn-tree discipline, DESIGN.md §11)",
+                "derive the stream through a repro.core.rngs helper "
+                "(child_seq spawn path), or whitelist the module in "
+                "tools/reprolint/config.py with a rationale")
+
+
+@register_rule("RL102", "arithmetic-seed", scope="file")
+def check_arithmetic_seed(ctx):
+    """arithmetic-derived seed feeds an rng constructor (the PR-4
+    correlated-stream bug class)."""
+    if not ctx.under("src"):
+        return
+    aliases = import_aliases(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func, aliases)
+        if name in _CONSTRUCTORS or (name or "").endswith(
+                "rngs.child_seq") or (
+                isinstance(node.func, ast.Name)
+                and node.func.id == "child_seq"):
+            for arg in _seed_args(node):
+                if _is_arithmetic_seed(arg):
+                    yield ctx.finding(
+                        node, "RL102",
+                        "arithmetic-derived seed feeds an rng "
+                        "constructor — correlated-stream hazard "
+                        "(nearby seeds collide across consumers)",
+                        "spawn an independent child stream: "
+                        "core/rngs.child_seq(seed, STREAM_*, index)")
+
+
+@register_rule("RL103", "global-rng-draw", scope="file")
+def check_global_rng(ctx):
+    """draw from numpy's global legacy state or stdlib random."""
+    if not ctx.under("src"):
+        return
+    aliases = import_aliases(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func, aliases)
+        if not name:
+            continue
+        if name.startswith("numpy.random.") and \
+                name.rsplit(".", 1)[-1] in config.NUMPY_GLOBAL_DRAWS:
+            yield ctx.finding(
+                node, "RL103",
+                f"{name} draws from numpy's GLOBAL rng state — an "
+                "untracked stream outside the SeedSequence spawn tree",
+                "thread an explicit np.random.Generator derived in "
+                "core/rngs.py")
+        elif name.split(".")[0] == "random" and name.count(".") == 1:
+            # genuine stdlib random only: either `import random` is in
+            # scope, or the call resolved through `from random import
+            # x` — a Generator VARIABLE named random has neither
+            root_import = aliases.get("random") == "random"
+            via_alias = (isinstance(node.func, ast.Name)
+                         and aliases.get(node.func.id, "")
+                         .startswith("random."))
+            if root_import or via_alias:
+                yield ctx.finding(
+                    node, "RL103",
+                    f"stdlib {name}() draws from process-global state "
+                    "— invisible to the reproducibility contract",
+                    "use a np.random.Generator derived in core/rngs.py")

@@ -1,0 +1,196 @@
+"""Spec-discipline rules (RL301/RL302/RL303/RL304).
+
+Specs are the reproducibility contract's nouns: a run is identified by
+``checkpoint/fl_state.run_fingerprint`` (the dataclass reprs of its
+cells), sweeps validate ``SWEEP_SHARED_FIELDS`` agreement, and the
+winner-pin guard assumes a spec can never drift after construction.
+Three ways a new knob can silently escape all of that:
+
+RL301  a ``*Spec`` dataclass that is not ``frozen=True`` — a mutated
+       spec invalidates the fingerprint taken at run start.
+RL302  an ``ExperimentSpec`` field classified neither sweep-shared
+       (``SWEEP_SHARED_FIELDS``) nor explicitly per-lane
+       (``PER_LANE_FIELDS``) — nobody decided how the sweep path
+       treats it; also flags stale/overlapping tuple entries.
+RL303  a ``*Spec`` field with ``repr=False`` — invisible to the
+       repr-based ``run_fingerprint``, so changing it would not block
+       a cross-spec resume.
+RL304  an ``ExperimentSpec`` exists but no linted
+       ``checkpoint/fl_state.py`` defines a repr-based
+       ``run_fingerprint`` — the reachability half of the contract.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.reprolint.core import FileContext, Project, register_rule
+
+
+def _dataclass_decorator(cls: ast.ClassDef) -> Optional[ast.AST]:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = target.attr if isinstance(target, ast.Attribute) else \
+            target.id if isinstance(target, ast.Name) else None
+        if name == "dataclass":
+            return dec
+    return None
+
+
+def _is_frozen(dec: ast.AST) -> bool:
+    if not isinstance(dec, ast.Call):
+        return False
+    for kw in dec.keywords:
+        if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return False
+
+
+def _field_names(cls: ast.ClassDef) -> List[Tuple[str, ast.AnnAssign]]:
+    out = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and \
+                isinstance(stmt.target, ast.Name):
+            ann = ast.dump(stmt.annotation)
+            if "ClassVar" in ann:
+                continue
+            out.append((stmt.target.id, stmt))
+    return out
+
+
+def _string_tuple(module: ast.Module, name: str) -> Optional[set]:
+    for stmt in module.body:
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name and \
+                        isinstance(stmt.value, (ast.Tuple, ast.List)):
+                    vals = set()
+                    for e in stmt.value.elts:
+                        if isinstance(e, ast.Constant) and \
+                                isinstance(e.value, str):
+                            vals.add(e.value)
+                    return vals
+    return None
+
+
+def _repr_false_fields(cls: ast.ClassDef):
+    for name, stmt in _field_names(cls):
+        v = stmt.value
+        if isinstance(v, ast.Call):
+            target = v.func
+            fname = target.attr if isinstance(target, ast.Attribute) \
+                else target.id if isinstance(target, ast.Name) else None
+            if fname == "field":
+                for kw in v.keywords:
+                    if kw.arg == "repr" and \
+                            isinstance(kw.value, ast.Constant) and \
+                            kw.value.value is False:
+                        yield name, stmt
+
+
+@register_rule("RL300", "spec-discipline", scope="project")
+def check_spec_discipline(project: Project):
+    """Frozen *Spec dataclasses, ExperimentSpec field classification,
+    and run_fingerprint reachability (RL301/RL302/RL303/RL304)."""
+    experiment_spec: Optional[Tuple[FileContext, ast.ClassDef]] = None
+
+    for ctx in project.under("src"):
+        if ctx.tree is None:
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef) or \
+                    not node.name.endswith("Spec"):
+                continue
+            dec = _dataclass_decorator(node)
+            if dec is None:
+                continue
+            if not _is_frozen(dec):
+                yield ctx.finding(
+                    node, "RL301",
+                    f"dataclass '{node.name}' is not frozen=True — a "
+                    "post-construction mutation invalidates the "
+                    "run fingerprint and the sweep-shared validation",
+                    "declare @dataclass(frozen=True); initialize "
+                    "derived attributes via object.__setattr__ in "
+                    "__post_init__")
+            for fname, stmt in _repr_false_fields(node):
+                yield ctx.finding(
+                    stmt, "RL303",
+                    f"{node.name}.{fname} sets repr=False — the field "
+                    "escapes the repr-based run_fingerprint, so a "
+                    "resume under a different value would not be "
+                    "rejected",
+                    "keep repr=True (every spec field must reach "
+                    "checkpoint/fl_state.run_fingerprint)")
+            if node.name == "ExperimentSpec":
+                experiment_spec = (ctx, node)
+
+    if experiment_spec is None:
+        return
+    ctx, cls = experiment_spec
+    shared = _string_tuple(ctx.tree, "SWEEP_SHARED_FIELDS")
+    per_lane = _string_tuple(ctx.tree, "PER_LANE_FIELDS")
+    if shared is None or per_lane is None:
+        missing = [n for n, v in (("SWEEP_SHARED_FIELDS", shared),
+                                  ("PER_LANE_FIELDS", per_lane))
+                   if v is None]
+        yield ctx.finding(
+            cls, "RL302",
+            f"ExperimentSpec's module defines no {'/'.join(missing)} "
+            "classification tuple(s)",
+            "declare both tuples next to the spec; every field must "
+            "appear in exactly one")
+    else:
+        fields = [n for n, _ in _field_names(cls)]
+        for fname, stmt in _field_names(cls):
+            if fname not in shared and fname not in per_lane:
+                yield ctx.finding(
+                    stmt, "RL302",
+                    f"ExperimentSpec.{fname} is classified neither "
+                    "sweep-shared (SWEEP_SHARED_FIELDS) nor per-lane "
+                    "(PER_LANE_FIELDS) — the sweep path has no "
+                    "decision for it",
+                    "add the field to exactly one of the two tuples "
+                    "(sweep-shared = configures the ONE program all "
+                    "lanes share)")
+        for tup_name, tup in (("SWEEP_SHARED_FIELDS", shared),
+                              ("PER_LANE_FIELDS", per_lane)):
+            for stale in sorted(tup - set(fields)):
+                yield ctx.finding(
+                    cls, "RL302",
+                    f"{tup_name} names '{stale}', which is not an "
+                    "ExperimentSpec field (stale classification)",
+                    "remove the stale entry")
+        for both in sorted(shared & per_lane):
+            yield ctx.finding(
+                cls, "RL302",
+                f"'{both}' appears in BOTH SWEEP_SHARED_FIELDS and "
+                "PER_LANE_FIELDS",
+                "classify each field exactly once")
+
+    # RL304: the fingerprint the classification feeds must exist and
+    # stay repr-based (repr covers every field recursively).
+    fp_ok = False
+    for other in project.files:
+        if other.tree is None or \
+                not other.rel_str.endswith("checkpoint/fl_state.py"):
+            continue
+        for node in ast.walk(other.tree):
+            if isinstance(node, ast.FunctionDef) and \
+                    node.name == "run_fingerprint":
+                calls_repr = any(
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Name)
+                    and n.func.id == "repr"
+                    for n in ast.walk(node))
+                if calls_repr:
+                    fp_ok = True
+    if not fp_ok:
+        yield ctx.finding(
+            cls, "RL304",
+            "ExperimentSpec exists but no linted checkpoint/"
+            "fl_state.py defines a repr-based run_fingerprint — spec "
+            "fields are no longer provably reachable by resume "
+            "validation",
+            "keep run_fingerprint building its identity from the "
+            "cells' dataclass reprs")

@@ -1,0 +1,93 @@
+"""Wall-clock hygiene (RL601).
+
+``time.time()`` follows the system clock — NTP slews, DST jumps and
+manual adjustments move it mid-run, so a duration computed from two
+``time.time()`` readings can be negative or wildly wrong. Every
+duration in this repo (round wall_s, bench timings, kill/resume
+deadlines) must come from the monotonic ``time.perf_counter()``.
+
+RL601  a ``time.time()`` reading used in arithmetic or a comparison —
+       directly (``time.time() - t0``) or through a name it was
+       assigned to (``t0 = time.time(); ...; dt = now - t0``).
+       Standalone readings (timestamps for logs/filenames) stay
+       allowed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Set
+
+from tools.reprolint.core import (FileContext, dotted_name,
+                                  import_aliases, register_rule)
+
+
+def _is_time_time(node: ast.AST, aliases) -> bool:
+    return isinstance(node, ast.Call) and \
+        dotted_name(node.func, aliases) == "time.time"
+
+
+def _scopes(tree: ast.AST):
+    """Module plus every function, each owning only its direct body
+    (nested functions analyze separately)."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            yield node
+
+
+def _walk_scope(scope: ast.AST):
+    """ast.walk, but do not descend into nested function scopes."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+@register_rule("RL601", "wallclock-duration", scope="file")
+def check_wallclock(ctx: FileContext):
+    """time.time() used in duration arithmetic — not monotonic."""
+    aliases = import_aliases(ctx.tree)
+    fixit = ("use time.perf_counter() — monotonic, made for "
+             "durations; keep time.time() only for calendar "
+             "timestamps")
+    for scope in _scopes(ctx.tree):
+        assigned: Dict[str, ast.AST] = {}
+        for node in _walk_scope(scope):
+            if isinstance(node, ast.Assign) and \
+                    _is_time_time(node.value, aliases):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        assigned[tgt.id] = node
+        if not assigned and "time" not in ctx.source:
+            continue
+        flagged: Set[int] = set()
+        for node in _walk_scope(scope):
+            operands = []
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, (ast.Add, ast.Sub)):
+                operands = [node.left, node.right]
+            elif isinstance(node, ast.Compare):
+                operands = [node.left] + list(node.comparators)
+            for op in operands:
+                if _is_time_time(op, aliases):
+                    if op.lineno not in flagged:
+                        flagged.add(op.lineno)
+                        yield ctx.finding(
+                            op, "RL601",
+                            "time.time() used in duration arithmetic "
+                            "— the system clock is not monotonic",
+                            fixit)
+                elif isinstance(op, ast.Name) and op.id in assigned:
+                    src = assigned[op.id]
+                    if src.lineno not in flagged:
+                        flagged.add(src.lineno)
+                        yield ctx.finding(
+                            src, "RL601",
+                            f"'{op.id}' holds a time.time() reading "
+                            "later used in arithmetic/comparison — "
+                            "durations need a monotonic clock",
+                            fixit)
